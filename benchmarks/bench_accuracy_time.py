@@ -1,0 +1,70 @@
+"""Paper Tab. 1 + Fig. 8: accuracy vs training time across FL paradigms on
+the three simulated tasks (IR / HAR / sound), with the paper's device mix
+(20% D1, 20% D2, 20% D3, 40% D5). Reports mean accuracy, accuracy at the
+slowest/fastest device class, time-to-target, and duration."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import per_class_accuracy, save_result, table
+from repro.fl.experiment import run_experiment
+
+STRATEGIES = ["fedavg", "oort", "fedasyn", "fedsea", "clusterfl", "echopfl", "standalone"]
+TASKS = ["image_recognition", "har", "sound_detection"]
+SPEED_ORDER = ["D5", "D1", "D2", "D3", "D4"]  # slowest -> fastest
+
+
+def run(quick: bool = False) -> dict:
+    tasks = TASKS[:1] if quick else TASKS
+    seeds = [0] if quick else [0, 1]
+    num_clients = 12 if quick else 20
+    max_time = 1800 if quick else 3600
+
+    rows = []
+    for task in tasks:
+        for strat_name in STRATEGIES:
+            accs, slowest, fastest, t2t, dur = [], [], [], [], []
+            for seed in seeds:
+                _, _, strat, report = run_experiment(
+                    task, strat_name, num_clients=num_clients,
+                    max_time=max_time, rounds=40, seed=seed,
+                )
+                accs.append(report.final_acc)
+                pc = per_class_accuracy(report)
+                present = [c for c in SPEED_ORDER if c in pc]
+                slowest.append(pc[present[0]])
+                fastest.append(pc[present[-1]])
+                t2t.append(report.time_to_target)
+                dur.append(report.duration)
+            rows.append({
+                "task": task,
+                "strategy": strat_name,
+                "acc": float(np.mean(accs)),
+                "acc_slowest": float(np.mean(slowest)),
+                "acc_fastest": float(np.mean(fastest)),
+                "t2t_min": None if any(t is None for t in t2t) else float(np.mean(t2t)) / 60,
+                "dur_min": float(np.mean(dur)) / 60,
+            })
+    print(table(rows, ["task", "strategy", "acc", "acc_slowest", "acc_fastest", "t2t_min", "dur_min"],
+                "Tab.1 / Fig.8 — accuracy vs training time"))
+
+    # paper-claim checks (soft, reported not asserted)
+    claims = {}
+    for task in tasks:
+        r = {row["strategy"]: row for row in rows if row["task"] == task}
+        claims[task] = {
+            "pfl_acc_gain_over_fedavg": r["echopfl"]["acc"] - r["fedavg"]["acc"],
+            "echopfl_vs_clusterfl_acc": r["echopfl"]["acc"] - r["clusterfl"]["acc"],
+            "echopfl_t2t_vs_clusterfl": (
+                None if r["echopfl"]["t2t_min"] is None or r["clusterfl"]["t2t_min"] is None
+                else 1 - r["echopfl"]["t2t_min"] / r["clusterfl"]["t2t_min"]
+            ),
+            "slow_device_gain_over_fedasyn": r["echopfl"]["acc_slowest"] - r["fedasyn"]["acc_slowest"],
+        }
+    out = {"rows": rows, "claims": claims}
+    save_result("accuracy_time", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

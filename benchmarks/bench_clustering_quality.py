@@ -1,0 +1,54 @@
+"""Paper Fig. 11 + Fig. 12: EchoPFL's asynchronous dynamic clustering against
+ClusterFL's synchronous full-information clustering at 120 clients, and
+robustness of the result to the initial cluster count C."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import assignment_of, cluster_cosine, save_result, table
+from repro.fl.experiment import run_experiment
+
+
+def run(quick: bool = False) -> dict:
+    n = 40 if quick else 120
+    max_time = 1800 if quick else 3600
+
+    _, clients_cf, cf, _ = run_experiment(
+        "image_recognition", "clusterfl", num_clients=n, max_time=max_time, seed=0
+    )
+    ids = sorted(c.client_id for c in clients_cf)
+    latent = {c.client_id: c.data.latent_cluster for c in clients_cf}
+    cf_assign = assignment_of(cf)
+
+    rows = []
+    for c_init in ([2] if quick else [2, 3, 4, 6]):
+        _, clients, ep, report = run_experiment(
+            "image_recognition", "echopfl", num_clients=n, max_time=max_time,
+            seed=0, num_clusters=c_init,
+        )
+        ep_assign = assignment_of(ep)
+        rows.append({
+            "init_C": c_init,
+            "cos_vs_clusterfl": cluster_cosine(ep_assign, cf_assign, ids),
+            "cos_vs_latent": cluster_cosine(ep_assign, latent, ids),
+            "final_clusters": len(set(ep_assign.values())),
+            "acc": report.final_acc,
+            "t2t_min": None if report.time_to_target is None else report.time_to_target / 60,
+        })
+    rows.append({
+        "init_C": "clusterfl(oracle)",
+        "cos_vs_clusterfl": 1.0,
+        "cos_vs_latent": cluster_cosine(cf_assign, latent, ids),
+        "final_clusters": len(set(cf_assign.values())),
+        "acc": None, "t2t_min": None,
+    })
+    print(table(rows, ["init_C", "cos_vs_clusterfl", "cos_vs_latent",
+                       "final_clusters", "acc", "t2t_min"],
+                f"Fig.11/12 — clustering quality ({n} clients; paper: cos up to 0.99)"))
+    out = {"rows": rows, "num_clients": n}
+    save_result("clustering_quality", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

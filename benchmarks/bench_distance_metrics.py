@@ -1,0 +1,69 @@
+"""Paper Tab. 5: parameter-level L1 vs feature-level KL divergence for the
+real-time (per-arrival) clustering step. L1 compares flat parameter vectors;
+KL requires a forward pass over a reference batch per (client, cluster) pair
+— orders of magnitude slower on the per-upload critical path, which is why
+EchoPFL uses L1 for incremental assignment and reserves distribution-level
+signals for the periodic refinement."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result, table
+from repro.configs.paper_tasks import PAPER_TASKS
+from repro.kernels import ops as K
+from repro.models import mlp
+
+
+def run(quick: bool = False) -> dict:
+    cfg = PAPER_TASKS["image_recognition"]
+    key = jax.random.PRNGKey(0)
+    params_client = mlp.init_mlp(cfg, key)
+    centers = [mlp.init_mlp(cfg, jax.random.PRNGKey(i + 1)) for i in range(4)]
+    from repro.common.pytrees import tree_flat_vector
+
+    u = tree_flat_vector(params_client)
+    cmat = jnp.stack([tree_flat_vector(c) for c in centers])
+    x_ref = jax.random.normal(jax.random.PRNGKey(9), (256, cfg.input_dim))
+
+    # warm up jits
+    K.l1_distance(u, cmat).block_until_ready()
+    soft_c = mlp.predict_distributions(params_client, x_ref, cfg.num_classes)[1]
+
+    reps = 20 if quick else 100
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        K.l1_distance(u, cmat).block_until_ready()
+    l1_s = (time.perf_counter() - t0) / reps
+
+    def kl_assign():
+        p = mlp.predict_distributions(params_client, x_ref, cfg.num_classes)[1]
+        outs = []
+        for c in centers:  # one inference per candidate cluster
+            q = mlp.predict_distributions(c, x_ref, cfg.num_classes)[1]
+            outs.append(jnp.sum(p * (jnp.log(p + 1e-9) - jnp.log(q + 1e-9))))
+        return jnp.stack(outs).block_until_ready()
+
+    kl_assign()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        kl_assign()
+    kl_s = (time.perf_counter() - t0) / reps
+
+    rows = [
+        {"metric": "L1 (parameter, incremental)", "per_assignment_s": l1_s},
+        {"metric": "KL (feature, per-arrival)", "per_assignment_s": kl_s},
+        {"metric": "ratio", "per_assignment_s": kl_s / l1_s},
+    ]
+    print(table(rows, ["metric", "per_assignment_s"],
+                "Tab.5 — distance-metric cost on the per-upload path"))
+    out = {"l1_s": l1_s, "kl_s": kl_s, "ratio": kl_s / l1_s}
+    save_result("distance_metrics", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Paper Fig. 16: robustness to the merge-trigger hyperparameter hm (the
+maximum cluster count is hm x C)."""
+from __future__ import annotations
+
+from benchmarks.common import save_result, table
+from repro.fl.experiment import run_experiment
+
+
+def run(quick: bool = False) -> dict:
+    max_time = 1500 if quick else 3600
+    hms = [1.0, 2.0] if quick else [1.0, 1.5, 2.0, 3.0, 4.0]
+    rows = []
+    for hm in hms:
+        _, _, strat, report = run_experiment(
+            "image_recognition", "echopfl", num_clients=12 if quick else 20,
+            max_time=max_time, seed=0, hm=hm,
+        )
+        st = strat.stats()
+        rows.append({
+            "hm": hm,
+            "acc": report.final_acc,
+            "t2t_min": None if report.time_to_target is None else report.time_to_target / 60,
+            "final_clusters": st["clusters"],
+            "merges": st["merges"],
+        })
+    print(table(rows, ["hm", "acc", "t2t_min", "final_clusters", "merges"],
+                "Fig.16 — hm sensitivity (paper: robust, default hm=2)"))
+    accs = [r["acc"] for r in rows]
+    out = {"rows": rows, "acc_spread": max(accs) - min(accs)}
+    save_result("hm_sensitivity", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,82 @@
+"""Roofline table (deliverable g): per (arch x shape x mesh) the three terms
+  compute_s    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+  memory_s     = HLO_bytes / (chips x 819 GB/s HBM)
+  collective_s = collective_bytes / (chips x 50 GB/s ICI)
+read from the dry-run artifacts in experiments/dryrun/, plus the dominant
+bottleneck and MODEL_FLOPS/HLO_FLOPs usefulness ratio.
+
+Run ``python -m repro.launch.dryrun --all`` first (or let run.py do a quick
+subset)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import save_result, table
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+OPT_DIR = os.environ.get("REPRO_DRYRUN_OPT_DIR", "experiments/dryrun_opt")
+
+
+def load_records(mesh: str | None = None, directory: str | None = None) -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(directory or DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def run(quick: bool = False) -> dict:
+    # prefer the optimized sweep when present; keep the paper-naive baseline
+    # next to it for the before/after record (§Perf)
+    use_opt = bool(glob.glob(os.path.join(OPT_DIR, "*pod16x16*.json")))
+    recs = load_records(mesh="pod16x16", directory=OPT_DIR if use_opt else None)
+    baseline = (
+        {(r["arch"], r["shape"]): r for r in load_records(mesh="pod16x16")}
+        if use_opt else {}
+    )
+    rows, skips = [], []
+    for r in recs:
+        if r["status"] == "SKIP":
+            skips.append({"cell": f"{r['arch']} x {r['shape']}", "reason": r["reason"]})
+            continue
+        if r["status"] != "OK":
+            rows.append({"arch": r["arch"], "shape": r["shape"], "bottleneck": "FAIL"})
+            continue
+        t = r["roofline"]
+        dom = r["bottleneck"]
+        total = max(t["compute_s"], t["memory_s"], t["collective_s"])
+        base = baseline.get((r["arch"], r["shape"]))
+        base_dom = None
+        if base and base.get("status") == "OK":
+            bt = base["roofline"]
+            base_dom = max(bt["compute_s"], bt["memory_s"], bt["collective_s"])
+        rows.append({
+            "arch": r["arch"],
+            "shape": r["shape"],
+            "compute_s": t["compute_s"],
+            "memory_s": t["memory_s"],
+            "collective_s": t["collective_s"],
+            "bottleneck": dom,
+            "roofline_frac": t["compute_s"] / total if total else None,
+            "useful_flops": r.get("model_flops_ratio"),
+            "speedup_vs_naive": (base_dom / total) if (base_dom and total) else None,
+        })
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    print(table(rows, ["arch", "shape", "compute_s", "memory_s", "collective_s",
+                       "bottleneck", "roofline_frac", "useful_flops", "speedup_vs_naive"],
+                "Roofline terms per (arch x shape) on pod16x16 (256 chips)"
+                + (" — OPTIMIZED (baseline ratio in last col)" if use_opt else " — naive baseline")))
+    if skips:
+        print(table(skips, ["cell", "reason"], "Documented skips"))
+    out = {"rows": rows, "skips": skips}
+    save_result("roofline", out)
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,79 @@
+"""Shared benchmark utilities: result tables, cluster-similarity metrics,
+and the experiment grid the paper tables share."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_DIR", "experiments/bench")
+
+
+def save_result(name: str, payload: dict) -> None:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=2, default=float)
+
+
+def table(rows: list[dict], columns: list[str], title: str = "") -> str:
+    if title:
+        out = [f"== {title} =="]
+    else:
+        out = []
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows)) for c in columns}
+    out.append("  ".join(c.ljust(widths[c]) for c in columns))
+    for r in rows:
+        out.append("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in columns))
+    return "\n".join(out)
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.3f}" if abs(v) < 100 else f"{v:.1f}"
+    return str(v)
+
+
+def comembership(assign: dict, ids: list) -> np.ndarray:
+    return np.array(
+        [[assign.get(a) is not None and assign.get(a) == assign.get(b) for b in ids] for a in ids],
+        float,
+    )
+
+
+def matrix_cosine(A: np.ndarray, B: np.ndarray) -> float:
+    na, nb = np.linalg.norm(A), np.linalg.norm(B)
+    if na == 0 or nb == 0:
+        return 0.0
+    return float((A * B).sum() / (na * nb))
+
+
+def cluster_cosine(assign_a: dict, assign_b: dict, ids: list) -> float:
+    """The paper's Fig. 11/12 similarity between two clusterings."""
+    return matrix_cosine(comembership(assign_a, ids), comembership(assign_b, ids))
+
+
+def assignment_of(strategy) -> dict:
+    if hasattr(strategy, "clustering"):
+        return dict(strategy.clustering.assignment)
+    return dict(getattr(strategy, "assignment", {}))
+
+
+def per_class_accuracy(report) -> dict[str, float]:
+    """Mean accuracy per device class (slowest D5 ... fastest D4)."""
+    by_class: dict[str, list[float]] = {}
+    for cid, acc in report.per_client_acc.items():
+        by_class.setdefault(report.per_client_class[cid], []).append(acc)
+    return {k: float(np.mean(v)) for k, v in sorted(by_class.items())}
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.time() - self.t0

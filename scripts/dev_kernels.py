@@ -1,0 +1,58 @@
+"""Dev-loop: validate every Pallas kernel (interpret=True) vs the ref oracle."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.chi2_feedback import chi2_feedback
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.l1_distance import l1_distance
+from repro.kernels.merge_attention import merge_attention
+
+rng = np.random.default_rng(0)
+
+# flash attention
+for (B, H, KV, Sq, Sk, hd), causal, window, softcap in [
+    ((1, 4, 2, 128, 128, 64), True, None, None),
+    ((2, 4, 4, 64, 64, 32), True, None, 50.0),
+    ((1, 2, 1, 100, 100, 80), True, 32, None),
+    ((1, 2, 2, 64, 192, 128), False, None, None),
+    ((2, 8, 2, 1, 256, 64), True, None, None),  # decode-style
+]:
+    q = jnp.asarray(rng.normal(size=(B, H, Sq, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, KV, Sk, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, KV, Sk, hd)), jnp.float32)
+    q_pos0 = Sk - Sq if Sq < Sk else 0
+    got = flash_attention(q, k, v, causal=causal, window=window, softcap=softcap,
+                          q_pos0=q_pos0, block_q=32, block_k=32, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window, softcap=softcap, q_pos0=q_pos0)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+    print(f"[OK] flash B{B} H{H} KV{KV} Sq{Sq} Sk{Sk} hd{hd} causal={causal} win={window} cap={softcap}")
+
+# l1 distance
+for N, C in [(1000, 3), (65536, 2), (70000, 5), (128, 1)]:
+    u = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
+    cen = jnp.asarray(rng.normal(size=(C, N)), jnp.float32)
+    got = l1_distance(u, cen, block_n=4096, interpret=True)
+    np.testing.assert_allclose(got, ref.l1_distance_ref(u, cen), rtol=1e-4)
+    print(f"[OK] l1_distance N={N} C={C}")
+
+# merge attention
+for N in [100, 4096, 70000]:
+    vm = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
+    va = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
+    vt = jnp.asarray(rng.normal(size=(N,)), jnp.float32)
+    got = merge_attention(vm, va, vt, block_n=4096, interpret=True)
+    want, _ = ref.merge_attention_ref(vm, va, vt)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+    print(f"[OK] merge_attention N={N}")
+
+# chi2 feedback
+for M, J in [(1, 10), (7, 6), (300, 9)]:
+    fp = jnp.asarray(np.abs(rng.normal(size=(M, J))) + 0.1, jnp.float32)
+    ft = jnp.asarray(np.abs(rng.normal(size=(M, J))) + 0.1, jnp.float32)
+    ss = jnp.asarray(jax.nn.softmax(jnp.asarray(rng.normal(size=(M, J)))), jnp.float32)
+    got = chi2_feedback(fp, ft, ss, block_m=64, interpret=True)
+    np.testing.assert_allclose(got, ref.chi2_feedback_ref(fp, ft, ss), rtol=1e-4)
+    print(f"[OK] chi2_feedback M={M} J={J}")
+print("all kernels validated")

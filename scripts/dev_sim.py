@@ -1,0 +1,17 @@
+"""Dev-loop: run EchoPFL + all baselines on the image task, print summaries."""
+import sys
+import time
+
+from repro.fl.experiment import run_experiment
+
+strategies = sys.argv[1:] or ["echopfl", "fedavg", "fedasyn", "fedsea", "clusterfl", "oort", "standalone"]
+for s in strategies:
+    t0 = time.time()
+    _, _, strat, report = run_experiment(
+        "image_recognition", s, num_clients=12, max_time=2400.0, rounds=25, seed=1
+    )
+    wall = time.time() - t0
+    print(f"{s:12s} final={report.final_acc:.3f} t2t={report.time_to_target} "
+          f"up={report.up_bytes/1e6:.1f}MB down={report.down_bytes/1e6:.1f}MB "
+          f"extra={ {k: v for k, v in report.extra.items() if k not in ('latent_clusters','task')} } "
+          f"[wall {wall:.1f}s]")

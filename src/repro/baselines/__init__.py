@@ -1,0 +1,8 @@
+from repro.baselines.fedavg import FedAvg
+from repro.baselines.fedasyn import FedAsyn
+from repro.baselines.fedsea import FedSEA
+from repro.baselines.clusterfl import ClusterFL
+from repro.baselines.oort import Oort
+from repro.baselines.standalone import Standalone
+
+__all__ = ["FedAvg", "FedAsyn", "FedSEA", "ClusterFL", "Oort", "Standalone"]

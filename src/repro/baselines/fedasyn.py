@@ -1,0 +1,41 @@
+"""FedAsyn [Xie et al. 2019]: fully asynchronous single global model with
+polynomial staleness weight decay — the decay is exactly what EchoPFL
+rejects (it discounts slow devices' knowledge; Challenge #2)."""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.common.pytrees import tree_lerp
+from repro.core.server import Downlink
+from repro.core.staleness import StalenessTracker
+
+PyTree = Any
+
+
+class FedAsyn:
+    name = "fedasyn"
+    is_synchronous = False
+
+    def __init__(self, init_params: PyTree, *, alpha: float = 0.6, decay_power: float = 0.5):
+        self.global_model = init_params
+        self.alpha = alpha
+        self.decay_power = decay_power
+        self.version = 0
+        self.staleness = StalenessTracker()
+
+    def initial_models(self, client_ids):
+        return {cid: self.global_model for cid in client_ids}
+
+    def model_for(self, client_id):
+        return self.global_model
+
+    def handle_upload(self, client_id, params, base_version, n_samples, t):
+        staleness = max(0, self.version - base_version)
+        self.staleness.record(staleness)
+        weight = self.alpha * (1.0 + staleness) ** (-self.decay_power)  # stale updates decayed
+        self.global_model = tree_lerp(self.global_model, params, weight)
+        self.version += 1
+        return [Downlink(client_id, self.global_model, self.version, 0, "unicast")]
+
+    def stats(self):
+        return {"version": self.version, "staleness": self.staleness.snapshot()}

@@ -1,0 +1,42 @@
+"""FedAvg [McMahan et al. 2017]: synchronous, single global model, waits
+for every client each round — the paper's accuracy/communication baseline."""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.common.pytrees import tree_weighted_mean
+from repro.core.server import Downlink
+
+PyTree = Any
+
+
+class FedAvg:
+    name = "fedavg"
+    is_synchronous = True
+
+    def __init__(self, init_params: PyTree, client_sizes: dict[Any, int]):
+        self.global_model = init_params
+        self.client_sizes = client_sizes
+        self.version = 0
+
+    def initial_models(self, client_ids):
+        return {cid: self.global_model for cid in client_ids}
+
+    def model_for(self, client_id):
+        return self.global_model
+
+    def groups(self, client_ids):
+        return {"global": list(client_ids)}
+
+    def select(self, group_id, members, rnd):
+        return list(members)  # waits for all devices
+
+    def finish_round(self, group_id, uploads: dict, t: float):
+        trees = list(uploads.values())
+        weights = [self.client_sizes[cid] for cid in uploads]
+        self.global_model = tree_weighted_mean(trees, weights)
+        self.version += 1
+        return [Downlink(cid, self.global_model, self.version, 0, "broadcast") for cid in uploads]
+
+    def stats(self):
+        return {"version": self.version}

@@ -1,0 +1,3 @@
+from repro.checkpoint.checkpointer import Checkpointer, latest_step, restore_pytree, save_pytree
+
+__all__ = ["Checkpointer", "save_pytree", "restore_pytree", "latest_step"]

@@ -1,0 +1,26 @@
+"""Shared low-level utilities: pytree math, rng, timing, logging."""
+from repro.common.pytrees import (
+    tree_add,
+    tree_axpy,
+    tree_flat_vector,
+    tree_l1,
+    tree_l2,
+    tree_lerp,
+    tree_num_params,
+    tree_scale,
+    tree_sub,
+    tree_zeros_like,
+)
+
+__all__ = [
+    "tree_add",
+    "tree_axpy",
+    "tree_flat_vector",
+    "tree_l1",
+    "tree_l2",
+    "tree_lerp",
+    "tree_num_params",
+    "tree_scale",
+    "tree_sub",
+    "tree_zeros_like",
+]

@@ -1,0 +1,103 @@
+"""Pytree arithmetic used across the EchoPFL coordination layer.
+
+All protocol-level operations (L1 clustering distance, Algorithm-1 merge,
+broadcast decision rule) are defined on parameter *pytrees*. These helpers
+keep that arithmetic in one place so the server, baselines, and tests agree
+on semantics. Everything is jit-compatible.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def tree_add(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.add, a, b)
+
+
+def tree_sub(a: PyTree, b: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.subtract, a, b)
+
+
+def tree_scale(a: PyTree, s) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x * s, a)
+
+
+def tree_axpy(alpha, x: PyTree, y: PyTree) -> PyTree:
+    """alpha * x + y."""
+    return jax.tree_util.tree_map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_lerp(a: PyTree, b: PyTree, t) -> PyTree:
+    """(1 - t) * a + t * b — the asynchronous mixing step (FedAsyn-style)."""
+    return jax.tree_util.tree_map(lambda ai, bi: (1.0 - t) * ai + t * bi, a, b)
+
+
+def tree_zeros_like(a: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(jnp.zeros_like, a)
+
+
+def tree_l1(a: PyTree, b: PyTree | None = None) -> jax.Array:
+    """Sum of absolute (differences of) leaves — Eq. 1's L1 distance."""
+    if b is None:
+        parts = [jnp.sum(jnp.abs(x)) for x in jax.tree_util.tree_leaves(a)]
+    else:
+        parts = [
+            jnp.sum(jnp.abs(x - y))
+            for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+        ]
+    return jnp.sum(jnp.stack(parts)) if parts else jnp.zeros(())
+
+
+def tree_l2(a: PyTree, b: PyTree | None = None) -> jax.Array:
+    if b is None:
+        parts = [jnp.sum(jnp.square(x)) for x in jax.tree_util.tree_leaves(a)]
+    else:
+        parts = [
+            jnp.sum(jnp.square(x - y))
+            for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b))
+        ]
+    return jnp.sqrt(jnp.sum(jnp.stack(parts))) if parts else jnp.zeros(())
+
+
+def tree_flat_vector(a: PyTree, dtype=jnp.float32) -> jax.Array:
+    """Flatten a parameter pytree into a single 1-D vector (stable leaf order)."""
+    leaves = jax.tree_util.tree_leaves(a)
+    if not leaves:
+        return jnp.zeros((0,), dtype)
+    return jnp.concatenate([jnp.ravel(x).astype(dtype) for x in leaves])
+
+
+def tree_unflatten_vector(vec: jax.Array, like: PyTree) -> PyTree:
+    """Inverse of :func:`tree_flat_vector` against a template pytree."""
+    leaves, treedef = jax.tree_util.tree_flatten(like)
+    out, off = [], 0
+    for leaf in leaves:
+        n = math.prod(leaf.shape) if leaf.shape else 1
+        out.append(jnp.reshape(vec[off : off + n], leaf.shape).astype(leaf.dtype))
+        off += n
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def tree_num_params(a: PyTree) -> int:
+    return sum(math.prod(x.shape) if x.shape else 1 for x in jax.tree_util.tree_leaves(a))
+
+
+def tree_cast(a: PyTree, dtype) -> PyTree:
+    return jax.tree_util.tree_map(lambda x: x.astype(dtype), a)
+
+
+def tree_weighted_mean(trees: list[PyTree], weights) -> PyTree:
+    """Weighted average of a list of pytrees (FedAvg aggregation)."""
+    w = jnp.asarray(weights, dtype=jnp.float32)
+    w = w / jnp.sum(w)
+
+    def avg(*leaves):
+        return sum(wi * leaf for wi, leaf in zip(w, leaves))
+
+    return jax.tree_util.tree_map(avg, *trees)

@@ -1,0 +1,29 @@
+"""Deterministic RNG plumbing: named key derivation so every subsystem is
+reproducible independently of call order."""
+from __future__ import annotations
+
+import hashlib
+
+import jax
+import numpy as np
+
+
+def derive_key(root: jax.Array, *names: str | int) -> jax.Array:
+    """Derive a subkey from a root key by hashing a name path.
+
+    Unlike sequential ``split`` chains, adding a consumer never perturbs the
+    streams of existing consumers — important for the async simulator where
+    client event order is nondeterministic.
+    """
+    key = root
+    for name in names:
+        digest = hashlib.sha256(str(name).encode()).digest()
+        salt = int.from_bytes(digest[:4], "little")
+        key = jax.random.fold_in(key, salt)
+    return key
+
+
+def np_rng(seed: int | str) -> np.random.Generator:
+    if isinstance(seed, str):
+        seed = int.from_bytes(hashlib.sha256(seed.encode()).digest()[:8], "little")
+    return np.random.default_rng(seed)

@@ -1,0 +1,23 @@
+"""Cohere Command-R 35B [hf:CohereForAI/c4ai-command-r-v01; unverified].
+
+40L d_model=8192 64H (GQA kv=8) d_ff=22528 vocab=256000, no biases.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, TrainSpec, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="command-r-35b",
+        family="dense",
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=22528,
+        vocab_size=256000,
+        pattern=(LayerSpec("attn", "dense"),),
+        num_periods=40,
+        tie_embeddings=True,
+        rope_theta=8_000_000.0,
+        train=TrainSpec(optimizer="adamw", microbatches=4, remat=True, dp_shard_params=True),
+    )
+)

@@ -1,0 +1,29 @@
+"""HuBERT X-Large [arXiv:2106.07447; unverified].
+
+Encoder-only (bidirectional) transformer: 48L d_model=1280 16H d_ff=5120,
+output vocabulary = 504 cluster units (masked-prediction targets), padded
+to 512 for sharding. The wav2vec2-style convolutional waveform frontend is
+a STUB: ``input_specs`` supplies precomputed frame embeddings
+(batch, frames, d_model). No decode step exists (encoder-only) — decode
+shapes are skipped per the brief.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, TrainSpec, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="hubert-xlarge",
+        family="audio",
+        d_model=1280,
+        num_heads=16,
+        num_kv_heads=16,
+        head_dim=80,
+        d_ff=5120,
+        vocab_size=504,
+        pattern=(LayerSpec("attn", "dense"),),
+        num_periods=48,
+        causal=False,
+        is_encoder=True,
+        embeds_input=True,
+        train=TrainSpec(optimizer="adamw", microbatches=1, remat=True),
+    )
+)

@@ -1,0 +1,40 @@
+"""Jamba-1.5 Large 398B [arXiv:2403.19887; hf].
+
+72L d_model=8192 64H (GQA kv=8) d_ff=24576, Mamba:attention 7:1
+interleave, MoE 16 experts top-2 on every other layer. Period of 8:
+mamba x4 / attn at slot 4 / mamba x3, with dense/MoE FFNs alternating.
+
+long_500k RUNS for this arch: Mamba state is O(1) in sequence; only the
+9 attention layers keep a (data-axis-sharded) KV cache.
+"""
+from repro.configs.base import LayerSpec, MambaSpec, ModelConfig, MoESpec, TrainSpec, register_arch
+
+_PERIOD = (
+    LayerSpec("mamba", "dense"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("mamba", "dense"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("attn", "dense"),
+    LayerSpec("mamba", "moe"),
+    LayerSpec("mamba", "dense"),
+    LayerSpec("mamba", "moe"),
+)
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="jamba-1.5-large-398b",
+        family="hybrid",
+        d_model=8192,
+        num_heads=64,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=24576,
+        vocab_size=65536,
+        pattern=_PERIOD,
+        num_periods=9,
+        moe=MoESpec(num_experts=16, top_k=2, d_expert=24576),
+        mamba=MambaSpec(d_state=16, d_conv=4, expand=2),
+        rope_theta=10000.0,
+        train=TrainSpec(optimizer="adafactor", microbatches=16, remat=True, dp_shard_params=True),
+    )
+)

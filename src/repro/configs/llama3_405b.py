@@ -1,0 +1,26 @@
+"""Llama-3 405B [arXiv:2407.21783; unverified].
+
+126L d_model=16384 128H (GQA kv=8) d_ff=53248 vocab=128256.
+
+Memory policy (v5e 16GB x 256): adafactor (factored second moment),
+bf16 params, microbatch accumulation x16, remat, ZeRO param/state
+sharding over the data axis. See EXPERIMENTS.md §Dry-run.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, TrainSpec, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="llama3-405b",
+        family="dense",
+        d_model=16384,
+        num_heads=128,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=53248,
+        vocab_size=128256,
+        pattern=(LayerSpec("attn", "dense"),),
+        num_periods=126,
+        rope_theta=500000.0,
+        train=TrainSpec(optimizer="adafactor", microbatches=16, remat=True, dp_shard_params=True),
+    )
+)

@@ -1,0 +1,27 @@
+"""Pixtral 12B [hf:mistralai/Pixtral-12B-2409; unverified].
+
+Decoder backbone (mistral-nemo style): 40L d_model=5120 32H (GQA kv=8)
+d_ff=14336 vocab=131072. The pixtral-ViT modality frontend is a STUB per
+the brief: ``input_specs`` supplies precomputed patch embeddings of shape
+(batch, seq, d_model); the backbone consumes embeddings directly
+(``embeds_input=True``) and predicts text tokens.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, TrainSpec, register_arch
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="pixtral-12b",
+        family="vlm",
+        d_model=5120,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=131072,
+        pattern=(LayerSpec("attn", "dense"),),
+        num_periods=40,
+        embeds_input=True,
+        rope_theta=1_000_000.0,
+        train=TrainSpec(optimizer="adamw", microbatches=2, remat=True, dp_shard_params=True),
+    )
+)

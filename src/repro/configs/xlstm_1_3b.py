@@ -1,0 +1,28 @@
+"""xLSTM 1.3B [arXiv:2405.04517; unverified].
+
+48 blocks, d_model=2048, 4 heads, vocab 50304, d_ff=0 (blocks carry their
+own projections). Mix of mLSTM (matrix-memory, chunkwise-parallel) and
+sLSTM (scalar-memory, strictly sequential) blocks at 7:1.
+
+long_500k RUNS: recurrent state is O(1) in sequence length.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, TrainSpec, register_arch
+
+_PERIOD = tuple([LayerSpec("mlstm", "none")] * 7 + [LayerSpec("slstm", "none")])
+
+CONFIG = register_arch(
+    ModelConfig(
+        name="xlstm-1.3b",
+        family="ssm",
+        d_model=2048,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=512,
+        d_ff=0,
+        vocab_size=50304,
+        pattern=_PERIOD,
+        num_periods=6,
+        tie_embeddings=True,
+        train=TrainSpec(optimizer="adamw", microbatches=1, remat=True),
+    )
+)

@@ -1,0 +1,18 @@
+from repro.core.broadcast import BroadcastPredictor, pretrain_rnn
+from repro.core.clustering import Cluster, DynamicClustering
+from repro.core.server import Downlink, EchoPFLServer
+from repro.core.staleness import StalenessTracker
+from repro.core.versioning import Branch, ModelRepo, RWLock
+
+__all__ = [
+    "BroadcastPredictor",
+    "pretrain_rnn",
+    "Cluster",
+    "DynamicClustering",
+    "Downlink",
+    "EchoPFLServer",
+    "StalenessTracker",
+    "Branch",
+    "ModelRepo",
+    "RWLock",
+]

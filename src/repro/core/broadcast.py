@@ -1,0 +1,173 @@
+"""In-cluster on-demand model broadcast (paper Sec. 5).
+
+Decision rule: broadcast iff the predicted next model change exceeds the
+accumulated change since the last broadcast,
+    L1(v_hat^{t+1}, v^t)  >  L1(v^t, v_bcast^t).
+Ground truth for training the predictor (Eq. 4):
+    h = L1(v_c^{t-1}, v_bcast^{t-1}) - L1(v_c^{t-1}, v_c^t) >= 0  -> broadcast.
+
+A small 2x128-unit vanilla RNN consumes the cluster's Top-K recent
+L1-change records (K proportional to cluster size; we store change degrees,
+not model weights, to save memory — Sec. 5.2.1) and emits P(broadcast).
+It is pre-trained on 1200 synthetic historical states and fine-tuned online
+on every realized ground truth. Predictor state follows the maintenance
+rules of Sec. 5.2.2 under cluster expansion/merging.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+HIDDEN = 128
+NUM_LAYERS = 2
+
+
+# ---------------------------------------------------------------- RNN model
+def init_rnn(key: jax.Array, hidden: int = HIDDEN) -> PyTree:
+    ks = jax.random.split(key, 2 * NUM_LAYERS + 1)
+    params = {}
+    dim_in = 1
+    for layer in range(NUM_LAYERS):
+        params[f"wx{layer}"] = jax.random.normal(ks[2 * layer], (dim_in, hidden)) / np.sqrt(dim_in)
+        params[f"wh{layer}"] = jax.random.normal(ks[2 * layer + 1], (hidden, hidden)) / np.sqrt(hidden)
+        params[f"b{layer}"] = jnp.zeros((hidden,))
+        dim_in = hidden
+    params["w_out"] = jax.random.normal(ks[-1], (hidden, 2)) / np.sqrt(hidden)
+    params["b_out"] = jnp.zeros((2,))
+    return params
+
+
+@jax.jit
+def rnn_logits(params: PyTree, seq: jax.Array) -> jax.Array:
+    """seq: (T, 1) normalized change records -> (2,) [no-bcast, bcast] logits."""
+    x = seq
+    for layer in range(NUM_LAYERS):
+        h0 = jnp.zeros((params[f"wh{layer}"].shape[0],))
+
+        def step(h, x_t, l=layer):
+            h_new = jnp.tanh(x_t @ params[f"wx{l}"] + h @ params[f"wh{l}"] + params[f"b{l}"])
+            return h_new, h_new
+
+        _, hs = jax.lax.scan(step, h0, x)
+        x = hs
+    return hs[-1] @ params["w_out"] + params["b_out"]
+
+
+@jax.jit
+def _rnn_sgd(params: PyTree, seq: jax.Array, label: jax.Array, lr: jax.Array) -> tuple[PyTree, jax.Array]:
+    def loss_fn(p):
+        logits = rnn_logits(p, seq)
+        return -jax.nn.log_softmax(logits)[label]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads), loss
+
+
+# ------------------------------------------------------------- per-cluster
+@dataclasses.dataclass
+class BroadcastPredictor:
+    """Per-cluster predictor state: Top-K records + RNN weights."""
+
+    params: PyTree
+    k: int = 10
+    records: list = dataclasses.field(default_factory=list)  # recent L1 change degrees
+    active: bool = True  # deactivated right after expansion (Sec. 5.2.2)
+    scale: float = 1.0  # running normalizer for change degrees
+    decisions: int = 0
+    broadcasts: int = 0
+
+    def observe(self, change: float) -> None:
+        self.records.append(float(change))
+        self.records = self.records[-max(self.k, 1):]
+        self.scale = 0.9 * self.scale + 0.1 * max(abs(change), 1e-12)
+
+    def _seq(self) -> jax.Array:
+        rec = self.records[-self.k:]
+        rec = [0.0] * (self.k - len(rec)) + rec  # zero-pad (expansion reset rule)
+        norm = max(max((abs(r) for r in rec), default=0.0), 1e-12)  # match pretraining
+        return jnp.asarray(rec, jnp.float32)[:, None] / norm
+
+    def decide(self, accumulated_gap: float, fallback_threshold: float = 1.0) -> bool:
+        """RNN decision; when inactive (fresh expansion) never broadcast."""
+        self.decisions += 1
+        if not self.active:
+            self.active = True  # one suppressed decision, then resume
+            return False
+        if len(self.records) < 2:  # cold start: rule-based fallback
+            want = accumulated_gap > fallback_threshold * self.scale
+        else:
+            logits = rnn_logits(self.params, self._seq())
+            want = bool(jnp.argmax(logits) == 1)
+        if want:
+            self.broadcasts += 1
+        return want
+
+    def learn(self, label: int, lr: float = 1e-2) -> float:
+        """Online fine-tune on the realized ground truth (Eq. 4)."""
+        self.params, loss = _rnn_sgd(self.params, self._seq(), jnp.asarray(label), jnp.asarray(lr))
+        return float(loss)
+
+
+# ------------------------------------------------------------ maintenance
+def predictor_for_expansion(parent: BroadcastPredictor, change_of_new_client: float) -> BroadcastPredictor:
+    """Expansion rules: reset records to the new client (+zero pad), inherit
+    RNN weights, deactivate broadcast (center is already fresh)."""
+    child = BroadcastPredictor(params=parent.params, k=parent.k, scale=parent.scale)
+    child.records = [float(change_of_new_client)]
+    child.active = False
+    return child
+
+
+def predictor_for_merge(a: BroadcastPredictor, b: BroadcastPredictor) -> BroadcastPredictor:
+    """Merge rules: resample Top-K records proportional to each side's
+    record variance (prioritize larger weight changes), distill the two RNNs
+    (weight-space average — the training-free analogue of Sec. 4.3.2 used
+    for the predictor), and force an immediate broadcast (handled by caller).
+    """
+    va = float(np.var(a.records)) if len(a.records) > 1 else 0.0
+    vb = float(np.var(b.records)) if len(b.records) > 1 else 0.0
+    total = va + vb
+    k = max(a.k, b.k)
+    if total <= 0:
+        n_a = min(len(a.records), k // 2)
+    else:
+        n_a = int(round(k * va / total))
+    n_a = min(n_a, len(a.records))
+    n_b = min(k - n_a, len(b.records))
+    rec_a = sorted(a.records, key=abs)[-n_a:] if n_a else []
+    rec_b = sorted(b.records, key=abs)[-n_b:] if n_b else []
+    merged_params = jax.tree_util.tree_map(lambda x, y: 0.5 * (x + y), a.params, b.params)
+    out = BroadcastPredictor(params=merged_params, k=k, scale=max(a.scale, b.scale))
+    out.records = rec_a + rec_b
+    return out
+
+
+# -------------------------------------------------------------- pretraining
+def pretrain_rnn(key: jax.Array, k: int = 10, num_states: int = 1200, lr: float = 5e-3) -> PyTree:
+    """Pre-train on synthetic historical states (Sec. 5.2.1): decaying change
+    sequences labeled by the paper's h() rule applied to a simulated L1 walk."""
+    params = init_rnn(key)
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    for _ in range(num_states):
+        decay = rng.uniform(0.6, 1.5)  # reversed one-step ratio spans (0.67, 1.67)
+        base = rng.uniform(0.5, 2.0)
+        noise = rng.uniform(0.02, 0.3)
+        seq = base * decay ** np.arange(k) * (1 + noise * rng.standard_normal(k))
+        seq = np.abs(seq)[::-1]  # oldest -> newest (one-step ratio is 1/decay)
+        accumulated = float(np.sum(seq[-3:]))
+        predicted_next = float(seq[-1] / decay)
+        # Sec. 5.2.1 text rule: broadcast iff the predicted next model change
+        # exceeds the accumulated recent change level ("broadcasts more
+        # frequently given notable model changes; less frequently otherwise").
+        # The 1.15 margin keeps flat/converged sequences on the "hold" side —
+        # steady-state training shouldn't re-broadcast every aggregation.
+        label = 1 if predicted_next > 1.15 * accumulated / 3 else 0
+        scale = max(float(np.max(seq)), 1e-9)
+        x = jnp.asarray(seq / scale, jnp.float32)[:, None]
+        params, _ = _rnn_sgd(params, x, jnp.asarray(label), jnp.asarray(lr))
+    return params

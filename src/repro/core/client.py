@@ -1,0 +1,58 @@
+"""Simulated mobile client: local training, feedback computation, and the
+device latency model. In the threaded CI mode the same object runs inside a
+worker thread; in the event-driven simulator its timing methods feed the
+virtual clock."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import ClientDataset
+from repro.models import mlp
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class SimClient:
+    client_id: int
+    data: ClientDataset
+    num_classes: int
+    device_class: str
+    round_time_fn: Any  # () -> seconds of local compute
+    local_epochs: int = 5
+    lr: float = 0.1
+
+    # protocol state
+    model: PyTree | None = None
+    base_version: int = 0
+    cluster_id: int | None = None
+    partial_finetune: bool = False
+
+    def local_train(self, params: PyTree | None = None) -> tuple[PyTree, float]:
+        p = params if params is not None else self.model
+        x = jnp.asarray(self.data.x_train)
+        y = jnp.asarray(self.data.y_train)
+        return mlp.local_train(
+            p, x, y, epochs=self.local_epochs, lr=self.lr, head_only=self.partial_finetune
+        )
+
+    def evaluate(self, params: PyTree | None = None) -> float:
+        p = params if params is not None else self.model
+        if p is None:
+            return 0.0
+        return float(mlp.evaluate(p, jnp.asarray(self.data.x_test), jnp.asarray(self.data.y_test)))
+
+    def feedback_inputs(self, params: PyTree) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(F_pred, F_true, S_soft) on the local training set (Eq. 2/3)."""
+        f_pred, s_soft = mlp.predict_distributions(
+            params, jnp.asarray(self.data.x_train), self.num_classes
+        )
+        f_true = self.data.label_histogram(self.num_classes)
+        return np.asarray(f_pred), f_true.astype(np.float32), np.asarray(s_soft)
+
+    def compute_time(self) -> float:
+        return float(self.round_time_fn())

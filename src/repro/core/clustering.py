@@ -1,0 +1,275 @@
+"""Data-aware dynamic client clustering (paper Sec. 4).
+
+Three mechanisms:
+  * on-arrival initial assignment (Sec. 4.2): the first C arrivals seed the
+    centers; later arrivals go to the nearest center by L1 parameter
+    distance (Eq. 1) — computed by the Pallas streaming kernel on TPU.
+  * feedback (Sec. 4.3.1): chi-squared(F_pred, F_true) x Var(S_soft)
+    (Eq. 2/3) de-confounds clustering error from training stage.
+  * refinement (Sec. 4.3.2/4.3.3): merging via Algorithm-1 optimization-
+    direction attention; expansion peels the worst-feedback 20% of a cluster
+    into a new cluster seeded by transfer from the old center, whose members
+    do head-only fine-tuning until the next merge.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytrees import tree_flat_vector, tree_lerp, tree_unflatten_vector
+from repro.kernels import ops as K
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Cluster:
+    cluster_id: int
+    center: PyTree
+    version: int = 0  # bumped on every aggregation into this cluster
+    members: set = dataclasses.field(default_factory=set)
+    partial_finetune: set = dataclasses.field(default_factory=set)  # expansion mode clients
+    pf_round: int = -1  # refine round in which partial_finetune was imposed
+    last_broadcast_version: int = 0
+    last_broadcast_center: PyTree | None = None
+
+    @property
+    def size(self) -> int:
+        return len(self.members)
+
+
+class DynamicClustering:
+    """Server-side cluster registry with incremental init + refinement."""
+
+    def __init__(self, num_initial: int, mix_rate: float = 0.5, hm: float = 2.0):
+        self.num_initial = num_initial
+        self.mix_rate = mix_rate
+        self.hm = hm  # merge trigger: merge when count >= hm * num_initial
+        self.clusters: dict[int, Cluster] = {}
+        self._next_id = 0
+        self.assignment: dict[Any, int] = {}
+        self.merges = 0
+        self.expansions = 0
+        self.peel_counts: dict[Any, int] = {}  # anti-churn: cap per-client peels
+        self._last_expand_round: dict[int, int] = {}
+
+    # ------------------------------------------------------------------ init
+    def _new_cluster(self, center: PyTree) -> Cluster:
+        c = Cluster(cluster_id=self._next_id, center=center)
+        c.last_broadcast_center = center
+        self.clusters[self._next_id] = c
+        self._next_id += 1
+        return c
+
+    # -------------------------------------------------------------- assign
+    def assign(self, client_id, update: PyTree, switch_margin: float = 0.1) -> tuple[int, bool]:
+        """On-arrival assignment (Eq. 1). Returns (cluster_id, is_new_cluster).
+
+        ``switch_margin`` adds hysteresis: a client only leaves its current
+        cluster when another center is at least that much (relatively) closer.
+        Without it, aggregated centers drift toward the global parameter mean
+        and sweep every client into one blob (centroid attraction) — the
+        paper's refinement loop then thrashes expand/merge to undo it.
+        """
+        prev = self.assignment.get(client_id)
+        if prev is not None and client_id in self.clusters[prev].partial_finetune:
+            return prev, False  # expansion members stay put until next merge
+        if len(self.clusters) < self.num_initial:
+            c = self._new_cluster(update)
+            self._move(client_id, c.cluster_id)
+            return c.cluster_id, True
+        cids = sorted(self.clusters)
+        u = tree_flat_vector(update)
+        centers = jnp.stack([tree_flat_vector(self.clusters[c].center) for c in cids])
+        dists = np.asarray(K.l1_distance(u, centers))
+        cid = cids[int(np.argmin(dists))]
+        if prev is not None and prev in self.clusters and prev != cid:
+            d_prev = dists[cids.index(prev)]
+            if dists[cids.index(cid)] > (1.0 - switch_margin) * d_prev:
+                cid = prev  # not decisively closer: stay
+        self._move(client_id, cid)
+        return cid, False
+
+    def _move(self, client_id, cid: int) -> None:
+        prev = self.assignment.get(client_id)
+        if prev is not None and prev in self.clusters:
+            self.clusters[prev].members.discard(client_id)
+            self.clusters[prev].partial_finetune.discard(client_id)
+        self.clusters[cid].members.add(client_id)
+        self.assignment[client_id] = cid
+
+    # ----------------------------------------------------------- aggregate
+    def aggregate(self, cid: int, update: PyTree, weight: float | None = None) -> None:
+        """Asynchronous in-cluster aggregation: v_c <- (1-b) v_c + b u.
+
+        EchoPFL deliberately does NOT decay b by staleness — slow devices'
+        knowledge is preserved (Challenge #2); broadcast handles staleness.
+        """
+        c = self.clusters[cid]
+        b = self.mix_rate if weight is None else weight
+        c.center = tree_lerp(c.center, update, b)
+        c.version += 1
+
+    # -------------------------------------------------------------- merging
+    def should_merge(self) -> bool:
+        # hm * C is the *maximized* cluster count (Sec. 7.4.4): merge only
+        # when it is exceeded, so the system can stably hold hm*C clusters.
+        return len(self.clusters) > self.hm * self.num_initial
+
+    def merge_pair(
+        self,
+        cid_a: int,
+        cid_b: int,
+        local_train_fn: Callable[[PyTree], PyTree],
+    ) -> int:
+        """Algorithm 1: attention-weighted, training-free merge. The larger
+        cluster's center is the main model; ``local_train_fn`` performs the
+        one local training pass that yields the posterior direction."""
+        a, b = self.clusters[cid_a], self.clusters[cid_b]
+        main, aux = (a, b) if a.size >= b.size else (b, a)
+        v_m = tree_flat_vector(main.center)
+        v_aux = tree_flat_vector(aux.center)
+        v_trained = tree_flat_vector(local_train_fn(main.center))
+        merged_vec = K.merge_attention(v_m, v_aux, v_trained)
+        merged = tree_unflatten_vector(merged_vec, main.center)
+
+        main.center = merged
+        main.version += 1
+        for client in list(aux.members):
+            self._move(client, main.cluster_id)
+        main.partial_finetune.clear()  # merge lifts the partial-finetune restriction
+        del self.clusters[aux.cluster_id]
+        self.merges += 1
+        return main.cluster_id
+
+    def nearest_pair(self, min_version: int = 2, close_frac: float | None = 0.5) -> tuple[int, int] | None:
+        """Closest pair of centers by L1 — the merge candidates.
+
+        Freshly-expanded clusters (version < min_version) are exempt while
+        any mature pair exists: an expansion child starts at L1 = 0 from its
+        parent and would otherwise be merged back before differentiating.
+
+        A pair only qualifies when its distance is below ``close_frac`` of
+        the median inter-center distance: merging is for *redundant*
+        clusters, and folding two genuinely distinct centers just because
+        capacity was reached re-creates the blob that expansion undid."""
+        cids = sorted(self.clusters)
+        mature = [c for c in cids if self.clusters[c].version >= min_version]
+        if len(mature) >= 2:
+            cids = mature
+        if len(cids) < 2:
+            return None
+        vecs = jnp.stack([tree_flat_vector(self.clusters[c].center) for c in cids])
+        dmat = np.zeros((len(cids), len(cids)))
+        for i in range(len(cids)):
+            dmat[i] = np.asarray(K.l1_distance(vecs[i], vecs))
+        off = dmat[~np.eye(len(cids), dtype=bool)]
+        median = float(np.median(off))
+        np.fill_diagonal(dmat, np.inf)
+        i, j = np.unravel_index(np.argmin(dmat), dmat.shape)
+        if close_frac is not None and len(cids) > 2 and dmat[i, j] > close_frac * median:
+            return None  # nothing redundant enough to fold
+        return (cids[i], cids[j])
+
+    # ------------------------------------------------------- reassignment
+    def reassign_poor_fits(
+        self, feedbacks: dict[int, dict[Any, float]], uploads: dict[Any, PyTree]
+    ) -> int:
+        """Feedback-corrective reassignment: a member whose feedback is poor
+        may simply belong to *another existing* cluster (initial assignment
+        is fast but errorful — Sec. 4.2.2). Before spawning new clusters,
+        move such members to a decisively closer center, bypassing the
+        assignment hysteresis. Returns the number of moves."""
+        if len(self.clusters) < 2:
+            return 0
+        cids = sorted(self.clusters)
+        centers = jnp.stack([tree_flat_vector(self.clusters[c].center) for c in cids])
+        moves = 0
+        for cid, fb in feedbacks.items():
+            if cid not in self.clusters or len(fb) < 2:
+                continue
+            med = float(np.median(list(fb.values())))
+            for m, g in fb.items():
+                if g <= 2.0 * (med + 1e-12) or m not in uploads:
+                    continue
+                if m in self.clusters[cid].partial_finetune:
+                    continue
+                u = tree_flat_vector(uploads[m])
+                d = np.asarray(K.l1_distance(u, centers))
+                best = cids[int(np.argmin(d))]
+                if best != cid and d[cids.index(best)] < 0.9 * d[cids.index(cid)]:
+                    self._move(m, best)
+                    moves += 1
+        return moves
+
+    # ------------------------------------------------------------ expansion
+    def expand(
+        self,
+        cid: int,
+        feedbacks: dict[Any, float],
+        frac: float = 0.2,
+        uploads: dict[Any, PyTree] | None = None,
+        refine_round: int = 0,
+    ) -> int | None:
+        """Sec. 4.3.3: clients whose feedback ranks in the worst ``frac`` of
+        their cluster split into a new cluster and enter head-only
+        fine-tuning mode until the next merging refinement.
+
+        The child center realizes the paper's "transfer learning upon the
+        original cluster": it starts from the mean of the peeled members'
+        own uploads — which *are* the original center fine-tuned on the
+        drifted local data — so the new cluster is immediately separable
+        from its parent instead of being reabsorbed at the next merge."""
+        c = self.clusters[cid]
+        if self._last_expand_round.get(cid, -10) >= refine_round - 1:
+            return None  # cooldown: let the last split differentiate first
+        members = [m for m in c.members if m in feedbacks]
+        if len(members) < 3:
+            return None
+        ranked = sorted(members, key=lambda m: feedbacks[m])  # ascending: low = good fit
+        n_bad = max(1, int(len(ranked) * frac))
+        median = feedbacks[ranked[len(ranked) // 2]]
+        worst = feedbacks[ranked[-1]]
+        if worst <= 1e-9 or worst < 2.0 * (median + 1e-12):
+            return None  # cluster fits its members uniformly — nothing to split
+        # peel the worst-20%, but only members that are individually poor
+        # fits and not serial peel victims (inherent outliers stay put)
+        bad = [
+            m for m in ranked[-n_bad:]
+            if feedbacks[m] > 1.5 * (median + 1e-12) and self.peel_counts.get(m, 0) < 3
+        ]
+        if not bad:
+            return None
+        seeds = [uploads[m] for m in bad if uploads and m in uploads]
+        if seeds:
+            seed_center = seeds[0]
+            for i, s in enumerate(seeds[1:], start=2):
+                seed_center = tree_lerp(seed_center, s, 1.0 / i)  # running mean
+        else:
+            seed_center = c.center
+        new = self._new_cluster(seed_center)
+        for client in bad:
+            self._move(client, new.cluster_id)
+            new.partial_finetune.add(client)
+            self.peel_counts[client] = self.peel_counts.get(client, 0) + 1
+        new.pf_round = refine_round
+        self._last_expand_round[cid] = refine_round
+        self._last_expand_round[new.cluster_id] = refine_round
+        self.expansions += 1
+        return new.cluster_id
+
+    # ------------------------------------------------------------- helpers
+    def membership_matrix(self, client_ids: list) -> np.ndarray:
+        """Boolean collaboration matrix (Fig. 11): M[i, j] = same cluster."""
+        n = len(client_ids)
+        out = np.zeros((n, n), bool)
+        for i, a in enumerate(client_ids):
+            for j, b in enumerate(client_ids):
+                out[i, j] = (
+                    self.assignment.get(a) is not None
+                    and self.assignment.get(a) == self.assignment.get(b)
+                )
+        return out

@@ -1,0 +1,457 @@
+"""The EchoPFL server: asynchronous PFL coordination with on-demand
+broadcast (the paper's core contribution, Secs. 3-6 wired together).
+
+Per arriving update:
+  1. assign/confirm cluster (on-arrival L1 clustering, Eq. 1),
+  2. record staleness (never decay/drop — Challenge #2),
+  3. aggregate into the cluster branch (CI push, RW-locked),
+  4. update the cluster's Top-K change records,
+  5. unicast the fresh center back to the uploader (prompt CI feedback),
+  6. RNN broadcast decision: maybe broadcast to the *other* in-cluster
+     members (the "echo" — rides the fat downstream link),
+  7. online fine-tune the predictor on the realized ground truth (Eq. 4),
+  8. periodically: feedback-aware refinement (expand bad fits, merge when
+     cluster count reaches hm x C via Algorithm 1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.common.pytrees import tree_flat_vector, tree_l1
+from repro.core.broadcast import (
+    BroadcastPredictor,
+    predictor_for_expansion,
+    predictor_for_merge,
+    pretrain_rnn,
+)
+from repro.core.clustering import DynamicClustering
+from repro.core.staleness import StalenessTracker
+from repro.core.versioning import ModelRepo
+from repro.kernels import ops as K
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class Downlink:
+    client_id: Any
+    params: PyTree
+    version: int
+    cluster_id: int
+    reason: str  # "unicast" | "broadcast"
+
+
+class EchoPFLServer:
+    name = "echopfl"
+    is_synchronous = False
+
+    def __init__(
+        self,
+        init_params: PyTree,
+        *,
+        num_initial_clusters: int = 2,
+        mix_rate: float = 0.25,
+        hm: float = 2.0,
+        top_k: int = 10,
+        refine_every: int = 20,
+        feedback_fn: Callable[[Any, PyTree], tuple[np.ndarray, np.ndarray, np.ndarray]] | None = None,
+        local_train_fn: Callable[[PyTree], PyTree] | None = None,
+        pretrain_key: jax.Array | None = None,
+        enable_clustering: bool = True,
+        enable_broadcast: bool = True,
+        seed: int = 0,
+    ):
+        self.init_params = init_params
+        self.clustering = DynamicClustering(num_initial_clusters, mix_rate=mix_rate, hm=hm)
+        self.repo = ModelRepo()
+        self.staleness = StalenessTracker()
+        self.top_k = top_k
+        self.refine_every = refine_every
+        self.feedback_fn = feedback_fn
+        self.local_train_fn = local_train_fn
+        self.enable_clustering = enable_clustering
+        self.enable_broadcast = enable_broadcast
+        self._uploads = 0
+        self._decisions = 0  # cumulative (predictor objects are replaced on refine)
+        self._rnn_broadcasts = 0
+        self._refine_round = 0
+        self.last_uploads: dict[Any, PyTree] = {}  # client -> most recent update
+        self._rng = np.random.default_rng(seed)
+        key = pretrain_key if pretrain_key is not None else jax.random.PRNGKey(seed)
+        self._rnn_init = pretrain_rnn(key) if enable_broadcast else None
+        self.predictors: dict[int, BroadcastPredictor] = {}
+        self.client_versions: dict[Any, tuple[int, int]] = {}  # cid -> (cluster, version)
+        self.events: list[dict] = []
+
+    # ------------------------------------------------------------ protocol
+    def initial_models(self, client_ids: list) -> dict[Any, PyTree]:
+        return {cid: self.init_params for cid in client_ids}
+
+    def model_for(self, client_id) -> PyTree:
+        cid = self.clustering.assignment.get(client_id)
+        if cid is None:
+            return self.init_params
+        return self.clustering.clusters[cid].center
+
+    def _predictor(self, cluster_id: int) -> BroadcastPredictor:
+        if cluster_id not in self.predictors:
+            size = self.clustering.clusters[cluster_id].size
+            self.predictors[cluster_id] = BroadcastPredictor(
+                params=self._rnn_init, k=max(self.top_k, size)
+            )
+        return self.predictors[cluster_id]
+
+    def handle_upload(
+        self, client_id, params: PyTree, base_version: int, n_samples: int, t: float
+    ) -> list[Downlink]:
+        self._uploads += 1
+        self.last_uploads[client_id] = params
+        out: list[Downlink] = []
+
+        # 1. cluster assignment (or the single global "cluster" in ablation)
+        if self.enable_clustering:
+            cid, created = self.clustering.assign(client_id, params)
+        else:
+            if not self.clustering.clusters:
+                self.clustering._new_cluster(self.init_params)
+            cid, created = 0, False
+            self.clustering._move(client_id, 0)
+        cluster = self.clustering.clusters[cid]
+        branch = self.repo.branch(f"cluster/{cid}", cluster.center)
+
+        # 2. staleness bookkeeping (all updates included, none dropped)
+        base_cluster, base_ver = self.client_versions.get(client_id, (cid, 0))
+        if base_cluster == cid:
+            staleness = max(0, cluster.version - base_ver)
+        elif base_cluster in self.clustering.clusters:
+            # reassigned client: staleness is measured against the branch it
+            # actually trained from, not the whole history of the new branch
+            staleness = max(0, self.clustering.clusters[base_cluster].version - base_ver)
+        else:
+            # base branch was merged away; the merge broadcast refreshed
+            # every member, so only post-broadcast aggregations are stale
+            staleness = max(0, cluster.version - cluster.last_broadcast_version)
+        self.staleness.record(staleness)
+
+        # 3. aggregate = CI push into the branch
+        prev_center = cluster.center
+        def merge_fn(head):
+            self.clustering.aggregate(cid, params)
+            return self.clustering.clusters[cid].center
+        branch.push(client_id, merge_fn, f"upload from {client_id} (staleness {staleness})")
+
+        # 4. Top-K change record + ground-truth label for the previous decision
+        change = float(tree_l1(cluster.center, prev_center))
+        pred = self._predictor(cid) if self.enable_broadcast else None
+        if pred is not None:
+            gap_before = float(tree_l1(prev_center, cluster.last_broadcast_center))
+            # Ground truth for the decision made before this upload (Eq. 4,
+            # with the sign read per the Sec. 5.2.1 text rule): the realized
+            # model change exceeding the accumulated gap since the last
+            # broadcast means the broadcast was warranted.
+            label = 1 if change > gap_before else 0
+            if pred.records:
+                pred.learn(label)
+            pred.observe(change)
+
+        # 5. unicast fresh center to the uploader
+        out.append(Downlink(client_id, cluster.center, cluster.version, cid, "unicast"))
+        self.client_versions[client_id] = (cid, cluster.version)
+
+        # 6. on-demand broadcast to the rest of the cluster
+        if pred is not None and cluster.size > 1:
+            gap = float(tree_l1(cluster.center, cluster.last_broadcast_center))
+            self._decisions += 1
+            if pred.decide(gap):
+                self._rnn_broadcasts += 1
+                out.extend(self._broadcast(cluster, exclude={client_id}))
+
+        # 8. periodic refinement
+        if self._uploads % self.refine_every == 0:
+            out.extend(self._refine())
+        return out
+
+    def _broadcast(self, cluster, exclude: set = frozenset()) -> list[Downlink]:
+        cluster.last_broadcast_center = cluster.center
+        cluster.last_broadcast_version = cluster.version
+        msgs = []
+        for member in cluster.members - exclude:
+            msgs.append(Downlink(member, cluster.center, cluster.version, cluster.cluster_id, "broadcast"))
+            self.client_versions[member] = (cluster.cluster_id, cluster.version)
+        self.events.append({"kind": "broadcast", "cluster": cluster.cluster_id, "n": len(msgs)})
+        return msgs
+
+    # ---------------------------------------------------------- refinement
+    def _collect_feedback(self) -> dict[int, dict[Any, float]]:
+        """chi2 x Var(S) feedback per cluster, via the Pallas-batched kernel."""
+        if self.feedback_fn is None:
+            return {}
+        per_cluster: dict[int, dict[Any, float]] = {}
+        for cid, cluster in self.clustering.clusters.items():
+            members = sorted(cluster.members)
+            if not members:
+                continue
+            rows = [self.feedback_fn(m, cluster.center) for m in members]
+            f_pred = np.stack([r[0] for r in rows])
+            f_true = np.stack([np.maximum(r[1], 1e-3) for r in rows])
+            s_soft = np.stack([r[2] for r in rows])
+            g = np.asarray(K.chi2_feedback(f_pred, f_true, s_soft))
+            per_cluster[cid] = dict(zip(members, g.tolist()))
+        return per_cluster
+
+    def _feedback_of(self, client_id, center) -> float:
+        f_pred, f_true, s_soft = self.feedback_fn(client_id, center)
+        g = K.chi2_feedback(
+            np.asarray(f_pred)[None], np.maximum(np.asarray(f_true), 1e-3)[None],
+            np.asarray(s_soft)[None],
+        )
+        return float(np.asarray(g)[0])
+
+    def _reassign_by_feedback(self, feedback: dict[int, dict[Any, float]]) -> int:
+        """A poor-fit member may simply belong to another *existing* cluster
+        (on-arrival L1 assignment is fast but errorful — Sec. 4.2.2, and an
+        upload stays geometrically closest to the center it trained from).
+        Probe flagged members' feedback against every center and move them to
+        a decisively better-fitting one."""
+        if self.feedback_fn is None or len(self.clustering.clusters) < 2:
+            return 0
+        moves = 0
+        for cid, fb in feedback.items():
+            if cid not in self.clustering.clusters or len(fb) < 2:
+                continue
+            med = float(np.median(list(fb.values())))
+            for m, g in fb.items():
+                if g <= 2.0 * (med + 1e-12):
+                    continue
+                if m in self.clustering.clusters[cid].partial_finetune:
+                    continue
+                scores = {
+                    c2: self._feedback_of(m, cl.center)
+                    for c2, cl in self.clustering.clusters.items()
+                    if c2 != cid
+                }
+                if not scores:
+                    continue
+                best = min(scores, key=scores.get)
+                if scores[best] < 0.5 * g:
+                    self.clustering._move(m, best)
+                    self.client_versions[m] = (best, self.clustering.clusters[best].version)
+                    moves += 1
+        return moves
+
+    def _refine(self) -> list[Downlink]:
+        out: list[Downlink] = []
+        if not self.enable_clustering:
+            return out
+        self._refine_round += 1
+        if self._refine_round % 5 == 0:  # decay peel counts so later data
+            # drift (Fig. 18) can still split a previously-churned client out
+            self.clustering.peel_counts = {
+                k: v - 1 for k, v in self.clustering.peel_counts.items() if v > 1
+            }
+        # lift head-only mode imposed before this refinement (Sec. 4.3.3:
+        # "only be lifted after the next cluster merging refinement")
+        for cluster in self.clustering.clusters.values():
+            if cluster.partial_finetune and cluster.pf_round < self._refine_round - 1:
+                cluster.partial_finetune.clear()
+        feedback = self._collect_feedback()
+
+        # first try moving poor fits to an existing better-fitting cluster
+        # (probe their feedback against every center); only the leftovers
+        # (fit nowhere) justify spawning a new cluster
+        moved = self._reassign_by_feedback(feedback)
+        if moved:
+            self.events.append({"kind": "reassign", "n": moved})
+            feedback = self._collect_feedback()
+
+        # expansion: split poor fits out of each cluster
+        for cid, fb in list(feedback.items()):
+            if cid not in self.clustering.clusters:
+                continue
+            new_cid = self.clustering.expand(
+                cid, fb, uploads=self.last_uploads, refine_round=self._refine_round
+            )
+            if new_cid is not None:
+                parent_pred = self._predictor(cid)
+                new_cluster = self.clustering.clusters[new_cid]
+                change = max(fb.values()) if fb else 0.0
+                self.predictors[new_cid] = predictor_for_expansion(parent_pred, change)
+                self.repo.branch(f"cluster/{new_cid}", new_cluster.center)
+                self.events.append({"kind": "expand", "from": cid, "to": new_cid})
+                for m in new_cluster.members:
+                    self.client_versions[m] = (new_cid, new_cluster.version)
+
+        # merging: when cluster count exceeds hm * C, fold the nearest pair
+        # when one is genuinely redundant; otherwise dissolve the smallest
+        # cluster (refit its members) — blending two *distinct* centers just
+        # to honor capacity creates the very staleness blob Sec. 4 avoids
+        while self.clustering.should_merge():
+            pair = self.clustering.nearest_pair()
+            if pair is None:
+                if not self._dissolve_smallest():
+                    break
+                continue
+            a, b = pair
+            pred_a, pred_b = self._predictor(a), self._predictor(b)  # before deletion
+            train_fn = self.local_train_fn or (lambda p: p)
+            merged_cid = self.clustering.merge_pair(a, b, train_fn)
+            other = b if merged_cid == a else a
+            pred = predictor_for_merge(pred_a, pred_b)
+            self.predictors[merged_cid] = pred
+            self.predictors.pop(other, None)
+            self.repo.delete(f"cluster/{other}")
+            self.repo.branch(f"cluster/{merged_cid}", self.clustering.clusters[merged_cid].center)
+            self.events.append({"kind": "merge", "into": merged_cid, "from": other})
+            # merged model is immediately broadcast (Sec. 5.2.2)
+            out.extend(self._broadcast(self.clustering.clusters[merged_cid]))
+        return out
+
+    def _dissolve_smallest(self) -> bool:
+        """Capacity overflow with no redundant pair: retire the smallest
+        cluster and refit each member to its best remaining cluster (by
+        feedback probe when available, else by L1 of its last upload)."""
+        clusters = self.clustering.clusters
+        if len(clusters) < 2:
+            return False
+        victim = min(clusters, key=lambda c: (clusters[c].size, clusters[c].version))
+        rest = [c for c in clusters if c != victim]
+        for m in list(clusters[victim].members):
+            if self.feedback_fn is not None:
+                scores = {c: self._feedback_of(m, clusters[c].center) for c in rest}
+                best = min(scores, key=scores.get)
+            elif m in self.last_uploads:
+                u = tree_flat_vector(self.last_uploads[m])
+                import jax.numpy as jnp
+                centers = jnp.stack([tree_flat_vector(clusters[c].center) for c in rest])
+                d = np.asarray(K.l1_distance(u, centers))
+                best = rest[int(np.argmin(d))]
+            else:
+                best = rest[0]
+            self.clustering._move(m, best)
+            self.client_versions[m] = (best, clusters[best].version)
+        del clusters[victim]
+        self.predictors.pop(victim, None)
+        self.repo.delete(f"cluster/{victim}")
+        self.events.append({"kind": "dissolve", "cluster": victim})
+        return True
+
+    # ------------------------------------------------ checkpoint/restart
+    def state_dict(self) -> tuple[PyTree, dict]:
+        """(array_tree, json_meta) capturing every piece of server state the
+        paper's protocol accumulates: cluster centers + broadcast anchors,
+        per-cluster RNN predictor weights, Top-K records, membership,
+        versions, staleness counters. Restore with :meth:`load_state`."""
+        cl = self.clustering
+        tree = {
+            "centers": {str(cid): c.center for cid, c in cl.clusters.items()},
+            "bcast_centers": {
+                str(cid): c.last_broadcast_center for cid, c in cl.clusters.items()
+            },
+            "rnn": {str(cid): p.params for cid, p in self.predictors.items()},
+        }
+        meta = {
+            "clusters": {
+                str(cid): {
+                    "version": c.version,
+                    "members": sorted(map(str, c.members)),
+                    "partial_finetune": sorted(map(str, c.partial_finetune)),
+                    "pf_round": c.pf_round,
+                    "last_broadcast_version": c.last_broadcast_version,
+                }
+                for cid, c in cl.clusters.items()
+            },
+            "assignment": {str(k): v for k, v in cl.assignment.items()},
+            "next_id": cl._next_id,
+            "merges": cl.merges,
+            "expansions": cl.expansions,
+            "peel_counts": {str(k): v for k, v in cl.peel_counts.items()},
+            "predictors": {
+                str(cid): {
+                    "k": p.k, "records": p.records, "active": p.active,
+                    "scale": p.scale, "decisions": p.decisions, "broadcasts": p.broadcasts,
+                }
+                for cid, p in self.predictors.items()
+            },
+            "staleness": {
+                "count": self.staleness.count,
+                "total": self.staleness.total,
+                "q_max": self.staleness.q_max,
+            },
+            "client_versions": {str(k): list(v) for k, v in self.client_versions.items()},
+            "uploads": self._uploads,
+            "decisions": self._decisions,
+            "rnn_broadcasts": self._rnn_broadcasts,
+            "refine_round": self._refine_round,
+        }
+        return tree, meta
+
+    def state_template(self, meta: dict) -> PyTree:
+        """Tree-structure template matching :meth:`state_dict` for ``meta`` —
+        lets the checkpointer restore without pickling (centers share the
+        init_params structure; predictors share the RNN structure)."""
+        from repro.core.broadcast import init_rnn
+
+        rnn_like = self._rnn_init if self._rnn_init is not None else init_rnn(jax.random.PRNGKey(0))
+        return {
+            "centers": {cid: self.init_params for cid in meta["clusters"]},
+            "bcast_centers": {cid: self.init_params for cid in meta["clusters"]},
+            "rnn": {cid: rnn_like for cid in meta["predictors"]},
+        }
+
+    def load_state(self, tree: PyTree, meta: dict, client_id_type=int) -> None:
+        """Restore from :meth:`state_dict` output (elastic restart)."""
+        from repro.core.clustering import Cluster
+
+        cid_of = lambda s: client_id_type(s)
+        cl = self.clustering
+        cl.clusters = {}
+        for cid_s, info in meta["clusters"].items():
+            cid = int(cid_s)
+            c = Cluster(cluster_id=cid, center=tree["centers"][cid_s])
+            c.version = info["version"]
+            c.members = {cid_of(m) for m in info["members"]}
+            c.partial_finetune = {cid_of(m) for m in info["partial_finetune"]}
+            c.pf_round = info["pf_round"]
+            c.last_broadcast_version = info["last_broadcast_version"]
+            c.last_broadcast_center = tree["bcast_centers"][cid_s]
+            cl.clusters[cid] = c
+            self.repo.branch(f"cluster/{cid}", c.center)
+        cl.assignment = {cid_of(k): v for k, v in meta["assignment"].items()}
+        cl._next_id = meta["next_id"]
+        cl.merges = meta["merges"]
+        cl.expansions = meta["expansions"]
+        cl.peel_counts = {cid_of(k): v for k, v in meta["peel_counts"].items()}
+        self.predictors = {}
+        for cid_s, info in meta["predictors"].items():
+            p = BroadcastPredictor(params=tree["rnn"][cid_s], k=info["k"])
+            p.records = list(info["records"])
+            p.active = info["active"]
+            p.scale = info["scale"]
+            p.decisions = info["decisions"]
+            p.broadcasts = info["broadcasts"]
+            self.predictors[int(cid_s)] = p
+        st = meta["staleness"]
+        self.staleness.count, self.staleness.total, self.staleness.q_max = (
+            st["count"], st["total"], st["q_max"],
+        )
+        self.client_versions = {cid_of(k): tuple(v) for k, v in meta["client_versions"].items()}
+        self._uploads = meta["uploads"]
+        self._decisions = meta["decisions"]
+        self._rnn_broadcasts = meta["rnn_broadcasts"]
+        self._refine_round = meta["refine_round"]
+
+    # ------------------------------------------------------------- metrics
+    def stats(self) -> dict:
+        return {
+            "clusters": len(self.clustering.clusters),
+            "merges": self.clustering.merges,
+            "expansions": self.clustering.expansions,
+            "staleness": self.staleness.snapshot(),
+            "broadcasts": sum(1 for e in self.events if e["kind"] == "broadcast"),
+            "rnn_broadcasts": self._rnn_broadcasts,
+            "decisions": self._decisions,
+        }

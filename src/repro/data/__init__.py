@@ -1,0 +1,10 @@
+from repro.data.partition import dirichlet_partition, shard_partition
+from repro.data.synthetic import ClientDataset, FederatedTask, make_task
+
+__all__ = [
+    "dirichlet_partition",
+    "shard_partition",
+    "ClientDataset",
+    "FederatedTask",
+    "make_task",
+]

@@ -1,0 +1,12 @@
+from repro.fl.devices import DEVICE_CLASSES, DeviceClass, make_device_fleet
+from repro.fl.network import NetworkModel
+from repro.fl.simulator import SimReport, Simulator
+
+__all__ = [
+    "DEVICE_CLASSES",
+    "DeviceClass",
+    "make_device_fleet",
+    "NetworkModel",
+    "Simulator",
+    "SimReport",
+]

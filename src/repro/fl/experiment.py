@@ -1,0 +1,144 @@
+"""Experiment wiring: task + device fleet + strategy -> Simulator.
+
+This is the single entry point the benchmarks, examples and tests use, so
+every paper table compares strategies under identical data partitions,
+device mixes and network conditions.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+
+from repro.baselines import ClusterFL, FedAsyn, FedAvg, FedSEA, Oort, Standalone
+from repro.configs.paper_tasks import PAPER_TASKS
+from repro.core.client import SimClient
+from repro.core.server import EchoPFLServer
+from repro.data.synthetic import make_task
+from repro.fl.devices import PAPER_SIM_MIX, make_device_fleet
+from repro.fl.network import NetworkModel
+from repro.fl.simulator import Simulator
+
+PyTree = Any
+
+
+def build_clients(
+    task_name: str,
+    num_clients: int,
+    seed: int = 0,
+    latent_clusters: int = 4,
+    device_mix: dict | None = None,
+    base_round_time: float = 30.0,
+    samples_per_client: int = 96,
+    local_epochs: int = 5,
+):
+    from repro.models.mlp import init_mlp
+
+    rng = np.random.default_rng(seed)
+    task = make_task(
+        task_name, num_clients, rng,
+        latent_clusters=latent_clusters, samples_per_client=samples_per_client,
+    )
+    fleet = make_device_fleet(num_clients, rng, device_mix or PAPER_SIM_MIX, base_round_time)
+    cfg = PAPER_TASKS[task_name]
+    init_params = init_mlp(cfg, jax.random.PRNGKey(seed))
+    clients = [
+        SimClient(
+            client_id=i,
+            data=task.clients[i],
+            num_classes=cfg.num_classes,
+            device_class=fleet[i]["class"],
+            round_time_fn=fleet[i]["round_time"],
+            local_epochs=local_epochs,
+        )
+        for i in range(num_clients)
+    ]
+    return task, clients, init_params
+
+
+def build_strategy(
+    name: str,
+    init_params: PyTree,
+    clients: list[SimClient],
+    *,
+    seed: int = 0,
+    num_clusters: int = 2,
+    hm: float = 2.0,
+    mix_rate: float = 0.25,
+    enable_clustering: bool = True,
+    enable_broadcast: bool = True,
+    sync_interval: float = 120.0,
+):
+    sizes = {c.client_id: c.data.n for c in clients}
+    by_id = {c.client_id: c for c in clients}
+    if name == "echopfl":
+        def feedback_fn(client_id, center):
+            return by_id[client_id].feedback_inputs(center)
+
+        def local_train_fn(center):
+            # Algorithm 1 posterior pass: one epoch on a random member's data
+            member = by_id[int(np.random.default_rng(seed).choice(sorted(by_id)))]
+            trained, _ = member.local_train(center)
+            return trained
+
+        return EchoPFLServer(
+            init_params,
+            num_initial_clusters=num_clusters,
+            hm=hm,
+            mix_rate=mix_rate,
+            feedback_fn=feedback_fn,
+            local_train_fn=local_train_fn,
+            enable_clustering=enable_clustering,
+            enable_broadcast=enable_broadcast,
+            seed=seed,
+        )
+    if name == "fedavg":
+        return FedAvg(init_params, sizes)
+    if name == "fedasyn":
+        return FedAsyn(init_params)
+    if name == "fedsea":
+        return FedSEA(init_params, sync_interval=sync_interval)
+    if name == "clusterfl":
+        return ClusterFL(init_params, sizes, num_clusters=max(num_clusters, 4), seed=seed)
+    if name == "oort":
+        hints = {c.client_id: np.mean([c.round_time_fn() for _ in range(3)]) for c in clients}
+        return Oort(init_params, sizes, hints, seed=seed)
+    if name == "standalone":
+        return Standalone(init_params)
+    raise KeyError(name)
+
+
+def run_experiment(
+    task_name: str,
+    strategy_name: str,
+    *,
+    num_clients: int = 20,
+    seed: int = 0,
+    max_time: float = 3600.0,
+    rounds: int = 40,
+    target_acc: float = 0.85,
+    eval_interval: float = 60.0,
+    network: NetworkModel | None = None,
+    latent_clusters: int = 4,
+    device_mix: dict | None = None,
+    samples_per_client: int = 96,
+    local_epochs: int = 5,
+    base_round_time: float = 30.0,
+    **strategy_kw,
+):
+    task, clients, init_params = build_clients(
+        task_name, num_clients, seed=seed, latent_clusters=latent_clusters,
+        device_mix=device_mix, samples_per_client=samples_per_client,
+        local_epochs=local_epochs, base_round_time=base_round_time,
+    )
+    strategy = build_strategy(strategy_name, init_params, clients, seed=seed, **strategy_kw)
+    sim = Simulator(
+        clients, strategy,
+        network=network or NetworkModel(),
+        eval_interval=eval_interval, target_acc=target_acc, seed=seed,
+    )
+    report = sim.run(max_time=max_time, rounds=rounds)
+    report.extra["task"] = task_name
+    report.extra["latent_clusters"] = {c.client_id: c.data.latent_cluster for c in clients}
+    return task, clients, strategy, report

@@ -1,0 +1,50 @@
+"""Asymmetric-bandwidth wireless network model.
+
+The paper's systems observation: downstream can be ~10x upstream in 5G
+[Chen & Zhao 2014]. Broadcast rides the fat downstream link, uploads cross
+the thin upstream link. This model tracks per-direction byte totals and a
+time series (for the communication-peak experiment, Fig. 10).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+
+
+@dataclasses.dataclass
+class NetworkModel:
+    upstream_bps: float = 10e6 * 8 / 8  # 10 MB/s
+    downstream_bps: float = 100e6 * 8 / 8  # 100 MB/s (10x asymmetry)
+    bin_seconds: float = 60.0
+
+    def __post_init__(self):
+        self.up_bytes = 0
+        self.down_bytes = 0
+        self.up_events = 0
+        self.down_events = 0
+        self._up_series: dict[int, float] = defaultdict(float)
+        self._down_series: dict[int, float] = defaultdict(float)
+
+    def upload(self, nbytes: int, t: float) -> float:
+        """Register an upload starting at t; returns transfer duration."""
+        self.up_bytes += nbytes
+        self.up_events += 1
+        self._up_series[int(t // self.bin_seconds)] += nbytes
+        return nbytes / self.upstream_bps
+
+    def download(self, nbytes: int, t: float) -> float:
+        self.down_bytes += nbytes
+        self.down_events += 1
+        self._down_series[int(t // self.bin_seconds)] += nbytes
+        return nbytes / self.downstream_bps
+
+    def peak(self, direction: str = "down") -> float:
+        series = self._down_series if direction == "down" else self._up_series
+        return max(series.values(), default=0.0)
+
+    def series(self, direction: str = "down") -> dict[int, float]:
+        return dict(self._down_series if direction == "down" else self._up_series)
+
+    @property
+    def total_bytes(self) -> int:
+        return self.up_bytes + self.down_bytes

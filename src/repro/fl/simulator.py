@@ -1,0 +1,280 @@
+"""Event-driven federated-learning simulator.
+
+Replays the paper's experimental setup in virtual time: heterogeneous
+devices (D1..D5 latency model), asymmetric up/down bandwidth, and a
+pluggable coordination strategy (EchoPFL or any baseline). Asynchronous
+strategies run on an event heap; synchronous ones run round barriers
+(optionally per-cluster barriers, for ClusterFL).
+
+The simulator measures exactly what the paper reports: accuracy-vs-time
+curves, per-client accuracy (slowest/fastest device), total/up/down
+communication bytes, per-minute communication series (peaks), staleness
+statistics, and time-to-target-accuracy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Any
+
+import numpy as np
+
+from repro.core.client import SimClient
+from repro.fl.network import NetworkModel
+
+PyTree = Any
+
+
+@dataclasses.dataclass
+class SimReport:
+    strategy: str
+    curve: list[tuple[float, float]]  # (t, mean acc)
+    per_client_acc: dict[int, float]
+    per_client_class: dict[int, str]
+    final_acc: float
+    time_to_target: float | None
+    up_bytes: int
+    down_bytes: int
+    up_events: int
+    down_events: int
+    peak_down: float
+    peak_up: float
+    duration: float
+    extra: dict
+    up_series: dict = dataclasses.field(default_factory=dict)  # minute -> bytes
+    down_series: dict = dataclasses.field(default_factory=dict)
+
+    def bytes_until(self, t: float) -> tuple[float, float]:
+        """(up, down) bytes accumulated in bins up to time t (the paper's
+        communication-to-convergence metric)."""
+        last = int(t // 60)
+        up = sum(v for b, v in self.up_series.items() if b <= last)
+        down = sum(v for b, v in self.down_series.items() if b <= last)
+        return up, down
+
+    def summary(self) -> dict:
+        return {
+            "strategy": self.strategy,
+            "final_acc": round(self.final_acc, 4),
+            "time_to_target_min": None if self.time_to_target is None else round(self.time_to_target / 60, 2),
+            "duration_min": round(self.duration / 60, 2),
+            "up_MB": round(self.up_bytes / 1e6, 2),
+            "down_MB": round(self.down_bytes / 1e6, 2),
+            "total_MB": round((self.up_bytes + self.down_bytes) / 1e6, 2),
+            "peak_down_MB_per_min": round(self.peak_down / 1e6, 2),
+            "peak_up_MB_per_min": round(self.peak_up / 1e6, 2),
+        }
+
+
+def model_bytes(params: PyTree) -> int:
+    import jax
+
+    return sum(np.prod(x.shape) * 4 for x in jax.tree_util.tree_leaves(params))
+
+
+class Simulator:
+    def __init__(
+        self,
+        clients: list[SimClient],
+        strategy,
+        *,
+        network: NetworkModel | None = None,
+        eval_interval: float = 60.0,
+        target_acc: float = 0.85,
+        seed: int = 0,
+        churn: dict[Any, list[tuple[float, float]]] | None = None,
+    ):
+        self.clients = {c.client_id: c for c in clients}
+        self.strategy = strategy
+        self.net = network or NetworkModel()
+        self.eval_interval = eval_interval
+        self.target_acc = target_acc
+        self.rng = np.random.default_rng(seed)
+        self.curve: list[tuple[float, float]] = []
+        self._counter = itertools.count()
+        # elastic membership: {client: [(t_offline, t_back), ...]} — a device
+        # that would start local training inside an offline window instead
+        # resumes when it returns (dropout/rejoin; the async protocol absorbs
+        # both, which is what the fault-tolerance tests assert)
+        self.churn = churn or {}
+        self.churn_delays = 0
+
+    def _next_online(self, cid, t: float) -> float:
+        for t_off, t_on in self.churn.get(cid, ()):
+            if t_off <= t < t_on:
+                self.churn_delays += 1
+                return t_on
+        return t
+
+    # ----------------------------------------------------------- evaluation
+    def _evaluate(self, t: float) -> float:
+        accs = {}
+        for cid, c in self.clients.items():
+            params = self.strategy.model_for(cid)
+            accs[cid] = c.evaluate(params if params is not None else c.model)
+        mean = float(np.mean(list(accs.values())))
+        self.curve.append((t, mean))
+        self._last_accs = accs
+        return mean
+
+    def _report(self, t_end: float, extra: dict) -> SimReport:
+        self._evaluate(t_end)
+        target_t = None
+        for t, acc in self.curve:
+            if acc >= self.target_acc:
+                target_t = t
+                break
+        return SimReport(
+            strategy=self.strategy.name,
+            curve=self.curve,
+            per_client_acc=self._last_accs,
+            per_client_class={cid: c.device_class for cid, c in self.clients.items()},
+            final_acc=self.curve[-1][1],
+            time_to_target=target_t,
+            up_bytes=self.net.up_bytes,
+            down_bytes=self.net.down_bytes,
+            up_events=self.net.up_events,
+            down_events=self.net.down_events,
+            peak_down=self.net.peak("down"),
+            peak_up=self.net.peak("up"),
+            duration=t_end,
+            extra=extra,
+            up_series=self.net.series("up"),
+            down_series=self.net.series("down"),
+        )
+
+    # ------------------------------------------------------------ async run
+    def run_async(self, *, max_time: float = 3600.0, max_uploads: int | None = None) -> SimReport:
+        """Event loop for asynchronous strategies (EchoPFL, FedAsyn, FedSEA)."""
+        strat = self.strategy
+        events: list = []  # (time, seq, kind, payload)
+
+        def push(t, kind, payload):
+            heapq.heappush(events, (t, next(self._counter), kind, payload))
+
+        # initial broadcast of the seed model
+        init = strat.initial_models(sorted(self.clients))
+        nbytes = model_bytes(next(iter(init.values())))
+        for cid, params in init.items():
+            dl = self.net.download(nbytes, 0.0)
+            c = self.clients[cid]
+            c.model = params
+            c.base_version = 0
+            push(dl + c.compute_time(), "upload_start", cid)
+        if getattr(strat, "tick_interval", None):
+            push(strat.tick_interval, "tick", None)
+
+        next_eval = self.eval_interval
+        uploads = 0
+        t = 0.0
+        while events:
+            t, _, kind, payload = heapq.heappop(events)
+            if t > max_time:
+                t = max_time
+                break
+            while t >= next_eval:
+                self._evaluate(next_eval)
+                next_eval += self.eval_interval
+
+            if kind == "upload_start":  # local training finished; uplink begins
+                cid = payload
+                t_on = self._next_online(cid, t)
+                if t_on > t:  # device offline: resume when it rejoins
+                    push(t_on + self.clients[cid].compute_time(), "upload_start", cid)
+                    continue
+                c = self.clients[cid]
+                new_params, _ = c.local_train()
+                c.model = new_params
+                dur = self.net.upload(model_bytes(new_params), t)
+                push(t + dur, "upload_done", (cid, new_params, c.base_version))
+            elif kind == "upload_done":
+                cid, params, base_version = payload
+                uploads += 1
+                c = self.clients[cid]
+                downlinks = strat.handle_upload(cid, params, base_version, c.data.n, t)
+                # sync-point strategies may buffer; flush anything returned
+                for dl in downlinks:
+                    dur = self.net.download(model_bytes(dl.params), t)
+                    push(t + dur, "downlink", dl)
+                # client starts next local round immediately from current base
+                push(t + self.clients[cid].compute_time(), "upload_start", cid)
+                if max_uploads and uploads >= max_uploads:
+                    break
+            elif kind == "downlink":
+                dl = payload
+                c = self.clients[dl.client_id]
+                c.model = dl.params
+                c.base_version = dl.version
+                c.cluster_id = dl.cluster_id
+                if hasattr(strat, "clustering") and dl.cluster_id in strat.clustering.clusters:
+                    c.partial_finetune = (
+                        dl.client_id in strat.clustering.clusters[dl.cluster_id].partial_finetune
+                    )
+            elif kind == "tick":  # strategy-driven periodic hook (FedSEA sync points)
+                for dl in strat.on_tick(t):
+                    dur = self.net.download(model_bytes(dl.params), t)
+                    push(t + dur, "downlink", dl)
+                if strat.tick_interval:
+                    push(t + strat.tick_interval, "tick", None)
+
+        extra = strat.stats() if hasattr(strat, "stats") else {}
+        extra["uploads"] = uploads
+        if self.churn:
+            extra["churn_delays"] = self.churn_delays
+        return self._report(t, extra)
+
+    # ------------------------------------------------------------- sync run
+    def run_sync(self, *, rounds: int = 50, max_time: float | None = None) -> SimReport:
+        """Round-barrier loop for synchronous strategies (FedAvg, Oort,
+        ClusterFL with per-cluster barriers, Standalone)."""
+        strat = self.strategy
+        init = strat.initial_models(sorted(self.clients))
+        nbytes = model_bytes(next(iter(init.values())))
+        t = 0.0
+        for cid, params in init.items():
+            self.clients[cid].model = params
+        t += nbytes / self.net.downstream_bps
+        self.net.download(nbytes * len(init), 0.0)
+
+        next_eval = self.eval_interval
+        groups_time = {g: t for g in strat.groups(sorted(self.clients))}
+        for rnd in range(rounds):
+            # each group (one global group, or one per cluster) runs its own barrier
+            for group_id, members in strat.groups(sorted(self.clients)).items():
+                t0 = groups_time.get(group_id, t)
+                selected = strat.select(group_id, members, rnd)
+                if not selected:
+                    continue
+                finish_times = {}
+                uploads = {}
+                for cid in selected:
+                    c = self.clients[cid]
+                    params, _ = c.local_train(strat.model_for(cid))
+                    dur = c.compute_time()
+                    up_dur = self.net.upload(model_bytes(params), t0 + dur)
+                    finish_times[cid] = t0 + dur + up_dur
+                    uploads[cid] = params
+                barrier = max(finish_times.values())
+                downlinks = strat.finish_round(group_id, uploads, barrier)
+                dl_time = 0.0
+                for dl in downlinks:
+                    dl_time = max(dl_time, self.net.download(model_bytes(dl.params), barrier))
+                    c = self.clients[dl.client_id]
+                    c.model = dl.params
+                    c.base_version = dl.version
+                groups_time[group_id] = barrier + dl_time
+            t = max(groups_time.values())
+            while t >= next_eval:
+                self._evaluate(next_eval)
+                next_eval += self.eval_interval
+            if max_time and t > max_time:
+                break
+        extra = strat.stats() if hasattr(strat, "stats") else {}
+        extra["rounds"] = rnd + 1
+        return self._report(t, extra)
+
+    def run(self, **kw) -> SimReport:
+        if getattr(self.strategy, "is_synchronous", False):
+            return self.run_sync(**{k: v for k, v in kw.items() if k in ("rounds", "max_time")})
+        return self.run_async(**{k: v for k, v in kw.items() if k in ("max_time", "max_uploads")})

@@ -1,0 +1,3 @@
+from repro.kernels.ops import chi2_feedback, flash_attention, l1_distance, merge_attention
+
+__all__ = ["flash_attention", "l1_distance", "merge_attention", "chi2_feedback"]

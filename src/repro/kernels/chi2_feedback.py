@@ -1,0 +1,58 @@
+"""Client feedback statistic (paper Eq. 2/3) as a Pallas TPU kernel.
+
+g(v_c, Pi_i) = chi2(F_pred, F_true) * Var(S_soft), batched over M clients:
+the server evaluates feedback for a whole refinement round at once. One
+fused VPU pass over (block_m, J) tiles; J (number of classes) is small, so
+the tile is padded to the 128-lane boundary with a validity mask.
+
+Grid: (M / block_m,).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chi2_kernel(fp_ref, ft_ref, ss_ref, o_ref, *, j_valid: int):
+    fp = fp_ref[...].astype(jnp.float32)  # (block_m, Jp)
+    ft = ft_ref[...].astype(jnp.float32)
+    ss = ss_ref[...].astype(jnp.float32)
+    jp = fp.shape[1]
+    valid = jax.lax.broadcasted_iota(jnp.int32, fp.shape, 1) < j_valid
+
+    chi2 = jnp.sum(jnp.where(valid, jnp.square(fp - ft) / jnp.maximum(ft, 1e-6), 0.0), axis=1)
+    mean = jnp.sum(jnp.where(valid, ss, 0.0), axis=1, keepdims=True) / j_valid
+    var = jnp.sum(jnp.where(valid, jnp.square(ss - mean), 0.0), axis=1) / j_valid
+    o_ref[:, 0] = chi2 * var
+
+
+def chi2_feedback(
+    f_pred: jax.Array,  # (M, J)
+    f_true: jax.Array,  # (M, J)
+    s_soft: jax.Array,  # (M, J)
+    *,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> jax.Array:
+    M, J = f_pred.shape
+    j_p = math.ceil(J / 128) * 128
+    block_m = min(block_m, max(8, 1 << (M - 1).bit_length()))
+    m_p = math.ceil(M / block_m) * block_m
+    pad = lambda x: jnp.pad(x, ((0, m_p - M), (0, j_p - J)))
+    fp, ft, ss = pad(f_pred), pad(f_true), pad(s_soft)
+    grid = (m_p // block_m,)
+    spec = pl.BlockSpec((block_m, j_p), lambda i: (i, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_chi2_kernel, j_valid=J),
+        grid=grid,
+        in_specs=[spec, spec, spec],
+        out_specs=pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m_p, 1), jnp.float32),
+        interpret=interpret,
+    )(fp, ft, ss)
+    return out[:M, 0]

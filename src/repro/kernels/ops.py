@@ -1,0 +1,190 @@
+"""Public jit'd entry points for the Pallas kernels.
+
+On TPU these dispatch to the compiled kernels; elsewhere (this CPU
+container, unit tests) they run the same kernel bodies in interpret mode
+or fall back to the jnp oracle for speed. The protocol layer calls only
+these wrappers, so swapping the backend never touches coordination code.
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.chi2_feedback import chi2_feedback as _chi2_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.l1_distance import l1_distance as _l1_kernel
+from repro.kernels.merge_attention import merge_attention as _merge_kernel
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.default_backend() == "tpu"
+    except RuntimeError:
+        return False
+
+
+_FORCE = os.environ.get("REPRO_KERNELS", "auto")  # auto | pallas | ref
+
+
+def _use_pallas() -> bool:
+    if _FORCE == "pallas":
+        return True
+    if _FORCE == "ref":
+        return False
+    return _on_tpu()
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "scale", "window", "softcap", "q_pos0"))
+def flash_attention(q, k, v, *, causal=True, scale=None, window=None, softcap=None, q_pos0=0):
+    if _use_pallas():
+        return _flash_kernel(
+            q, k, v, causal=causal, scale=scale, window=window, softcap=softcap,
+            q_pos0=q_pos0, interpret=not _on_tpu(),
+        )
+    return ref.flash_attention_ref(
+        q, k, v, causal=causal, scale=scale, window=window, softcap=softcap, q_pos0=q_pos0
+    )
+
+
+# ---------------------------------------------------------------------------
+# Trainable attention: flash forward + flash backward kernels via custom_vjp.
+# This is what the model's train/prefill path calls — it is the difference
+# between O(S^2) attention HBM traffic (materialized score matrices, the
+# paper-naive baseline measured with REPRO_KERNELS=ref) and the
+# O(S^2 * d / block) streaming traffic of the fused kernels (see
+# EXPERIMENTS.md §Perf iteration 1).
+# ---------------------------------------------------------------------------
+from repro.kernels.flash_attention import flash_attention_with_lse as _flash_fwd_lse
+from repro.kernels.flash_attention_bwd import flash_attention_bwd as _flash_bwd
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def _attention_trainable(q, k, v, causal, scale, window, softcap, q_pos0, interpret):
+    o, _ = _flash_fwd_lse(
+        q, k, v, causal=causal, scale=scale, window=window, softcap=softcap,
+        q_pos0=q_pos0, interpret=interpret,
+    )
+    return o
+
+
+def _attention_fwd(q, k, v, causal, scale, window, softcap, q_pos0, interpret):
+    o, lse = _flash_fwd_lse(
+        q, k, v, causal=causal, scale=scale, window=window, softcap=softcap,
+        q_pos0=q_pos0, interpret=interpret,
+    )
+    return o, (q, k, v, o, lse)
+
+
+def _attention_bwd(causal, scale, window, softcap, q_pos0, interpret, res, do):
+    q, k, v, o, lse = res
+    dq, dk, dv = _flash_bwd(
+        q, k, v, o, lse, do, causal=causal, scale=scale, window=window,
+        softcap=softcap, q_pos0=q_pos0, interpret=interpret,
+    )
+    return dq, dk, dv
+
+
+_attention_trainable.defvjp(_attention_fwd, _attention_bwd)
+
+
+def _local_attention(q, k, v, *, causal, scale, window, softcap, q_pos0):
+    """Per-device attention on local (B, H, S, hd) shards.
+
+    REPRO_ATTN_COST_PROXY=1 (set by the dry-run) lowers the AD-able jnp
+    reference instead of the interpret-mode kernels: interpret lowering
+    copies full loop-carried arrays per grid step (a CPU emulation artifact
+    a Mosaic kernel does not have), which poisons byte accounting. The cost
+    model then filters the reference's S^2 tensors and substitutes the
+    kernels' analytic streaming traffic (hlo_cost.skip_trailing +
+    dryrun.flash_attention_analytic_bytes)."""
+    if _FORCE == "ref" or os.environ.get("REPRO_ATTN_COST_PROXY") == "1":
+        return ref.flash_attention_ref(
+            q, k, v, causal=causal, scale=scale, window=window,
+            softcap=softcap, q_pos0=q_pos0,
+        )
+    return _attention_trainable(
+        q, k, v, causal, scale, window, softcap, q_pos0, not _on_tpu()
+    )
+
+
+def attention(q, k, v, *, causal=True, scale=None, window=None, softcap=None, q_pos0=0):
+    """Training/prefill attention entry point (B, H, Sq, hd) x (B, KV, Sk, *).
+
+    Under a registered mesh (repro.models.dist) the computation runs inside
+    shard_map on per-device local shapes: batch over ("pod","data"), heads
+    over "model" when divisible. GQA with fewer KV heads than the TP width
+    keeps K/V replicated and slices the per-rank KV group inside the shard —
+    the standard TP layout for GQA.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.models import dist
+
+    mesh = dist.current_mesh()
+    B, H, Sq, hd = q.shape
+    KV = k.shape[1]
+    kw = dict(causal=causal, scale=scale, window=window, softcap=softcap, q_pos0=q_pos0)
+    if mesh is None or mesh.devices.size == 1:
+        return _local_attention(q, k, v, **kw)
+
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp = 1
+    for a in baxes:
+        dp *= mesh.shape[a]
+    tp = mesh.shape.get("model", 1)
+    b_ax = baxes if B % dp == 0 else None
+    h_sharded = H % tp == 0 and tp > 1
+    kv_sharded = h_sharded and KV % tp == 0
+    h_ax = "model" if h_sharded else None
+    kv_ax = "model" if kv_sharded else None
+
+    G = H // KV
+    h_local = H // tp if h_sharded else H
+
+    def body(ql, kl, vl):
+        if h_sharded and not kv_sharded:
+            # slice this rank's KV group out of the replicated K/V
+            rank = jax.lax.axis_index("model")
+            kv_need = max(1, h_local // G)
+            kv0 = rank * h_local // G
+            kl_ = jax.lax.dynamic_slice_in_dim(kl, kv0, kv_need, axis=1)
+            vl_ = jax.lax.dynamic_slice_in_dim(vl, kv0, kv_need, axis=1)
+        else:
+            kl_, vl_ = kl, vl
+        return _local_attention(ql, kl_, vl_, **kw)
+
+    from jax import shard_map
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(b_ax, h_ax, None, None), P(b_ax, kv_ax, None, None),
+                  P(b_ax, kv_ax, None, None)),
+        out_specs=P(b_ax, h_ax, None, None),
+        check_vma=False,
+    )(q, k, v)
+
+
+@jax.jit
+def l1_distance(u, centers):
+    if _use_pallas():
+        return _l1_kernel(u, centers, interpret=not _on_tpu())
+    return ref.l1_distance_ref(u, centers)
+
+
+@jax.jit
+def merge_attention(v_main, v_aux, v_trained):
+    if _use_pallas():
+        return _merge_kernel(v_main, v_aux, v_trained, interpret=not _on_tpu())
+    return ref.merge_attention_ref(v_main, v_aux, v_trained)[0]
+
+
+@jax.jit
+def chi2_feedback(f_pred, f_true, s_soft):
+    if _use_pallas():
+        return _chi2_kernel(f_pred, f_true, s_soft, interpret=not _on_tpu())
+    return ref.chi2_feedback_ref(f_pred, f_true, s_soft)

@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every Pallas kernel. Tests assert_allclose the
+kernels (interpret=True on CPU) against these across shape/dtype sweeps."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jax.Array,  # (B, H, Sq, hd)
+    k: jax.Array,  # (B, KV, Sk, hd)
+    v: jax.Array,  # (B, KV, Sk, hd)
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_pos0: int = 0,
+) -> jax.Array:
+    B, H, Sq, hd = q.shape
+    KV, Sk, dv = k.shape[1], k.shape[2], v.shape[3]
+    G = H // KV
+    scale = hd**-0.5 if scale is None else scale
+    qg = q.reshape(B, KV, G, Sq, hd)
+    s = jnp.einsum("bkgqd,bksd->bkgqs", qg, k).astype(jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = q_pos0 + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bksd->bkgqd", p.astype(v.dtype), v)
+    return o.reshape(B, H, Sq, dv)
+
+
+def l1_distance_ref(u: jax.Array, centers: jax.Array) -> jax.Array:
+    """u: (N,), centers: (C, N) -> (C,) L1 distances (Eq. 1)."""
+    return jnp.sum(jnp.abs(centers.astype(jnp.float32) - u.astype(jnp.float32)[None, :]), axis=1)
+
+
+def merge_attention_ref(
+    v_main: jax.Array, v_aux: jax.Array, v_trained: jax.Array
+) -> tuple[jax.Array, jax.Array]:
+    """Algorithm 1 lines 2-6: returns (merged, alpha).
+
+    dir_assume = v_aux - v_main (assumed optimization direction)
+    dir_post   = v_trained - v_main (posterior direction after local training)
+    alpha      = relu(dir_assume * dir_post) / max(dir_assume * dir_post)
+    merged     = alpha * v_aux + (1 - alpha) * v_main
+    """
+    da = (v_aux - v_main).astype(jnp.float32)
+    dp = (v_trained - v_main).astype(jnp.float32)
+    p = da * dp
+    denom = jnp.maximum(jnp.max(p), 1e-12)
+    alpha = jnp.maximum(p, 0.0) / denom
+    merged = alpha * v_aux.astype(jnp.float32) + (1.0 - alpha) * v_main.astype(jnp.float32)
+    return merged.astype(v_main.dtype), alpha
+
+
+def chi2_feedback_ref(
+    f_pred: jax.Array,  # (M, J) predicted label histograms
+    f_true: jax.Array,  # (M, J) expected label histograms
+    s_soft: jax.Array,  # (M, J) mean predicted soft-label distributions
+) -> jax.Array:
+    """Eq. 2/3: chi-squared statistic x Var(S_c), batched over M clients."""
+    f_pred = f_pred.astype(jnp.float32)
+    f_true = f_true.astype(jnp.float32)
+    chi2 = jnp.sum(jnp.square(f_pred - f_true) / jnp.maximum(f_true, 1e-6), axis=-1)
+    var = jnp.var(s_soft.astype(jnp.float32), axis=-1)
+    return chi2 * var

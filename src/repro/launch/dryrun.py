@@ -1,0 +1,350 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+)
+# Lower the AD-able reference attention (clean SPMD semantics); the cost
+# model substitutes the Pallas kernels' analytic traffic for its S^2 tensors.
+os.environ.setdefault("REPRO_ATTN_COST_PROXY", "1")
+# ^ The two lines above MUST run before any jax import/init (jax locks the
+# device count on first use), hence no module docstring above them.
+#
+# Multi-pod dry-run: lower + compile every (architecture x input-shape)
+# cell on the production meshes, prove memory fits, and extract the roofline
+# terms (FLOPs / bytes from cost_analysis, collective bytes parsed from the
+# partitioned HLO).
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+#   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+#
+# Each cell writes experiments/dryrun/<arch>__<shape>__<mesh>.json
+# incrementally, so a crash or timeout loses only the in-flight cell.
+
+import argparse
+import dataclasses
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_REGISTRY, SHAPES, supports_shape
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch import specs as SP
+from repro.launch.hlo_cost import analyze as hlo_analyze
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16, batch_axes, make_production_mesh
+from repro.launch.shardings import batch_shardings, cache_shardings, param_shardings, replicated
+from repro.models.steps import make_prefill_step, make_serve_step, make_train_step
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+_SHAPE_RE = re.compile(r"\b(f32|f16|bf16|s32|u32|s8|u8|pred|f64|s64|c64)\[([\d,]*)\]")
+_BYTES = {"f32": 4, "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "s8": 1, "u8": 1,
+          "pred": 1, "f64": 8, "s64": 8, "c64": 8}
+
+
+def parse_collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Sum result-tensor bytes of every collective op in the partitioned HLO.
+    (Per-device program -> per-device collective bytes.)"""
+    out: dict[str, float] = {c: 0.0 for c in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        stripped = line.strip().lstrip("%")
+        m = re.match(r"[\w.\-]+\s*=\s*(.+)", stripped)
+        if not m:
+            continue
+        rhs = m.group(1)
+        op = next((c for c in _COLLECTIVES if f" {c}(" in rhs or rhs.startswith(c + "(")
+                   or f"{c}-start(" in rhs or f" {c}-start(" in rhs), None)
+        if op is None:
+            continue
+        if f"{op}-done" in rhs:
+            continue
+        shapes = _SHAPE_RE.findall(rhs.split("(")[0] + "(")  # result type(s) only
+        nbytes = 0.0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _BYTES[dt]
+        out[op] += nbytes
+        out["count"] += 1
+    return out
+
+
+def sharded_bytes(tree, shardings, mesh) -> float:
+    """Per-device resident bytes implied by the shardings (exact, logical)."""
+    total = 0.0
+    for leaf, sh in zip(jax.tree_util.tree_leaves(tree), jax.tree_util.tree_leaves(shardings)):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        nbytes = n * leaf.dtype.itemsize
+        spec = sh.spec if hasattr(sh, "spec") else None
+        shards = 1
+        if spec:
+            for axes in spec:
+                if axes is None:
+                    continue
+                for a in (axes if isinstance(axes, tuple) else (axes,)):
+                    shards *= mesh.shape[a]
+        total += nbytes / shards
+    return total
+
+
+def lower_cell(cfg: ModelConfig, shape: ShapeSpec, mesh) -> tuple:
+    """Build the jit'd step with shardings and lower it. Returns (lowered,
+    aux dict with logical per-device byte counts)."""
+    dp = 1
+    for a in batch_axes(mesh):
+        dp *= mesh.shape[a]
+    aux: dict = {}
+    if shape.kind == "train":
+        # §Perf execution policy: remat stays ON (measured: disabling it in
+        # favor of deeper microbatching RAISED HBM traffic ~23% — XLA saves
+        # far more f32 residuals without remat; see EXPERIMENTS.md §Perf,
+        # refuted hypothesis). Microbatches are sized so the remat-saved
+        # per-layer inputs fit a ~4GB live-activation budget.
+        import math as _math
+
+        tokens_dev = (shape.global_batch // dp if shape.global_batch % dp == 0
+                      else shape.global_batch) * shape.seq_len
+        saved_inputs = tokens_dev * 2.0 * cfg.d_model * cfg.num_layers
+        want = max(cfg.train.microbatches, _math.ceil(saved_inputs / 4e9))
+        cfg = dataclasses.replace(cfg, train=dataclasses.replace(cfg.train, microbatches=want))
+        n_eff = SP.effective_microbatches(cfg, shape, dp)
+        cfg = dataclasses.replace(
+            cfg, train=dataclasses.replace(cfg.train, microbatches=n_eff, remat=True)
+        )
+        aux["microbatches"] = n_eff
+        aux["remat"] = True
+        spec = SP.input_specs(cfg, shape)
+        state, batch = spec["state"], spec["batch"]
+        state_sh = state._replace(
+            params=param_shardings(cfg, mesh, state.params),
+            opt_state=param_shardings(cfg, mesh, state.opt_state),
+            step=replicated(mesh),
+        )
+        batch_sh = batch_shardings(cfg, shape, mesh, batch)
+        step = make_train_step(cfg)
+        jitted = jax.jit(step, in_shardings=(state_sh, batch_sh), donate_argnums=0)
+        args = (state, batch)
+        aux["state_bytes_per_device"] = sharded_bytes(state, state_sh, mesh)
+    elif shape.kind == "prefill":
+        spec = SP.input_specs(cfg, shape)
+        params, batch = spec["params"], spec["batch"]
+        p_sh = param_shardings(cfg, mesh, params)
+        b_sh = batch_shardings(cfg, shape, mesh, batch)
+        jitted = jax.jit(make_prefill_step(cfg), in_shardings=(p_sh, b_sh))
+        args = (params, batch)
+        aux["state_bytes_per_device"] = sharded_bytes(params, p_sh, mesh)
+    else:  # decode
+        spec = SP.input_specs(cfg, shape)
+        params, cache, batch = spec["params"], spec["cache"], spec["batch"]
+        p_sh = param_shardings(cfg, mesh, params)
+        c_sh = cache_shardings(cfg, mesh, cache, shape.global_batch)
+        b_sh = batch_shardings(cfg, shape, mesh, batch)
+        jitted = jax.jit(make_serve_step(cfg), in_shardings=(p_sh, c_sh, b_sh), donate_argnums=1)
+        args = (params, cache, batch)
+        aux["state_bytes_per_device"] = sharded_bytes(params, p_sh, mesh)
+        aux["cache_bytes_per_device"] = sharded_bytes(cache, c_sh, mesh)
+    with mesh:
+        lowered = jitted.lower(*args)
+    return lowered, aux
+
+
+def flash_attention_analytic_bytes(cfg: ModelConfig, shape: ShapeSpec, mesh, block: int = 1024) -> float:
+    """Per-device HBM traffic of the flash attention kernels (fwd + bwd) for
+    one step, from the tile-streaming model the kernels implement:
+
+        fwd  : q read nk times, k/v read nq times (per kv head), o written
+        bwd  : dq kernel ~ fwd; dkv kernel streams q/do per (group, qi)
+        remat: checkpointed layers recompute fwd before bwd
+
+    These are the bytes the S^2 filter removed from the reference lowering,
+    replaced by what the fused kernel actually moves (EXPERIMENTS.md §Perf)."""
+    attn_layers = sum(1 for l in cfg.all_layers if l.mixer in ("attn", "attn_local"))
+    if attn_layers == 0 or shape.kind == "decode":
+        return 0.0
+    S, B = shape.seq_len, shape.global_batch
+    dp = 1
+    for a in batch_axes(mesh):
+        dp *= mesh.shape[a]
+    tp = mesh.shape.get("model", 1)
+    B_l = B // dp if B % dp == 0 else B
+    H, KV = cfg.num_heads, cfg.num_kv_heads
+    G = max(1, H // KV)
+    h_sharded = H % tp == 0 and tp > 1
+    H_l = H // tp if h_sharded else H
+    if h_sharded and KV % tp != 0:
+        KV_l = max(1, H_l // G)
+    else:
+        KV_l = KV // tp if (h_sharded and KV % tp == 0) else KV
+    if cfg.mla is not None:
+        hd = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+        dv = cfg.mla.v_head_dim
+    else:
+        hd = dv = cfg.resolved_head_dim
+    blk = min(block, S)
+    nq = nk = (S + blk - 1) // blk
+    itemsize = 2  # bf16 activations
+    per_layer = (H_l * nk * S * hd + KV_l * nq * S * (hd + dv) + H_l * S * dv) * B_l * itemsize
+    passes = 4.0 if shape.kind == "train" else 1.0  # fwd + remat-fwd + dq + dkv
+    return attn_layers * per_layer * passes
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float, coll: dict) -> dict:
+    comm = sum(v for k, v in coll.items() if k != "count")
+    return {
+        "compute_s": flops_per_dev / PEAK_FLOPS_BF16,
+        "memory_s": bytes_per_dev / HBM_BW,
+        "collective_s": comm / ICI_BW,
+        "collective_bytes_per_device": comm,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str, skip_existing: bool = False) -> dict:
+    cfg = ARCH_REGISTRY[arch]
+    shape = SHAPES[shape_name]
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    record: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "kind": shape.kind, "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+    }
+    ok, reason = supports_shape(cfg, shape)
+    if not ok:
+        record["status"] = "SKIP"
+        record["reason"] = reason
+        _write(path, record)
+        return record
+
+    try:
+        t0 = time.time()
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        n_dev = mesh.devices.size
+        from repro.models import dist
+
+        with dist.use_mesh(mesh):  # flash attention runs shard_mapped
+            lowered, aux = lower_cell(cfg, shape, mesh)
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                v = getattr(mem, attr, None)
+                if v is not None:
+                    record[attr] = int(v)
+        # raw XLA numbers (loop bodies counted ONCE — kept for reference)
+        cost = compiled.cost_analysis() or {}
+        record["xla_flops_raw"] = float(cost.get("flops", 0.0))
+        record["xla_bytes_raw"] = float(cost.get("bytes accessed", 0.0))
+        # loop-aware analysis (while bodies x known_trip_count) — the real terms
+        t2 = time.time()
+        has_attn = any(l.mixer in ("attn", "attn_local") for l in cfg.all_layers)
+        skip = frozenset()
+        if has_attn and shape.kind in ("train", "prefill"):
+            skip = frozenset({(shape.seq_len, shape.seq_len)})
+        la = hlo_analyze(compiled.as_text(), skip_trailing=skip)
+        record["analyze_s"] = round(time.time() - t2, 1)
+        flops = float(la["flops"])
+        bytes_acc = float(la["bytes"])
+        if skip:
+            flash_bytes = flash_attention_analytic_bytes(cfg, shape, mesh)
+            record["attn_s2_bytes_skipped_once"] = la.get("skipped_bytes_once", 0.0)
+            record["attn_flash_bytes_added"] = flash_bytes
+            bytes_acc += flash_bytes
+        record["hlo_flops_per_device"] = flops
+        record["hlo_bytes_per_device"] = bytes_acc
+        coll = dict(la["collectives"])
+        coll["count"] = la["collective_count"]
+        record["collectives"] = coll
+        record.update(aux)
+        record["devices"] = int(n_dev)
+
+        terms = roofline_terms(flops, bytes_acc, coll)
+        record["roofline"] = terms
+        n_params = SP.model_param_count(cfg)
+        n_active = SP.model_active_param_count(cfg)
+        record["params"] = n_params
+        record["active_params"] = n_active
+        if shape.kind == "train":
+            tokens = shape.seq_len * shape.global_batch
+            record["model_flops"] = 6.0 * n_active * tokens
+        elif shape.kind == "prefill":
+            tokens = shape.seq_len * shape.global_batch
+            record["model_flops"] = 2.0 * n_active * tokens
+        else:
+            record["model_flops"] = 2.0 * n_active * shape.global_batch
+        total_hlo = flops * n_dev
+        record["model_flops_ratio"] = record["model_flops"] / total_hlo if total_hlo else None
+        dominant = max(("compute_s", "memory_s", "collective_s"), key=lambda k: terms[k])
+        record["bottleneck"] = dominant
+        record["status"] = "OK"
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        record["status"] = "FAIL"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    _write(path, record)
+    return record
+
+
+def _write(path: str, record: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = sorted(ARCH_REGISTRY) if (args.all or not args.arch) else [args.arch]
+    shapes = sorted(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if (args.both_meshes or args.all) else [args.multi_pod]
+
+    results = []
+    for multi_pod in meshes:
+        for arch in archs:
+            for shape in shapes:
+                r = run_cell(arch, shape, multi_pod, args.out, args.skip_existing)
+                status = r["status"]
+                extra = ""
+                if status == "OK":
+                    terms = r["roofline"]
+                    extra = (f"compute={terms['compute_s']:.4f}s memory={terms['memory_s']:.4f}s "
+                             f"coll={terms['collective_s']:.4f}s bottleneck={r['bottleneck']} "
+                             f"lower={r['lower_s']}s compile={r['compile_s']}s")
+                elif status == "SKIP":
+                    extra = r["reason"]
+                else:
+                    extra = r["error"][:200]
+                print(f"[{status}] {arch} x {shape} x {r['mesh']}: {extra}", flush=True)
+                results.append(r)
+    n_ok = sum(r["status"] == "OK" for r in results)
+    n_skip = sum(r["status"] == "SKIP" for r in results)
+    n_fail = sum(r["status"] == "FAIL" for r in results)
+    print(f"done: {n_ok} OK, {n_skip} SKIP, {n_fail} FAIL")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

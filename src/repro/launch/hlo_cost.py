@@ -1,0 +1,359 @@
+"""Loop-aware HLO cost analysis.
+
+XLA's ``compiled.cost_analysis()`` counts a while-loop body ONCE, which
+makes it useless for scan-over-layers programs (a 126-layer scanned model
+reports ~1 layer of FLOPs). This module re-derives FLOPs / HBM bytes /
+collective bytes from the optimized HLO text, multiplying each while body
+by its ``known_trip_count`` (present in the backend_config emitted by XLA's
+loop analysis) and recursing through fusions/calls.
+
+Cost model:
+  * flops: dot ops = 2 * |result| * |contracted dims| (batch dims fall out
+    naturally since they appear in the result); elementwise ops = |result|;
+    everything else 0 — matmul-dominated programs are what the MXU roofline
+    term measures.
+  * bytes: per *top-level* op = result + operands; fusion = parameters +
+    result only (internal traffic stays on-chip) — i.e. an HBM-traffic
+    model, not a "every HLO op" model; while = trips * body bytes.
+  * collectives: result bytes per op, bucketed by opcode, trip-multiplied.
+
+Validated against XLA's own cost_analysis on scan-free programs (see
+tests/test_hlo_cost.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+_SHAPE_RE = re.compile(r"\b([a-z]\d*[a-z]*\d*(?:e\d+m\d+\w*)?)\[([\d,]*)\]")
+_OP_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\((.*)$", re.S)
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*?\)\s*->\s*.+\{$")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_ARG_RE = re.compile(r"%([\w.\-]+)")
+
+_ZERO_BYTE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "iota",
+}
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "exponential", "tanh", "negate", "rsqrt", "sqrt", "log", "power",
+    "and", "or", "xor", "not", "compare", "select", "clamp", "convert",
+    "floor", "ceil", "sign", "cosine", "sine", "logistic", "expm1", "log1p",
+    "remainder", "atan2", "cbrt",
+}
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all", "collective-permute")
+
+
+def _shape_info(type_str: str) -> tuple[int, int]:
+    """(element_count_total, byte_count_total) over possibly-tuple types."""
+    elems = 0
+    nbytes = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dtype]
+    return elems, nbytes
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # args + attrs (everything after the opening paren)
+    is_root: bool = False
+
+
+class HloCostModel:
+    def __init__(self, hlo_text: str, skip_trailing: frozenset = frozenset()):
+        """``skip_trailing``: set of (dim_-2, dim_-1) trailing-shape pairs
+        whose tensors are EXCLUDED from byte accounting. The dry-run uses it
+        to remove the reference attention's materialized S^2 score tensors,
+        whose HBM traffic the fused Pallas kernels eliminate; the kernels'
+        analytic streaming traffic is added back by the caller (see
+        launch/dryrun.py and EXPERIMENTS.md §Perf iteration 1)."""
+        self.skip_trailing = skip_trailing
+        self.comps: dict[str, list[_Op]] = {}
+        self.entry: str | None = None
+        self._parse(hlo_text)
+        self._symtab: dict[str, dict[str, str]] = {
+            cname: {op.name: op.type_str for op in ops} for cname, ops in self.comps.items()
+        }
+        self._cache: dict[str, dict] = {}
+        self.skipped_bytes = 0.0
+
+    def _parse(self, text: str) -> None:
+        current = None
+        for raw in text.splitlines():
+            line = raw.strip()
+            if not line or line.startswith(("HloModule", "//", "#")):
+                continue
+            mc = _COMP_RE.match(line)
+            if mc and "=" not in line.split("(")[0]:
+                current = mc.group(2)
+                self.comps[current] = []
+                if mc.group(1):
+                    self.entry = current
+                continue
+            if line.startswith("}"):
+                continue
+            if current is None:
+                continue
+            mo = _OP_RE.match(line)
+            if mo:
+                self.comps[current].append(
+                    _Op(mo.group(1), mo.group(2), mo.group(3), mo.group(4),
+                        is_root=line.startswith("ROOT"))
+                )
+
+    # ------------------------------------------------------------------
+    def cost(self, comp: str | None = None) -> dict:
+        comp = comp or self.entry
+        if comp in self._cache:
+            return self._cache[comp]
+        total = {"flops": 0.0, "bytes": 0.0, "collectives": defaultdict(float), "collective_count": 0.0}
+        sym = self._symtab.get(comp, {})
+        for op in self.comps.get(comp, []):
+            self._add_op(op, sym, total)
+        total["collectives"] = dict(total["collectives"])
+        self._cache[comp] = total
+        return total
+
+    def _bytes(self, type_str: str) -> int:
+        """Byte count of a (possibly tuple) type, excluding skip_trailing
+        shapes; excluded bytes are tallied in self.skipped_bytes."""
+        total = 0
+        for dtype, dims in _SHAPE_RE.findall(type_str):
+            if dtype not in _DTYPE_BYTES:
+                continue
+            d = [int(x) for x in dims.split(",") if x]
+            n = 1
+            for x in d:
+                n *= x
+            nb = n * _DTYPE_BYTES[dtype]
+            if len(d) >= 2 and (d[-2], d[-1]) in self.skip_trailing:
+                self.skipped_bytes += nb
+                continue
+            total += nb
+        return total
+
+    def _operand_bytes(self, op: _Op, sym: dict[str, str]) -> int:
+        args_part = op.rest.split("), ")[0] if "), " in op.rest else op.rest.rstrip(")")
+        nbytes = 0
+        for ref in _ARG_RE.findall(args_part):
+            t = sym.get(ref)
+            if t:
+                nbytes += self._bytes(t)
+        return nbytes
+
+    def _operand_bytes_list(self, op: _Op, sym: dict[str, str]) -> list[int]:
+        args_part = op.rest.split("), ")[0] if "), " in op.rest else op.rest.rstrip(")")
+        out = []
+        for ref in _ARG_RE.findall(args_part):
+            t = sym.get(ref)
+            if t:
+                out.append(self._bytes(t))
+        return out
+
+    def _root(self, comp: str) -> _Op | None:
+        ops = self.comps.get(comp, [])
+        for op in ops:
+            if op.is_root:
+                return op
+        return ops[-1] if ops else None
+
+    def _fusion_param_bytes(self, comp: str) -> int:
+        """Bill a fusion's inputs honoring internal slicing: a parameter
+        consumed ONLY by dynamic-slice/gather ops inside the body is read
+        window-at-a-time (the scan-xs pattern), not in full."""
+        body = self.comps.get(comp, [])
+        consumers: dict[str, list[_Op]] = {}
+        for o in body:
+            args_part = o.rest.split("), ")[0] if "), " in o.rest else o.rest.rstrip(")")
+            for ref in _ARG_RE.findall(args_part):
+                consumers.setdefault(ref, []).append(o)
+        total = 0
+        for o in body:
+            if o.opcode != "parameter":
+                continue
+            full = self._bytes(o.type_str)
+            cs = consumers.get(o.name, [])
+            if cs and all(c.opcode in ("dynamic-slice", "gather") for c in cs):
+                # window billing never exceeds the full read (index scalars
+                # also feed the slice op; they stay billed at scalar size)
+                total += min(full, sum(self._bytes(c.type_str) for c in cs))
+            else:
+                total += full
+        return total
+
+    def _inplace_update_bytes(self, comp: str) -> int | None:
+        """If a fusion's root is dynamic-update-slice, XLA executes it in
+        place: HBM traffic is the small inputs + 2x the update region, NOT
+        the full carried buffer. Returns the update-region bytes (or None)."""
+        root = self._root(comp)
+        if root is None or root.opcode != "dynamic-update-slice":
+            return None
+        sym = self._symtab.get(comp, {})
+        operands = self._operand_bytes_list(root, sym)
+        # operand 0 = big buffer, operand 1 = update region
+        return operands[1] if len(operands) >= 2 else None
+
+    def _add_op(self, op: _Op, sym: dict[str, str], total: dict) -> None:
+        elems, _ = _shape_info(op.type_str)
+        res_bytes = self._bytes(op.type_str)
+        oc = op.opcode
+        if oc == "while":
+            trips = 1
+            mt = _TRIP_RE.search(op.rest)
+            if mt:
+                trips = int(mt.group(1))
+            mb = _BODY_RE.search(op.rest)
+            if mb:
+                body = self.cost(mb.group(1))
+                total["flops"] += trips * body["flops"]
+                total["bytes"] += trips * body["bytes"]
+                for k, v in body["collectives"].items():
+                    total["collectives"][k] += trips * v
+                total["collective_count"] += trips * body["collective_count"]
+            return
+        if oc in ("fusion", "call", "async-start"):
+            m = _CALLS_RE.search(op.rest) or _TO_APPLY_RE.search(op.rest)
+            upd = None
+            comp_name = m.group(1) if m and m.group(1) in self.comps else None
+            if comp_name:
+                inner = self.cost(comp_name)
+                total["flops"] += inner["flops"]
+                for k, v in inner["collectives"].items():
+                    total["collectives"][k] += v
+                total["collective_count"] += inner["collective_count"]
+                upd = self._inplace_update_bytes(comp_name)
+            if upd is not None and comp_name:
+                # in-place DUS fusion: slice-aware inputs minus the aliased
+                # buffer, plus read+write of the update region
+                param_bytes = self._fusion_param_bytes(comp_name)
+                biggest = max(self._operand_bytes_list(op, sym), default=0)
+                total["bytes"] += max(0, param_bytes - biggest) + 2 * upd
+            elif comp_name:
+                # HBM traffic of a fusion = inputs (window-billed) + outputs
+                total["bytes"] += res_bytes + self._fusion_param_bytes(comp_name)
+            else:
+                total["bytes"] += res_bytes + self._operand_bytes(op, sym)
+            return
+        coll = next((c for c in _COLLECTIVES if oc == c or oc == c + "-start"), None)
+        if coll:
+            total["collectives"][coll] += res_bytes
+            total["collective_count"] += 1
+            total["bytes"] += res_bytes + self._operand_bytes(op, sym)
+            return
+        if oc in _ZERO_BYTE_OPS or oc.endswith("-done"):
+            return
+        if oc == "dynamic-update-slice":
+            # executed in place: read+write the update region only
+            operands = self._operand_bytes_list(op, sym)
+            upd = operands[1] if len(operands) >= 2 else res_bytes
+            total["bytes"] += 2 * upd + sum(operands[2:])
+            return
+        if oc in ("dynamic-slice", "gather"):
+            # reads only the sliced/gathered elements, not the whole source
+            total["bytes"] += 2 * res_bytes
+            return
+        if oc == "scatter":
+            operands = self._operand_bytes_list(op, sym)
+            upd = operands[2] if len(operands) >= 3 else res_bytes
+            total["bytes"] += 2 * upd + (operands[1] if len(operands) >= 2 else 0)
+            return
+        if oc == "dot":
+            contract = 1
+            mlc = _LHS_CONTRACT_RE.search(op.rest)
+            first_arg = _ARG_RE.search(op.rest)
+            if mlc and first_arg:
+                lhs_t = sym.get(first_arg.group(1), "")
+                m_sh = _SHAPE_RE.search(lhs_t)
+                if m_sh:
+                    dims = [int(d) for d in m_sh.group(2).split(",") if d]
+                    for idx in mlc.group(1).split(","):
+                        if idx and int(idx) < len(dims):
+                            contract *= dims[int(idx)]
+            total["flops"] += 2.0 * elems * contract
+            total["bytes"] += res_bytes + self._operand_bytes(op, sym)
+            return
+        if oc in _ELEMENTWISE:
+            total["flops"] += float(elems)
+        total["bytes"] += res_bytes + self._operand_bytes(op, sym)
+
+
+def analyze(hlo_text: str, skip_trailing: frozenset = frozenset()) -> dict:
+    """Entry-point: loop-aware {flops, bytes, collectives{op: bytes}, count}."""
+    model = HloCostModel(hlo_text, skip_trailing=skip_trailing)
+    out = model.cost()
+    out["collective_bytes"] = float(sum(out["collectives"].values()))
+    out["skipped_bytes_once"] = float(model.skipped_bytes)  # pre-trip-multiplied
+    return out
+
+
+def top_dots(hlo_text: str, n: int = 20) -> list[tuple[float, str, str]]:
+    """Debug view: the top-n dot ops by trip-multiplied FLOPs.
+    Returns (flops, computation, op line snippet)."""
+    model = HloCostModel(hlo_text)
+    # trip multiplier per computation: entry = 1; while bodies *= trips
+    mult: dict[str, float] = {model.entry: 1.0}
+    changed = True
+    while changed:
+        changed = False
+        for cname, ops in model.comps.items():
+            if cname not in mult:
+                continue
+            for op in ops:
+                if op.opcode == "while":
+                    mb = _BODY_RE.search(op.rest)
+                    mt = _TRIP_RE.search(op.rest)
+                    if mb:
+                        m = mult[cname] * (int(mt.group(1)) if mt else 1)
+                        if mult.get(mb.group(1)) != m:
+                            mult[mb.group(1)] = m
+                            changed = True
+                elif op.opcode in ("fusion", "call", "async-start"):
+                    mc = _CALLS_RE.search(op.rest) or _TO_APPLY_RE.search(op.rest)
+                    if mc and mc.group(1) in model.comps:
+                        if mult.get(mc.group(1), 0) < mult[cname]:
+                            mult[mc.group(1)] = mult[cname]
+                            changed = True
+    rows = []
+    for cname, ops in model.comps.items():
+        sym = model._symtab[cname]
+        m = mult.get(cname, 1.0)
+        for op in ops:
+            if op.opcode != "dot":
+                continue
+            elems, _ = _shape_info(op.type_str)
+            contract = 1
+            mlc = _LHS_CONTRACT_RE.search(op.rest)
+            fa = _ARG_RE.search(op.rest)
+            if mlc and fa:
+                msh = _SHAPE_RE.search(sym.get(fa.group(1), ""))
+                if msh:
+                    dims = [int(d) for d in msh.group(2).split(",") if d]
+                    for idx in mlc.group(1).split(","):
+                        if idx and int(idx) < len(dims):
+                            contract *= dims[int(idx)]
+            rows.append((m * 2.0 * elems * contract, cname,
+                         f"x{m:g} {op.type_str[:60]} dot({op.rest[:120]}"))
+    rows.sort(reverse=True)
+    return rows[:n]

@@ -1,0 +1,39 @@
+"""Production mesh definitions.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state — the dry-run must set XLA_FLAGS before any jax
+initialization.
+
+Single pod: (16, 16) = 256 chips, axes (data, model).
+Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod axis
+is pure data parallelism across pods (or, in EchoPFL-over-pods mode, one FL
+client per pod slice).
+"""
+from __future__ import annotations
+
+import jax
+
+# TPU v5e roofline constants (per chip) — used by benchmarks/bench_roofline.
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # bytes/s
+ICI_BW = 50e9  # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_smoke_mesh() -> jax.sharding.Mesh:
+    """1-device mesh with the production axis names — smoke tests and the
+    quickstart use it so the same shardings lower everywhere."""
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def axis_size(mesh: jax.sharding.Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1

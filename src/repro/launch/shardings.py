@@ -1,0 +1,225 @@
+"""Sharding rules: parameter/optimizer/cache/batch PartitionSpecs for every
+architecture on the production mesh.
+
+Policy (GSPMD; see DESIGN.md §5):
+  * batch dims        -> ("pod", "data")           (DP across pods + within)
+  * heads / FFN / d_inner dims -> "model"          (TP)
+  * vocab             -> "model"
+  * MoE experts       -> TP over d_expert by default (always divisible);
+                         expert-parallel variant available for §Perf
+  * ZeRO (train.dp_shard_params): additionally shard the first divisible,
+    not-yet-sharded dim over "data" — optimizer state and params then live
+    FSDP-style and XLA inserts the all-gathers.
+
+Rules are *name + shape* driven: a leaf path's last known name selects the
+logical rule; the rule is then fitted to the actual leaf rank/divisibility
+(optimizer slots like Adafactor's factored vr/vc reuse their parameter's
+rule truncated to their rank). Anything unmatched is replicated — correct,
+just not maximally parallel, and flagged by the dry-run report.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.launch.mesh import axis_size, batch_axes
+
+PyTree = Any
+
+# Logical rule per leaf name: for each dim, a priority list of mesh axes to
+# try ("model"/"data"), or None (replicate). Fitted against divisibility.
+_RULES: dict[str, tuple] = {
+    # embedding / head
+    "embed": ("model", "data"),           # (V, D)
+    "lm_head": ("data", "model"),         # (D, V)
+    # attention
+    "wq": ("data", "model", None),        # (D, H, hd)
+    "wk": ("data", "model", None),
+    "wv": ("data", "model", None),
+    "wo": ("model", None, "data"),        # (H, hd, D)
+    # MLA
+    "w_dkv": ("data", "model"),           # (D, lora+rope)
+    "w_ukv": ("data", "model", None),     # (lora, H, nope+v)
+    # dense ffn
+    "wg": ("data", "model"),              # (D, F)  [or (E, D, De) for MoE]
+    "wu": ("data", "model"),
+    "wd": ("model", "data"),              # (F, D)  [or (E, De, D)]
+    "router": (None, None),
+    # mamba
+    "w_in": ("data", "model"),            # (D, 2Di)
+    "conv_w": (None, "model"),            # (dc, Di)
+    "conv_b": ("model",),
+    "w_x": ("model", None),               # (Di, dt_rank + 2 ds)
+    "w_dt": (None, "model"),              # (dt_rank, Di)
+    "dt_bias": ("model",),
+    "A_log": ("model", None),             # (Di, ds)
+    "D": ("model",),
+    "w_out": ("model", "data"),           # (Di, D)
+    # xLSTM
+    "w_up": ("data", "model"),            # (D, 2Di)
+    "w_i": ("model", None),
+    "w_f": ("model", None),
+    "f_bias": (None,),
+    "w_down": ("model", "data"),          # (Di, D)
+    "wgx": ("data", None, "model"),       # (D, 4, D) gate-aligned channel TP
+    "wgh": ("data", None, "model"),
+    "gbias": (None, "model"),
+    "bias": ("model",),
+    "ffn_up": ("data", "model"),
+    "ffn_down": ("model", "data"),
+    "b_out": (None,),
+    "w_out_rnn": (None, None),
+}
+
+_MOE_RULES = {
+    "wg": (None, "data", "model"),        # (E, D, De): TP over De
+    "wu": (None, "data", "model"),
+    "wd": (None, "model", "data"),        # (E, De, D)
+}
+
+_MOE_EP_RULES = {
+    "wg": ("model", "data", None),        # (E, D, De): expert-parallel over E
+    "wu": ("model", "data", None),
+    "wd": ("model", None, "data"),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None)
+        if isinstance(key, str) and key in _RULES or isinstance(key, str) and key in ("scale",):
+            return key
+        if isinstance(key, str) and not key.startswith(("slot", "mu", "nu", "vr", "vc", "slots")):
+            return key
+    return ""
+
+
+def _is_moe_leaf(path) -> bool:
+    names = [getattr(e, "key", None) for e in path]
+    return "ffn" in names and any(n in ("router", "shared") or n is None for n in names) or False
+
+
+def _fit(rule: tuple, shape: tuple, mesh: Mesh, zero: bool) -> P:
+    """Fit a logical rule to a concrete shape: keep an axis only if the dim
+    divides; 'data' axes only when ZeRO is on; truncate/extend to rank."""
+    specs = []
+    used: set[str] = set()
+    rule = rule[: len(shape)] + (None,) * max(0, len(shape) - len(rule))
+    # offset alignment: factored slots drop trailing dims; align rule from dim 0
+    for dim, want in zip(shape, rule):
+        axis = None
+        if want == "model" and "model" in mesh.axis_names and dim % axis_size(mesh, "model") == 0 and "model" not in used:
+            axis = "model"
+        elif want == "data" and zero and dim % axis_size(mesh, "data") == 0 and "data" not in used:
+            axis = "data"
+        specs.append(axis)
+        if axis:
+            used.add(axis)
+    return P(*specs)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, shapes: PyTree) -> PyTree:
+    """NamedShardings for a params-shaped pytree (params, grads, or any
+    optimizer slot tree whose leaf names mirror param names)."""
+    zero = cfg.train.dp_shard_params
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    out = []
+    for path, leaf in flat:
+        names = [getattr(e, "key", None) for e in path]
+        name = ""
+        for key in reversed(names):
+            if isinstance(key, str) and key in _RULES:
+                name = key
+                break
+        moe = "ffn" in names and name in _MOE_RULES and len(leaf.shape) == 3 and cfg.moe is not None
+        # 'shared' expert FFN under moe uses the dense 2-D rules
+        if "shared" in names:
+            moe = False
+        if name == "w_h" and "wh0" in str(names):
+            name = ""
+        if moe:
+            rule = _MOE_RULES[name]
+        elif name:
+            rule = _RULES[name]
+        else:
+            rule = (None,) * len(leaf.shape)
+        # scanned-period params are STACKED: (num_periods, *logical_shape).
+        # The logical rule must shift right by one dim, otherwise "model"
+        # lands on d_model instead of d_ff/heads and every contraction
+        # becomes partial-sums + a full-activation all-reduce (§Perf iter 2).
+        if "blocks" in names and len(leaf.shape) == len(rule) + 1:
+            rule = (None,) + rule
+        spec = _fit(rule, leaf.shape, mesh, zero)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh) -> NamedSharding:
+    return NamedSharding(mesh, P())
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh, batch_shapes: PyTree) -> PyTree:
+    """Shard the batch dim over (pod, data); fall back to replication when
+    the batch is too small (long_500k's batch=1)."""
+    baxes = batch_axes(mesh)
+    dp = 1
+    for a in baxes:
+        dp *= axis_size(mesh, a)
+
+    def spec(leaf):
+        if leaf.shape and leaf.shape[0] % dp == 0:
+            return NamedSharding(mesh, P(baxes, *(None,) * (len(leaf.shape) - 1)))
+        return NamedSharding(mesh, P())
+
+    return jax.tree_util.tree_map(spec, batch_shapes)
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shapes: PyTree, global_batch: int) -> PyTree:
+    """Decode-buffer shardings. Batch over (pod, data) when divisible;
+    otherwise (long_500k, batch=1) shard the sequence dim of attention
+    buffers over "data". Head/feature dims go to "model" via divisibility.
+    """
+    baxes = batch_axes(mesh)
+    dp = 1
+    for a in baxes:
+        dp *= axis_size(mesh, a)
+    tp = axis_size(mesh, "model")
+
+    def spec(path, leaf):
+        names = [getattr(e, "key", None) for e in path]
+        name = next((k for k in reversed(names) if isinstance(k, str)), "")
+        shp = leaf.shape
+        if name == "len" or not shp:
+            return NamedSharding(mesh, P())
+        batch_ok = shp[0] % dp == 0 and shp[0] >= dp
+        b_spec = baxes if batch_ok else None
+        if name in ("k", "v"):  # (B, S, KV, hd)
+            kv_ok = shp[2] % tp == 0
+            hd_ok = shp[3] % tp == 0
+            seq_spec = None if batch_ok else ("data" if shp[1] % axis_size(mesh, "data") == 0 else None)
+            if kv_ok:
+                return NamedSharding(mesh, P(b_spec, seq_spec, "model", None))
+            if hd_ok:
+                return NamedSharding(mesh, P(b_spec, seq_spec, None, "model"))
+            return NamedSharding(mesh, P(b_spec, seq_spec, None, None))
+        if name in ("ckv", "krope"):  # (B, S, r)
+            seq_spec = None if batch_ok else ("data" if shp[1] % axis_size(mesh, "data") == 0 else None)
+            r_ok = shp[2] % tp == 0
+            return NamedSharding(mesh, P(b_spec, seq_spec, "model" if r_ok else None))
+        if name == "conv":  # (B, dc-1, Di)
+            return NamedSharding(mesh, P(b_spec, None, "model" if shp[2] % tp == 0 else None))
+        if name == "ssm":  # (B, Di, ds)
+            return NamedSharding(mesh, P(b_spec, "model" if shp[1] % tp == 0 else None, None))
+        if name == "C":  # (B, h, hd, hd)
+            return NamedSharding(mesh, P(b_spec, None, None, "model" if shp[3] % tp == 0 else None))
+        if name in ("n", "m", "c", "h"):
+            last_ok = shp[-1] % tp == 0
+            mid = (None,) * (len(shp) - 2)
+            return NamedSharding(mesh, P(b_spec, *mid, "model" if last_ok and len(shp) > 1 else None))
+        return NamedSharding(mesh, P(b_spec, *(None,) * (len(shp) - 1)))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    return jax.tree_util.tree_unflatten(treedef, [spec(p, l) for p, l in flat])

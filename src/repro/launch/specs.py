@@ -1,0 +1,110 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) cell — the dry-run
+lowers against these, so no host memory is ever allocated for the 405B-class
+models. Frontend-stub archs (pixtral/hubert) get precomputed patch/frame
+embeddings instead of tokens, per the brief.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models.model import init_cache, init_params
+from repro.models.steps import TrainState, make_optimizer
+
+PyTree = Any
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def effective_microbatches(cfg: ModelConfig, shape: ShapeSpec, dp: int) -> int:
+    """Largest n <= requested with n | global_batch and dp | (global_batch/n):
+    every microbatch must still shard evenly over the data axes."""
+    want = max(1, cfg.train.microbatches)
+    per_dp = shape.global_batch // dp if shape.global_batch % dp == 0 else 1
+    n = 1
+    for cand in range(1, want + 1):
+        if shape.global_batch % cand == 0 and (shape.global_batch // cand) % max(dp, 1) == 0:
+            n = cand
+    del per_dp
+    return n
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embeds_input:
+        return {
+            "embeds": sds((B, S, cfg.d_model), dtype),
+            "labels": sds((B, S), jnp.int32),
+        }
+    return {"tokens": sds((B, S), jnp.int32), "labels": sds((B, S), jnp.int32)}
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.embeds_input:
+        return {"embeds": sds((B, S, cfg.d_model), dtype)}
+    return {"tokens": sds((B, S), jnp.int32)}
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    return {"tokens": sds((shape.global_batch, 1), jnp.int32)}
+
+
+def state_specs(cfg: ModelConfig, dtype=jnp.bfloat16) -> TrainState:
+    """TrainState ShapeDtypeStructs via eval_shape — zero allocation."""
+    opt = make_optimizer(cfg)
+
+    def build():
+        params = init_params(cfg, jax.random.PRNGKey(0), dtype)
+        return TrainState(params=params, opt_state=opt.init(params), step=jnp.zeros((), jnp.int32))
+
+    return jax.eval_shape(build)
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16) -> PyTree:
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, ctx_len=shape.seq_len, dtype=dtype)
+    )
+
+
+def param_specs(cfg: ModelConfig, dtype=jnp.bfloat16) -> PyTree:
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, dtype=jnp.bfloat16) -> dict:
+    """Everything the dry-run needs to lower the cell's step function."""
+    if shape.kind == "train":
+        return {"state": state_specs(cfg, dtype), "batch": train_batch_specs(cfg, shape, dtype)}
+    if shape.kind == "prefill":
+        return {"params": param_specs(cfg, dtype), "batch": prefill_batch_specs(cfg, shape, dtype)}
+    if shape.kind == "decode":
+        return {
+            "params": param_specs(cfg, dtype),
+            "cache": cache_specs(cfg, shape, dtype),
+            "batch": decode_batch_specs(cfg, shape),
+        }
+    raise ValueError(shape.kind)
+
+
+def model_param_count(cfg: ModelConfig) -> int:
+    """Exact parameter count from eval_shape (no allocation)."""
+    shapes = param_specs(cfg)
+    return sum(math.prod(l.shape) if l.shape else 1 for l in jax.tree_util.tree_leaves(shapes))
+
+
+def model_active_param_count(cfg: ModelConfig) -> int:
+    """Active params/token: total minus inactive routed experts."""
+    total = model_param_count(cfg)
+    if cfg.moe is None:
+        return total
+    moe_layers = sum(1 for l in cfg.all_layers if l.ffn == "moe")
+    per_expert = 3 * cfg.d_model * cfg.moe.d_expert
+    inactive = moe_layers * (cfg.moe.num_experts - cfg.moe.top_k) * per_expert
+    return total - inactive

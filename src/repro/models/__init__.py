@@ -1,0 +1,17 @@
+from repro.models.model import forward, init_params, init_cache
+from repro.models.steps import (
+    make_eval_step,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+
+__all__ = [
+    "forward",
+    "init_params",
+    "init_cache",
+    "make_train_step",
+    "make_eval_step",
+    "make_prefill_step",
+    "make_serve_step",
+]

@@ -1,0 +1,62 @@
+"""Distribution context for model internals.
+
+The launch layer (dryrun / train / serve) registers the active mesh here so
+that shape-aware layers (flash attention under shard_map) can map themselves
+onto per-device local shapes. Tests and single-device examples leave it
+unset and get the plain single-device code path.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_MESH: jax.sharding.Mesh | None = None
+
+
+def set_mesh(mesh: jax.sharding.Mesh | None) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def current_mesh() -> jax.sharding.Mesh | None:
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: jax.sharding.Mesh):
+    prev = _MESH
+    set_mesh(mesh)
+    try:
+        yield
+    finally:
+        set_mesh(prev)
+
+
+def constrain(x: jax.Array, *dims: str | None) -> jax.Array:
+    """with_sharding_constraint by logical dim names ("batch" | "model" |
+    None), fitted to divisibility. No-op without a registered mesh.
+
+    GSPMD occasionally replicates large layer intermediates (the
+    "involuntary full rematerialization" path) instead of keeping them
+    TP-sharded; pinning the FFN/MoE intermediates removes d_ff-sized
+    all-reduces from the backward pass (EXPERIMENTS.md §Perf iteration 2)."""
+    mesh = _MESH
+    if mesh is None or mesh.devices.size == 1:
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dp = 1
+    for a in baxes:
+        dp *= mesh.shape[a]
+    spec = []
+    for size, want in zip(x.shape, dims):
+        if want == "batch" and size % dp == 0:
+            spec.append(baxes)
+        elif want == "model" and size % mesh.shape.get("model", 1) == 0:
+            spec.append("model")
+        else:
+            spec.append(None)
+    spec += [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,669 @@
+"""Layer primitives for the architecture zoo.
+
+Everything is functional: ``init_*`` returns a params dict, ``apply_*``
+consumes (params, activations, ...). Mixers optionally take/return a decode
+cache; ``cache=None`` means full-sequence (train/prefill) mode.
+
+Numerics policy: params in ``param_dtype``, matmuls in ``compute_dtype``,
+softmax/gating/normalizers in float32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+PyTree = Any
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / math.sqrt(max(in_axis_size, 1))
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(d: int, dtype) -> PyTree:
+    return {"scale": jnp.zeros((d,), dtype)}  # gemma-style (1 + scale)
+
+
+def rms_norm(params: PyTree, x: jax.Array, eps: float) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    normed = x32 * jax.lax.rsqrt(var + eps)
+    return (normed * (1.0 + params["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd) rotated pairwise; positions: (..., S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (reference path — the Pallas flash kernel is the TPU hot path,
+# selected in kernels/ops.py; this jnp version is the oracle + CPU path)
+# ---------------------------------------------------------------------------
+
+
+def attention_scores_reference(
+    q: jax.Array,  # (B, Sq, H, hd)
+    k: jax.Array,  # (B, Sk, KV, hd)
+    v: jax.Array,  # (B, Sk, KV, hd)
+    *,
+    causal: bool,
+    scale: float,
+    window: int | None = None,
+    softcap: float | None = None,
+    q_pos0: jax.Array | int = 0,
+    chunk_q: int | None = None,
+) -> jax.Array:
+    """Grouped-query attention with optional sliding window and logit softcap.
+
+    KV heads are expanded to H before the einsums (Megatron-style KV
+    replication). This keeps every activation's head dim == H, which GSPMD
+    can shard over the model axis even when TP > KV (the (KV, G) grouped
+    formulation blocks propagation there and silently replicates the O(S^2)
+    attention compute — a 6x FLOP regression found in the dry-run roofline;
+    see EXPERIMENTS.md §Perf iteration 1).
+
+    For long sequences pass ``chunk_q`` to bound peak memory at
+    O(chunk_q * Sk) instead of O(Sq * Sk) (memory-efficient attention).
+    """
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    if G != 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :], (B, k.shape[1], KV, G, k.shape[-1]))
+        k = k.reshape(B, k.shape[1], H, k.shape[-1])
+        v = jnp.broadcast_to(v[:, :, :, None, :], (B, v.shape[1], KV, G, v.shape[-1]))
+        v = v.reshape(B, v.shape[1], H, v.shape[-1])
+
+    def block(q_blk, q_pos_blk):
+        # q_blk: (B, sq, H, hd); scores (B, H, sq, Sk)
+        s = jnp.einsum("bqhd,bshd->bhqs", q_blk, k).astype(jnp.float32) * scale
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        k_pos = jnp.arange(k.shape[1])
+        mask = jnp.ones((q_blk.shape[1], k.shape[1]), bool)
+        if causal:
+            mask &= q_pos_blk[:, None] >= k_pos[None, :]
+        if window is not None:
+            mask &= (q_pos_blk[:, None] - k_pos[None, :]) < window
+        s = jnp.where(mask, s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v)
+        return o
+
+    q_positions = q_pos0 + jnp.arange(Sq)
+    if chunk_q is None or Sq <= chunk_q:
+        out = block(q, q_positions)
+    else:
+        n = Sq // chunk_q
+        qs = q[:, : n * chunk_q].reshape(B, n, chunk_q, H, hd)
+        ps = q_positions[: n * chunk_q].reshape(n, chunk_q)
+        out = jax.lax.map(lambda args: block(*args), (qs.swapaxes(0, 1), ps))
+        out = out.swapaxes(0, 1).reshape(B, n * chunk_q, H, v.shape[-1])
+        if n * chunk_q < Sq:  # ragged tail
+            tail = block(q[:, n * chunk_q :], q_positions[n * chunk_q :])
+            out = jnp.concatenate([out, tail], axis=1)
+    return out
+
+
+def init_attention(key, cfg: ModelConfig, dtype) -> PyTree:
+    d, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+        return {
+            "wq": _dense_init(ks[0], (d, H, qk_dim), d, dtype),
+            "w_dkv": _dense_init(ks[1], (d, m.kv_lora_rank + m.qk_rope_head_dim), d, dtype),
+            "w_ukv": _dense_init(
+                ks[2], (m.kv_lora_rank, H, m.qk_nope_head_dim + m.v_head_dim), m.kv_lora_rank, dtype
+            ),
+            "wo": _dense_init(ks[3], (H, m.v_head_dim, d), H * m.v_head_dim, dtype),
+            "kv_norm": init_rmsnorm(m.kv_lora_rank, dtype),
+        }
+    return {
+        "wq": _dense_init(ks[0], (d, H, hd), d, dtype),
+        "wk": _dense_init(ks[1], (d, KV, hd), d, dtype),
+        "wv": _dense_init(ks[2], (d, KV, hd), d, dtype),
+        "wo": _dense_init(ks[3], (H, hd, d), H * hd, dtype),
+    }
+
+
+def apply_attention(
+    params: PyTree,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    *,
+    local: bool,
+    cache: PyTree | None = None,
+    pos0: jax.Array | int = 0,
+    return_cache: bool = False,
+):
+    """Returns (out, new_cache). Cache layout:
+      standard: {"k": (B, S_ctx, KV, hd), "v": ...}
+      MLA:      {"ckv": (B, S_ctx, lora), "krope": (B, S_ctx, rope_dim)}
+    In decode mode (cache is not None) S is the new-token count (1)."""
+    if cfg.mla is not None:
+        return _apply_mla(params, x, cfg, cache=cache, pos0=pos0, return_cache=return_cache)
+    B, S, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    positions = pos0 + jnp.arange(S)
+    q = rope(q, positions, cfg.rope_theta) if not cfg.is_encoder else q
+    k = rope(k, positions, cfg.rope_theta) if not cfg.is_encoder else k
+    new_entries = {"k": k, "v": v}
+    if cache is not None:
+        k = jnp.concatenate([cache["k"], k], axis=1)
+        v = jnp.concatenate([cache["v"], v], axis=1)
+    scale = (
+        cfg.query_pre_attn_scalar ** -0.5 if cfg.query_pre_attn_scalar is not None else hd**-0.5
+    )
+    # flash kernels (fwd + bwd) via ops.attention — (B,H,S,hd) layout; falls
+    # back to the materialized-S^2 reference under REPRO_KERNELS=ref
+    from repro.kernels import ops as K
+
+    out = K.attention(
+        jnp.swapaxes(q, 1, 2),
+        jnp.swapaxes(k, 1, 2),
+        jnp.swapaxes(v, 1, 2),
+        causal=cfg.causal,
+        scale=scale,
+        window=cfg.sliding_window if local else None,
+        softcap=cfg.attn_logit_softcap,
+        q_pos0=pos0,
+    )
+    out = jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+    return out, (new_entries if return_cache else None)
+
+
+def _apply_mla(params, x, cfg: ModelConfig, *, cache, pos0, return_cache):
+    """DeepSeek-V2 multi-head latent attention. The cache holds only the
+    compressed latent (kv_lora_rank) + shared rope key — the arch's whole
+    point: 512+64 dims instead of 2*16*192 per token."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])  # (B,S,H,nope+rope)
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim :]
+    positions = pos0 + jnp.arange(S)
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dr->bsr", x, params["w_dkv"])  # (B,S,lora+rope)
+    ckv, k_rope = dkv[..., : m.kv_lora_rank], dkv[..., m.kv_lora_rank :]
+    ckv = rms_norm(params["kv_norm"], ckv, cfg.norm_eps)
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    new_entries = {"ckv": ckv, "krope": k_rope}
+    if cache is not None:
+        ckv = jnp.concatenate([cache["ckv"], ckv], axis=1)
+        k_rope = jnp.concatenate([cache["krope"], k_rope], axis=1)
+
+    ukv = jnp.einsum("bsr,rhk->bshk", ckv, params["w_ukv"])
+    k_nope = ukv[..., : m.qk_nope_head_dim]
+    v = ukv[..., m.qk_nope_head_dim :]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (*k_nope.shape[:3], m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    from repro.kernels import ops as K
+
+    out = K.attention(
+        jnp.swapaxes(q_full, 1, 2), jnp.swapaxes(k, 1, 2), jnp.swapaxes(v, 1, 2),
+        causal=cfg.causal, scale=scale, q_pos0=pos0,
+    )
+    out = jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+    return out, (new_entries if return_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# dense + MoE FFN
+# ---------------------------------------------------------------------------
+
+
+def init_dense_ffn(key, d: int, d_ff: int, dtype) -> PyTree:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": _dense_init(k1, (d, d_ff), d, dtype),
+        "wu": _dense_init(k2, (d, d_ff), d, dtype),
+        "wd": _dense_init(k3, (d_ff, d), d_ff, dtype),
+    }
+
+
+def apply_dense_ffn(params: PyTree, x: jax.Array) -> jax.Array:
+    from repro.models import dist
+
+    gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["wg"]))
+    up = dist.constrain(jnp.einsum("bsd,df->bsf", x, params["wu"]), "batch", None, "model")
+    h = dist.constrain(gate * up, "batch", None, "model")
+    return dist.constrain(jnp.einsum("bsf,fd->bsd", h, params["wd"]), "batch", None, None)
+
+
+def init_moe_ffn(key, cfg: ModelConfig, dtype) -> PyTree:
+    moe = cfg.moe
+    d, de, E = cfg.d_model, moe.d_expert, moe.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": _dense_init(ks[0], (d, E), d, jnp.float32),
+        "wg": _dense_init(ks[1], (E, d, de), d, dtype),
+        "wu": _dense_init(ks[2], (E, d, de), d, dtype),
+        "wd": _dense_init(ks[3], (E, de, d), de, dtype),
+    }
+    if moe.num_shared:
+        p["shared"] = init_dense_ffn(ks[4], d, moe.num_shared * de, dtype)
+    return p
+
+
+def apply_moe_ffn(
+    params: PyTree,
+    x: jax.Array,  # (B, S, D)
+    cfg: ModelConfig,
+    capacity_factor: float = 1.25,
+    group_size: int = 4096,
+) -> tuple[jax.Array, jax.Array]:
+    """GShard-style top-k dispatch MoE (expert-parallel friendly).
+
+    Tokens are processed in groups; within a group each token routes to its
+    top-k experts subject to per-expert capacity C = ceil(k*G*cf/E); overflow
+    tokens fall through (residual connection carries them). Returns
+    (out, aux_loss) where aux_loss is the standard load-balancing loss.
+    """
+    moe = cfg.moe
+    B, S, D = x.shape
+    E, K = moe.num_experts, moe.top_k
+    T = B * S
+    xt = x.reshape(T, D)
+    g = min(group_size, T)
+    n_groups = T // g
+    xg = xt[: n_groups * g].reshape(n_groups, g, D)
+
+    logits = jnp.einsum("ngd,de->nge", xg, params["router"].astype(xg.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # (n, g, E)
+    topw, topi = jax.lax.top_k(probs, K)  # (n, g, K)
+    topw = topw / (jnp.sum(topw, axis=-1, keepdims=True) + 1e-9)
+
+    if cfg.moe_dropless:
+        C = g  # every token always fits its experts (serving/consistency mode)
+    else:
+        C = max(1, int(math.ceil(K * g * capacity_factor / E)))
+    # position of each (token, k) within its expert queue
+    onehot = jax.nn.one_hot(topi, E, dtype=jnp.float32)  # (n, g, K, E)
+    flat = onehot.reshape(n_groups, g * K, E)
+    pos_in_expert = (jnp.cumsum(flat, axis=1) - flat).reshape(n_groups, g, K, E)
+    keep = (pos_in_expert < C) * onehot
+    slot = jnp.einsum("ngke,ngke->ngk", pos_in_expert, keep).astype(jnp.int32)
+    slot_oh = jax.nn.one_hot(slot, C, dtype=jnp.float32) * jnp.sum(keep, -1, keepdims=True)
+    dispatch = jnp.einsum("ngke,ngkc->ngec", keep, slot_oh)  # (n, g, E, C)
+    combine = jnp.einsum("ngk,ngke,ngkc->ngec", topw, keep, slot_oh)
+
+    expert_in = jnp.einsum("ngec,ngd->necd", dispatch.astype(xg.dtype), xg)  # (n,E,C,D)
+    h_g = jax.nn.silu(jnp.einsum("necd,edf->necf", expert_in, params["wg"]))
+    h_u = jnp.einsum("necd,edf->necf", expert_in, params["wu"])
+    expert_out = jnp.einsum("necf,efd->necd", h_g * h_u, params["wd"])
+    out = jnp.einsum("ngec,necd->ngd", combine.astype(expert_out.dtype), expert_out)
+
+    # load-balancing aux loss (Switch): E * sum_e f_e * p_e
+    density = jnp.mean(jnp.sum(onehot, axis=2), axis=1)  # (n, E) token fraction
+    router_prob = jnp.mean(probs, axis=1)  # (n, E)
+    aux = E * jnp.mean(jnp.sum(density * router_prob, axis=-1)) / K
+
+    out_flat = out.reshape(n_groups * g, D)
+    if n_groups * g < T:  # ragged tail routes dense through top-1 expert 0 path: rare; pad path
+        tail = jnp.zeros((T - n_groups * g, D), out_flat.dtype)
+        out_flat = jnp.concatenate([out_flat, tail], axis=0)
+    y = out_flat.reshape(B, S, D)
+    if moe.num_shared:
+        y = y + apply_dense_ffn(params["shared"], x)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba (selective SSM) — chunked associative scan
+# ---------------------------------------------------------------------------
+
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> PyTree:
+    mb = cfg.mamba
+    d = cfg.d_model
+    di, ds, dc = mb.d_inner(d), mb.d_state, mb.d_conv
+    dt_rank = max(16, d // 16)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_in": _dense_init(ks[0], (d, 2 * di), d, dtype),
+        "conv_w": _dense_init(ks[1], (dc, di), dc, dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "w_x": _dense_init(ks[2], (di, dt_rank + 2 * ds), di, dtype),
+        "w_dt": _dense_init(ks[3], (dt_rank, di), dt_rank, dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),  # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.broadcast_to(jnp.arange(1, ds + 1, dtype=jnp.float32), (di, ds))).astype(jnp.float32),
+        "D": jnp.ones((di,), jnp.float32),
+        "w_out": _dense_init(ks[5], (di, d), di, dtype),
+    }
+
+
+def _mamba_conv(params, x_in, conv_state=None):
+    """Causal depthwise conv. x_in: (B, S, Di). conv_state: (B, dc-1, Di)."""
+    dc = params["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x_in.shape[0], dc - 1, x_in.shape[2]), x_in.dtype)
+    else:
+        pad = conv_state.astype(x_in.dtype)
+    xp = jnp.concatenate([pad, x_in], axis=1)  # (B, S+dc-1, Di)
+    out = sum(
+        xp[:, i : i + x_in.shape[1], :] * params["conv_w"][i][None, None, :] for i in range(dc)
+    )
+    new_state = xp[:, -(dc - 1) :, :]
+    return out + params["conv_b"][None, None, :], new_state
+
+
+def _mamba_ssm_inputs(params, xc, mb):
+    dt_rank = params["w_dt"].shape[0]
+    ds = mb.d_state
+    proj = jnp.einsum("bsi,ir->bsr", xc, params["w_x"])
+    dt_r, Bs, Cs = jnp.split(proj, [dt_rank, dt_rank + ds], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,ri->bsi", dt_r, params["w_dt"]).astype(jnp.float32)
+        + params["dt_bias"].astype(jnp.float32)
+    )  # (B,S,Di)
+    A = -jnp.exp(params["A_log"])  # (Di, ds)
+    dA = jnp.exp(dt[..., None] * A[None, None])  # (B,S,Di,ds)
+    dBx = dt[..., None] * Bs[:, :, None, :].astype(jnp.float32) * xc[..., None].astype(jnp.float32)
+    return dA, dBx, Cs.astype(jnp.float32)
+
+
+def apply_mamba(
+    params: PyTree,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: PyTree | None = None,
+    scan_chunk: int = 256,
+):
+    """Returns (out, new_cache). cache = {"conv": (B,dc-1,Di), "ssm": (B,Di,ds)}."""
+    mb = cfg.mamba
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,di->bsi", x, params["w_in"])
+    x_in, z = jnp.split(xz, 2, axis=-1)
+
+    if cache is not None and S == 1:  # decode step
+        xc, conv_state = _mamba_conv(params, x_in, cache["conv"])
+        xc = jax.nn.silu(xc)
+        dA, dBx, Cs = _mamba_ssm_inputs(params, xc, mb)
+        h = cache["ssm"] * dA[:, 0] + dBx[:, 0]  # (B,Di,ds)
+        y = jnp.einsum("bis,bs->bi", h, Cs[:, 0])[:, None, :]
+        new_cache = {"conv": conv_state, "ssm": h}
+    else:
+        xc, conv_state = _mamba_conv(params, x_in, cache["conv"] if cache else None)
+        xc = jax.nn.silu(xc)
+        h0 = cache["ssm"] if cache else jnp.zeros((B, x_in.shape[-1], mb.d_state), jnp.float32)
+
+        def chunk_step(h_prev, xs):
+            dA_c, dBx_c, Cs_c = xs  # (B, ck, Di, ds) ...
+            # associative scan within the chunk
+            def combine(a, b):
+                return a[0] * b[0], b[0] * a[1] + b[1]
+
+            pA, pB = jax.lax.associative_scan(combine, (dA_c, dBx_c), axis=1)
+            h_all = pA * h_prev[:, None] + pB  # (B, ck, Di, ds)
+            y_c = jnp.einsum("bcis,bcs->bci", h_all, Cs_c)
+            return h_all[:, -1], y_c
+
+        ck = min(scan_chunk, S)
+        n = S // ck
+        dA, dBx, Cs = _mamba_ssm_inputs(params, xc[:, : n * ck], mb)
+        resh = lambda t: t.reshape(B, n, ck, *t.shape[2:]).swapaxes(0, 1)
+        h_last, ys = jax.lax.scan(chunk_step, h0, (resh(dA), resh(dBx), resh(Cs)))
+        y = ys.swapaxes(0, 1).reshape(B, n * ck, -1)
+        if n * ck < S:  # ragged tail
+            dA_t, dBx_t, Cs_t = _mamba_ssm_inputs(params, xc[:, n * ck :], mb)
+            h_last, y_t = chunk_step(h_last, (dA_t, dBx_t, Cs_t))
+            y = jnp.concatenate([y, y_t], axis=1)
+        new_cache = {"conv": conv_state, "ssm": h_last}
+
+    y = y.astype(x.dtype) + params["D"].astype(x.dtype)[None, None, :] * xc
+    out = jnp.einsum("bsi,id->bsd", y * jax.nn.silu(z), params["w_out"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM (chunkwise-parallel matrix memory) + sLSTM (sequential)
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype) -> PyTree:
+    d = cfg.d_model
+    di = int(d * cfg.mlstm_proj_factor)
+    h = cfg.num_heads
+    hd = di // h
+    ks = jax.random.split(key, 7)
+    return {
+        "w_up": _dense_init(ks[0], (d, 2 * di), d, dtype),
+        "wq": _dense_init(ks[1], (h, hd, hd), hd, dtype),  # block-diagonal per head
+        "wk": _dense_init(ks[2], (h, hd, hd), hd, dtype),
+        "wv": _dense_init(ks[3], (h, hd, hd), hd, dtype),
+        "w_i": _dense_init(ks[4], (di, h), di, jnp.float32),
+        "w_f": _dense_init(ks[5], (di, h), di, jnp.float32),
+        "f_bias": jnp.full((h,), 3.0, jnp.float32),  # forget-gate bias toward remember
+        "out_norm": init_rmsnorm(di, dtype),
+        "w_down": _dense_init(ks[6], (di, d), di, dtype),
+    }
+
+
+def apply_mlstm(
+    params: PyTree,
+    x: jax.Array,
+    cfg: ModelConfig,
+    *,
+    cache: PyTree | None = None,
+    chunk: int = 64,
+):
+    """Chunkwise-parallel mLSTM with stabilized exponential gating.
+
+    cache = {"C": (B,h,hd,hd), "n": (B,h,hd), "m": (B,h)}. Within a chunk the
+    output is computed attention-style with gate-derived decay masks; across
+    chunks a lax.scan carries (C, n, m) — O(1) state in sequence length.
+    """
+    B, S, d = x.shape
+    h = cfg.num_heads
+    up = jnp.einsum("bsd,di->bsi", x, params["w_up"])
+    x_in, z = jnp.split(up, 2, axis=-1)
+    di = x_in.shape[-1]
+    hd = di // h
+    xh = x_in.reshape(B, S, h, hd)
+    q = jnp.einsum("bshk,hkl->bshl", xh, params["wq"]) * (hd**-0.5)
+    k = jnp.einsum("bshk,hkl->bshl", xh, params["wk"])
+    v = jnp.einsum("bshk,hkl->bshl", xh, params["wv"])
+    i_log = jnp.einsum("bsi,ih->bsh", x_in.astype(jnp.float32), params["w_i"])  # (B,S,h)
+    f_log = jax.nn.log_sigmoid(
+        jnp.einsum("bsi,ih->bsh", x_in.astype(jnp.float32), params["w_f"]) + params["f_bias"]
+    )
+
+    if cache is None:
+        C0 = jnp.zeros((B, h, hd, hd), jnp.float32)
+        n0 = jnp.zeros((B, h, hd), jnp.float32)
+        m0 = jnp.full((B, h), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = cache["C"], cache["n"], cache["m"]
+
+    def chunk_step(carry, xs):
+        C, n, m = carry
+        qc, kc, vc, ic, fc = xs  # (B, ck, h, hd) / (B, ck, h)
+        ck = qc.shape[1]
+        fcum = jnp.cumsum(fc, axis=1)  # (B, ck, h) log decay within chunk
+        # stabilizer: per-step running max of (m_prev + fcum) and (fcum - f_t + i_t)
+        log_inter = m[:, None, :] + fcum  # contribution of carry state at step t
+        log_intra = fcum[:, :, None, :] - fcum[:, None, :, :] + ic[:, None, :, :]
+        # intra valid only for s <= t (causal within chunk): (B, t, s, h)
+        tri = jnp.tril(jnp.ones((ck, ck), bool))
+        log_intra = jnp.where(tri[None, :, :, None], log_intra, -jnp.inf)
+        m_new = jnp.maximum(log_inter, jnp.max(log_intra, axis=2))  # (B, ck, h)
+        m_new = jnp.maximum(m_new, -1e30)
+        inter_w = jnp.exp(log_inter - m_new)  # (B, ck, h)
+        intra_w = jnp.exp(log_intra - m_new[:, :, None, :])  # (B,t,s,h)
+        # output: inter part reads carry memory, intra part is masked attention
+        o_inter = jnp.einsum("bth,bhkl,bthk->bthl", inter_w, C, qc.astype(jnp.float32))
+        n_inter = jnp.einsum("bth,bhk,bthk->bth", inter_w, n, qc.astype(jnp.float32))
+        s_intra = jnp.einsum("bthk,bshk->btsh", qc.astype(jnp.float32), kc.astype(jnp.float32))
+        o_intra = jnp.einsum("btsh,btsh,bshl->bthl", intra_w, s_intra, vc.astype(jnp.float32))
+        n_intra = jnp.einsum("btsh,btsh->bth", intra_w, s_intra)
+        denom = jnp.maximum(jnp.abs(n_inter + n_intra), jnp.exp(-m_new)) + 1e-6
+        out_c = (o_inter + o_intra) / denom[..., None]
+        # carry update to end of chunk
+        ftot = fcum[:, -1, :]  # (B,h)
+        m_next = jnp.maximum(m + ftot, jnp.max(fcum[:, -1:, :] - fcum + ic, axis=1))
+        decay_keep = jnp.exp(m + ftot - m_next)  # (B,h)
+        kv_w = jnp.exp(ftot[:, None, :] - fcum + ic - m_next[:, None, :])  # (B,ck,h)
+        C_next = decay_keep[..., None, None] * C + jnp.einsum(
+            "bsh,bshk,bshl->bhkl", kv_w, kc.astype(jnp.float32), vc.astype(jnp.float32)
+        )
+        n_next = decay_keep[..., None] * n + jnp.einsum("bsh,bshk->bhk", kv_w, kc.astype(jnp.float32))
+        return (C_next, n_next, m_next), out_c
+
+    ck = min(chunk, S)
+    n_chunks = S // ck
+    resh = lambda t: t[:, : n_chunks * ck].reshape(B, n_chunks, ck, *t.shape[2:]).swapaxes(0, 1)
+    carry, outs = jax.lax.scan(chunk_step, (C0, n0, m0), (resh(q), resh(k), resh(v), resh(i_log), resh(f_log)))
+    out = outs.swapaxes(0, 1).reshape(B, n_chunks * ck, h, hd)
+    if n_chunks * ck < S:
+        sl = slice(n_chunks * ck, None)
+        carry, tail = chunk_step(carry, (q[:, sl], k[:, sl], v[:, sl], i_log[:, sl], f_log[:, sl]))
+        out = jnp.concatenate([out, tail], axis=1)
+    new_cache = {"C": carry[0], "n": carry[1], "m": carry[2]}
+
+    out = out.reshape(B, S, di).astype(x.dtype)
+    out = rms_norm(params["out_norm"], out, cfg.norm_eps)
+    out = out * jax.nn.silu(z)
+    return jnp.einsum("bsi,id->bsd", out, params["w_down"]), new_cache
+
+
+def init_slstm(key, cfg: ModelConfig, dtype) -> PyTree:
+    d = cfg.d_model
+    df = int(d * cfg.slstm_proj_factor)
+    ks = jax.random.split(key, 4)
+    return {
+        # gate-aligned (d, 4, d) layout: sharding the LAST dim over "model"
+        # gives every device its own channel slice of all four gates, so the
+        # recurrence runs fully local under shard_map (§Perf iteration C)
+        "wgx": _dense_init(ks[0], (d, 4, d), d, dtype),  # i,f,z,o from input
+        "wgh": _dense_init(ks[1], (d, 4, d), d, dtype),  # recurrent
+        "gbias": jnp.zeros((4, d), jnp.float32),
+        "ffn_up": _dense_init(ks[2], (d, df), d, dtype),
+        "ffn_down": _dense_init(ks[3], (df, d), df, dtype),
+    }
+
+
+def apply_slstm(params: PyTree, x: jax.Array, cfg: ModelConfig, *, cache: PyTree | None = None):
+    """Strictly sequential sLSTM with exponential gating + stabilizer state.
+
+    cache = {"c": (B,D), "n": (B,D), "m": (B,D), "h": (B,D)}. No parallel
+    form exists (the recurrence is non-associative through h_{t-1}) — this is
+    inherent to the architecture, noted in DESIGN.md.
+    """
+    B, S, d = x.shape
+    from repro.models import dist
+
+    if cache is None:
+        c0 = jnp.zeros((B, d), jnp.float32)
+        n0 = jnp.full((B, d), 1e-6, jnp.float32)
+        m0 = jnp.zeros((B, d), jnp.float32)
+        h0 = jnp.zeros((B, d), x.dtype)
+    else:
+        c0, n0, m0, h0 = cache["c"], cache["n"], cache["m"], cache["h"]
+
+    def recurrence(gx_loc, wh_loc, bias_loc, c0_, n0_, m0_, h0_, *, sharded: bool):
+        """Time scan over channel-local shards. ``h`` is the only cross-
+        channel coupling: it is all-gathered once per step (B x d, KBs)."""
+
+        def step(carry, gx_t):
+            c, n, m, h_full = carry
+            gates = gx_t + jnp.einsum("bd,dgk->bgk", h_full, wh_loc) + bias_loc
+            gates = gates.astype(jnp.float32)
+            i_l, f_l, z_l, o_l = gates[:, 0], gates[:, 1], gates[:, 2], gates[:, 3]
+            f_log = jax.nn.log_sigmoid(f_l)
+            m_new = jnp.maximum(f_log + m, i_l)
+            i_g = jnp.exp(i_l - m_new)
+            f_g = jnp.exp(f_log + m - m_new)
+            c_new = f_g * c + i_g * jnp.tanh(z_l)
+            n_new = f_g * n + i_g
+            h_new = (jax.nn.sigmoid(o_l) * c_new / jnp.maximum(n_new, 1e-6)).astype(h_full.dtype)
+            if sharded:
+                h_full_new = jax.lax.all_gather(h_new, "model", axis=1, tiled=True)
+            else:
+                h_full_new = h_new
+            return (c_new, n_new, m_new, h_full_new), h_new
+
+        (c, n, m, hf), hs = jax.lax.scan(
+            step, (c0_, n0_, m0_, h0_), gx_loc.swapaxes(0, 1),
+            unroll=8 if S >= 64 else 1,
+        )
+        return hs.swapaxes(0, 1), c, n, m, hs[-1]
+
+    mesh = dist.current_mesh()
+    tp = mesh.shape.get("model", 1) if mesh is not None else 1
+    gx = jnp.einsum("bsd,dgk->bsgk", x, params["wgx"])  # (B,S,4,d) input part
+    if mesh is not None and tp > 1 and d % tp == 0 and S > 1:
+        from jax import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+        dpn = 1
+        for a in baxes:
+            dpn *= mesh.shape[a]
+        b_ax = baxes if B % dpn == 0 else None
+        out_sm = shard_map(
+            lambda gxl, whl, bl, c_, n_, m_, h_: recurrence(
+                gxl, whl, bl, c_, n_, m_, h_, sharded=True
+            ),
+            mesh=mesh,
+            in_specs=(
+                P(b_ax, None, None, "model"),   # gx: channel-sharded
+                P(None, None, "model"),          # w_h columns (gate-aligned)
+                P(None, "model"),                # bias
+                P(b_ax, "model"), P(b_ax, "model"), P(b_ax, "model"),  # c, n, m
+                P(b_ax, None),                   # h replicated across model
+            ),
+            out_specs=(P(b_ax, None, "model"), P(b_ax, "model"), P(b_ax, "model"),
+                       P(b_ax, "model"), P(b_ax, "model")),
+            check_vma=False,
+        )
+        hs_out, c, n, m, h_last = out_sm(gx, params["wgh"], params["gbias"], c0, n0, m0, h0)
+        out, h = hs_out, h_last
+    else:
+        out, c, n, m, h = recurrence(
+            gx, params["wgh"], params["gbias"], c0, n0, m0, h0, sharded=False
+        )
+    out = out + jnp.einsum(
+        "bsf,fd->bsd", jax.nn.gelu(jnp.einsum("bsd,df->bsf", out, params["ffn_up"])), params["ffn_down"]
+    )
+    return out, {"c": c, "n": n, "m": m, "h": h}

@@ -1,0 +1,82 @@
+"""Small MLP client models for the paper's four tasks (Sec. 7.1).
+
+These are the models the federated *protocol* experiments train on CPU;
+everything is jit-cached per task config so 100+ simulated clients share
+compiled functions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_tasks import MLPTaskConfig
+
+PyTree = Any
+
+
+def init_mlp(cfg: MLPTaskConfig, key: jax.Array) -> PyTree:
+    dims = (cfg.input_dim, *cfg.hidden, cfg.num_classes)
+    params = []
+    for i, (din, dout) in enumerate(zip(dims[:-1], dims[1:])):
+        key, k = jax.random.split(key)
+        params.append({
+            "w": jax.random.normal(k, (din, dout), jnp.float32) / jnp.sqrt(din),
+            "b": jnp.zeros((dout,), jnp.float32),
+        })
+    return params
+
+
+def mlp_forward(params: PyTree, x: jax.Array) -> jax.Array:
+    for layer in params[:-1]:
+        x = jax.nn.relu(x @ layer["w"] + layer["b"])
+    return x @ params[-1]["w"] + params[-1]["b"]
+
+
+@functools.partial(jax.jit, static_argnames=("head_only",))
+def _sgd_epoch(params, x, y, lr, head_only: bool = False):
+    def loss_fn(p):
+        logits = mlp_forward(p, x)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    if head_only:  # partial fine-tuning after cluster expansion (Sec. 4.3.3)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, grads[:-1])
+        grads = zeros + grads[-1:]
+    new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+    return new, loss
+
+
+def local_train(
+    params: PyTree,
+    x: jax.Array,
+    y: jax.Array,
+    *,
+    epochs: int = 5,
+    lr: float = 0.1,
+    head_only: bool = False,
+) -> tuple[PyTree, float]:
+    loss = jnp.zeros(())
+    for _ in range(epochs):
+        params, loss = _sgd_epoch(params, x, y, jnp.asarray(lr), head_only=head_only)
+    return params, float(loss)
+
+
+@jax.jit
+def evaluate(params: PyTree, x: jax.Array, y: jax.Array) -> jax.Array:
+    pred = jnp.argmax(mlp_forward(params, x), axis=-1)
+    return jnp.mean((pred == y).astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes",))
+def predict_distributions(params: PyTree, x: jax.Array, num_classes: int):
+    """Returns (predicted-label histogram F_c, mean soft-label distribution S_c)
+    — the client-side ingredients of the Eq. 2/3 feedback."""
+    logits = mlp_forward(params, x)
+    soft = jax.nn.softmax(logits, axis=-1)
+    pred = jnp.argmax(logits, axis=-1)
+    hist = jnp.bincount(pred, length=num_classes).astype(jnp.float32)
+    return hist, jnp.mean(soft, axis=0)

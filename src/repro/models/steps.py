@@ -1,0 +1,129 @@
+"""Step factories: train (with microbatch gradient accumulation), eval,
+prefill, and single-token serve. These are the functions the launcher
+pjit's over the production mesh and the dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import forward
+from repro.optim.adafactor import adafactor
+from repro.optim.optimizers import Optimizer, adamw, apply_updates, clip_by_global_norm, momentum
+
+PyTree = Any
+
+
+class TrainState(NamedTuple):
+    params: PyTree
+    opt_state: PyTree
+    step: jax.Array
+
+
+def make_optimizer(cfg: ModelConfig) -> Optimizer:
+    t = cfg.train
+    if t.optimizer == "adafactor":
+        return adafactor(t.learning_rate)
+    if t.optimizer == "sgdm":
+        return momentum(t.learning_rate, 0.9)
+    return adamw(t.learning_rate)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, vocab: int) -> jax.Array:
+    """Mean next-token CE in fp32. Labels >= vocab (pad region) are masked."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None].astype(jnp.int32), axis=-1)[..., 0]
+    valid = (labels >= 0) & (labels < vocab)
+    ce = jnp.where(valid, logz - gold, 0.0)
+    return jnp.sum(ce) / jnp.maximum(jnp.sum(valid), 1)
+
+
+def _loss_fn(cfg: ModelConfig, params: PyTree, batch: dict) -> tuple[jax.Array, dict]:
+    logits, aux, _ = forward(cfg, params, batch)
+    ce = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+    loss = ce + 0.01 * aux
+    return loss, {"loss": loss, "ce": ce, "moe_aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, optimizer: Optimizer | None = None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``cfg.train.microbatches > 1`` accumulates gradients over microbatches
+    with a lax.scan — this bounds activation memory (the §Perf memory lever
+    for the 400B models) while keeping the global batch semantics exact.
+    """
+    opt = optimizer or make_optimizer(cfg)
+    n_micro = max(1, cfg.train.microbatches)
+
+    def split_micro(batch):
+        def r(x):
+            b = x.shape[0]
+            assert b % n_micro == 0, f"global batch {b} not divisible by {n_micro} microbatches"
+            return x.reshape(n_micro, b // n_micro, *x.shape[1:])
+
+        return jax.tree_util.tree_map(r, batch)
+
+    def train_step(state: TrainState, batch: dict) -> tuple[TrainState, dict]:
+        grad_fn = jax.value_and_grad(lambda p, mb: _loss_fn(cfg, p, mb), has_aux=True)
+
+        if n_micro == 1:
+            (_, metrics), grads = grad_fn(state.params, batch)
+        else:
+            micro = split_micro(batch)
+
+            def acc_step(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = grad_fn(state.params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32) / n_micro, g_acc, g
+                )
+                m_acc = jax.tree_util.tree_map(lambda a, b: a + b / n_micro, m_acc, m)
+                return (g_acc, m_acc), 0
+
+            g0 = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            m0 = {"loss": jnp.zeros((), jnp.float32), "ce": jnp.zeros((), jnp.float32), "moe_aux": jnp.zeros((), jnp.float32)}
+            (grads, metrics), _ = jax.lax.scan(acc_step, (g0, m0), micro)
+
+        grads = clip_by_global_norm(grads, 1.0)
+        updates, opt_state = opt.update(grads, state.opt_state, state.params)
+        params = apply_updates(state.params, updates)
+        new_state = TrainState(params=params, opt_state=opt_state, step=state.step + 1)
+        metrics = dict(metrics, step=new_state.step)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig):
+    def eval_step(params: PyTree, batch: dict) -> dict:
+        logits, _, _ = forward(cfg, params, batch)
+        ce = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        pred = jnp.argmax(logits, axis=-1)
+        acc = jnp.mean((pred == batch["labels"]).astype(jnp.float32))
+        return {"ce": ce, "accuracy": acc}
+
+    return eval_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Full-context forward producing logits + exact-length KV/state caches."""
+
+    def prefill(params: PyTree, batch: dict) -> tuple[jax.Array, PyTree]:
+        logits, _, cache = forward(cfg, params, batch, return_cache=True)
+        return logits[:, -1:, :], cache
+
+    return prefill
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One-token decode against fixed-size buffers (donate the cache arg!)."""
+
+    def serve(params: PyTree, cache: PyTree, batch: dict) -> tuple[jax.Array, PyTree]:
+        logits, _, new_cache = forward(cfg, params, batch, cache=cache)
+        return logits, new_cache
+
+    return serve

@@ -1,0 +1,27 @@
+from repro.optim.optimizers import Optimizer, adam, adamw, momentum, sgd
+from repro.optim.schedules import constant, cosine_decay, linear_warmup_cosine
+from repro.optim.compression import (
+    int8_compress,
+    int8_decompress,
+    topk_compress,
+    topk_decompress,
+    ErrorFeedbackState,
+    ef_topk_step,
+)
+
+__all__ = [
+    "Optimizer",
+    "sgd",
+    "momentum",
+    "adam",
+    "adamw",
+    "constant",
+    "cosine_decay",
+    "linear_warmup_cosine",
+    "topk_compress",
+    "topk_decompress",
+    "int8_compress",
+    "int8_decompress",
+    "ErrorFeedbackState",
+    "ef_topk_step",
+]

@@ -1,0 +1,79 @@
+"""Adafactor (Shazeer & Stern, 2018) — factored second moments so optimizer
+state is O(rows + cols) instead of O(rows * cols). This is what lets the
+405B/398B-class models fit the v5e 16GB budget (see EXPERIMENTS.md §Dry-run):
+AdamW needs 8 bytes/param of state; factored Adafactor needs ~0.001.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.optimizers import Optimizer, _as_schedule
+
+
+class _FactoredSlot(NamedTuple):
+    vr: jax.Array  # row second-moment (shape[:-1])
+    vc: jax.Array  # col second-moment (shape without -2 axis)
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    slots: object  # pytree matching params: _FactoredSlot for >=2D, array for <2D
+
+
+def _decay(step, d=0.8):
+    t = step.astype(jnp.float32) + 1.0
+    return 1.0 - t**-d
+
+
+def adafactor(lr, min_dim_size_to_factor: int = 128, clip_threshold: float = 1.0, eps: float = 1e-30) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] >= min_dim_size_to_factor and p.shape[-2] >= min_dim_size_to_factor
+
+    def init(params):
+        def slot(p):
+            if factored(p):
+                return _FactoredSlot(
+                    vr=jnp.zeros(p.shape[:-1], jnp.float32),
+                    vc=jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                )
+            return jnp.zeros(p.shape, jnp.float32)
+
+        return AdafactorState(step=jnp.zeros((), jnp.int32), slots=jax.tree_util.tree_map(slot, params))
+
+    def update(grads, state, params=None):
+        del params
+        step = state.step
+        beta = _decay(step)
+        lr_t = sched(step)
+
+        def upd(g, s):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if isinstance(s, _FactoredSlot):
+                vr = beta * s.vr + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s.vc + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+                vhat = vr[..., None] * vc[..., None, :] / denom[..., None]
+                new_slot = _FactoredSlot(vr=vr, vc=vc)
+            else:
+                vhat = beta * s + (1 - beta) * g2
+                new_slot = vhat
+            u = g32 * jax.lax.rsqrt(vhat + eps)
+            # update clipping by RMS (Adafactor's d=1.0 rule)
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            return -lr_t * u, new_slot
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_s = treedef.flatten_up_to(state.slots)
+        pairs = [upd(g, s) for g, s in zip(flat_g, flat_s)]
+        updates = jax.tree_util.tree_unflatten(treedef, [p[0] for p in pairs])
+        slots = jax.tree_util.tree_unflatten(treedef, [p[1] for p in pairs])
+        return updates, AdafactorState(step=step + 1, slots=slots)
+
+    return Optimizer(init, update)

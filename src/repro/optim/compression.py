@@ -1,0 +1,80 @@
+"""Upstream update compression for the thin uplink.
+
+EchoPFL's systems insight is bandwidth *asymmetry*: downstream (server ->
+clients, broadcast) is ~10x fatter than upstream (client -> server). We
+therefore compress only the *uplink* parameter deltas. Two codecs:
+
+- top-k sparsification with error feedback (EF-SGD style): keeps the k
+  largest-magnitude entries of the flattened delta, accumulating the residual
+  locally so nothing is permanently lost,
+- int8 linear quantization with per-chunk scales.
+
+Both operate on flat vectors so they compose with the pytree flatten helpers
+and are architecture-agnostic — exactly like the coordination protocol itself.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TopKPayload(NamedTuple):
+    indices: jax.Array  # (k,) int32
+    values: jax.Array  # (k,) float32
+    length: int  # original vector length (static)
+
+
+def topk_compress(vec: jax.Array, k: int) -> TopKPayload:
+    k = min(k, vec.shape[0])
+    _, idx = jax.lax.top_k(jnp.abs(vec), k)
+    return TopKPayload(indices=idx.astype(jnp.int32), values=vec[idx], length=vec.shape[0])
+
+
+def topk_decompress(payload: TopKPayload) -> jax.Array:
+    out = jnp.zeros((payload.length,), payload.values.dtype)
+    return out.at[payload.indices].set(payload.values)
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: jax.Array
+
+
+def ef_topk_step(vec: jax.Array, state: ErrorFeedbackState, k: int) -> tuple[TopKPayload, ErrorFeedbackState]:
+    """Error-feedback top-k: compress (vec + residual), carry what was dropped."""
+    corrected = vec + state.residual
+    payload = topk_compress(corrected, k)
+    sent = topk_decompress(payload)
+    return payload, ErrorFeedbackState(residual=corrected - sent)
+
+
+class Int8Payload(NamedTuple):
+    q: jax.Array  # (n,) int8
+    scales: jax.Array  # (n_chunks,) float32
+    chunk: int  # static chunk size
+
+
+def int8_compress(vec: jax.Array, chunk: int = 4096) -> Int8Payload:
+    n = vec.shape[0]
+    pad = (-n) % chunk
+    v = jnp.pad(vec, (0, pad)).reshape(-1, chunk)
+    scales = jnp.max(jnp.abs(v), axis=1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(v / scales[:, None]), -127, 127).astype(jnp.int8)
+    return Int8Payload(q=q.reshape(-1)[:n], scales=scales, chunk=chunk)
+
+
+def int8_decompress(payload: Int8Payload) -> jax.Array:
+    n = payload.q.shape[0]
+    pad = (-n) % payload.chunk
+    q = jnp.pad(payload.q, (0, pad)).reshape(-1, payload.chunk).astype(jnp.float32)
+    return (q * payload.scales[:, None]).reshape(-1)[:n]
+
+
+def payload_bytes(payload) -> int:
+    """Wire size of a compressed payload — used by the comm-cost accounting."""
+    if isinstance(payload, TopKPayload):
+        return payload.indices.size * 4 + payload.values.size * 4
+    if isinstance(payload, Int8Payload):
+        return payload.q.size * 1 + payload.scales.size * 4
+    raise TypeError(type(payload))

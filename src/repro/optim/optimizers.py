@@ -1,0 +1,138 @@
+"""Minimal functional optimizer library (no optax dependency).
+
+Interface mirrors the (init, update) pair convention:
+
+    opt = adam(1e-3)
+    state = opt.init(params)
+    updates, state = opt.update(grads, state, params)
+    params = apply_updates(params, updates)
+
+All transforms are jit-compatible pytree programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    update: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree_util.tree_map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+class SGDState(NamedTuple):
+    step: jax.Array
+
+
+def sgd(lr) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        del params
+        return SGDState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params=None):
+        del params
+        lr_t = sched(state.step)
+        updates = jax.tree_util.tree_map(lambda g: -lr_t * g, grads)
+        return updates, SGDState(step=state.step + 1)
+
+    return Optimizer(init, update)
+
+
+class MomentumState(NamedTuple):
+    step: jax.Array
+    velocity: PyTree
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    sched = _as_schedule(lr)
+
+    def init(params):
+        return MomentumState(
+            step=jnp.zeros((), jnp.int32),
+            velocity=jax.tree_util.tree_map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        )
+
+    def update(grads, state, params=None):
+        del params
+        lr_t = sched(state.step)
+        vel = jax.tree_util.tree_map(lambda v, g: beta * v + g, state.velocity, grads)
+        if nesterov:
+            updates = jax.tree_util.tree_map(lambda v, g: -lr_t * (beta * v + g), vel, grads)
+        else:
+            updates = jax.tree_util.tree_map(lambda v: -lr_t * v, vel)
+        return updates, MomentumState(step=state.step + 1, velocity=vel)
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    mu: PyTree
+    nu: PyTree
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    """Adam; with weight_decay > 0 this is AdamW (decoupled decay)."""
+    sched = _as_schedule(lr)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros_like(p, jnp.float32)
+        return AdamState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree_util.tree_map(zeros, params),
+            nu=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(grads, state, params=None):
+        step = state.step + 1
+        lr_t = sched(state.step)
+        grads32 = jax.tree_util.tree_map(lambda g: g.astype(jnp.float32), grads)
+        mu = jax.tree_util.tree_map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads32)
+        nu = jax.tree_util.tree_map(lambda n, g: b2 * n + (1 - b2) * g * g, state.nu, grads32)
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(m, n, p):
+            u = -lr_t * (m / bc1) / (jnp.sqrt(n / bc2) + eps)
+            if weight_decay:
+                u = u - lr_t * weight_decay * p.astype(jnp.float32)
+            return u
+
+        if params is None and weight_decay:
+            raise ValueError("adamw requires params for decoupled weight decay")
+        if params is None:
+            params = jax.tree_util.tree_map(lambda m: jnp.zeros_like(m), mu)
+        updates = jax.tree_util.tree_map(upd, mu, nu, params)
+        return updates, AdamState(step=step, mu=mu, nu=nu)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1) -> Optimizer:
+    return adam(lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> PyTree:
+    leaves = jax.tree_util.tree_leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-12))
+    return jax.tree_util.tree_map(lambda g: g * scale, grads)

@@ -1,0 +1,28 @@
+"""Learning-rate schedules as step -> lr callables (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(lr: float, decay_steps: int, alpha: float = 0.0):
+    def sched(step):
+        t = jnp.minimum(step.astype(jnp.float32), decay_steps) / decay_steps
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return lr * ((1 - alpha) * cos + alpha)
+
+    return sched
+
+
+def linear_warmup_cosine(lr: float, warmup_steps: int, decay_steps: int, alpha: float = 0.1):
+    def sched(step):
+        step_f = step.astype(jnp.float32)
+        warm = lr * step_f / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((step_f - warmup_steps) / jnp.maximum(decay_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = lr * ((1 - alpha) * 0.5 * (1.0 + jnp.cos(jnp.pi * t)) + alpha)
+        return jnp.where(step_f < warmup_steps, warm, cos)
+
+    return sched

@@ -1,0 +1,103 @@
+"""Flash-attention BACKWARD kernels (dq / dkv) vs jax.grad of the jnp
+oracle, across GQA ratios, masking modes, softcap, and dv != dk (MLA)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops as K
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_with_lse
+from repro.kernels.flash_attention_bwd import flash_attention_bwd
+
+CASES = [
+    # B, H, KV, S, hd, dv, causal, window, softcap
+    (1, 4, 2, 64, 32, 32, True, None, None),
+    (2, 4, 1, 48, 16, 16, True, None, None),       # extreme GQA 4:1
+    (1, 2, 2, 64, 32, 32, False, None, None),      # encoder (non-causal)
+    (1, 4, 2, 64, 32, 32, True, 16, None),         # sliding window
+    (1, 4, 4, 64, 32, 32, True, None, 30.0),       # softcap chain rule
+    (1, 4, 4, 64, 48, 24, True, None, None),       # dv != dk (MLA-style)
+    (1, 8, 2, 100, 64, 64, True, None, None),      # ragged (non-pow2) seq
+]
+
+
+def _inputs(case, seed=0):
+    B, H, KV, S, hd, dv, causal, window, softcap = case
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, KV, S, dv), jnp.float32)
+    kw = dict(causal=causal, window=window, softcap=softcap)
+    return q, k, v, kw
+
+
+@pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
+def test_bwd_kernels_match_reference_grads(case):
+    q, k, v, kw = _inputs(case)
+
+    def loss_ref(q, k, v):
+        o = ref.flash_attention_ref(q, k, v, **kw)
+        return jnp.sum(o * jnp.cos(o))  # nontrivial cotangent
+
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+
+    o, lse = flash_attention_with_lse(q, k, v, interpret=True, **kw)
+    do = jax.grad(lambda o_: jnp.sum(o_ * jnp.cos(o_)))(o)
+    got = flash_attention_bwd(q, k, v, o, lse, do, interpret=True, **kw)
+
+    for g, w, name in zip(got, want, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w), atol=3e-4, rtol=3e-4, err_msg=name
+        )
+
+
+def test_custom_vjp_end_to_end_matches_ref_ad():
+    """ops.attention (kernel fwd+bwd via custom_vjp) inside a bigger graph."""
+    q, k, v, kw = _inputs((1, 4, 2, 64, 32, 32, True, None, None), seed=3)
+    w = jax.random.normal(jax.random.PRNGKey(9), (32, 32))
+
+    def net(fn):
+        def loss(q, k, v):
+            o = fn(q, k, v, **kw)
+            return jnp.sum(jnp.tanh(o @ w))
+        return loss
+
+    g_kernel = jax.grad(net(lambda *a, **kws: K.attention(*a, **kws)), argnums=(0, 1, 2))(q, k, v)
+    g_ref = jax.grad(net(lambda *a, **kws: ref.flash_attention_ref(*a, **kws)), argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g_kernel, g_ref):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-4, rtol=3e-4)
+
+
+def test_lse_definition():
+    """lse rows equal logsumexp of the masked score rows."""
+    q, k, v, kw = _inputs((1, 2, 2, 32, 16, 16, True, None, None), seed=1)
+    _, lse = flash_attention_with_lse(q, k, v, interpret=True, **kw)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * (16**-0.5)
+    mask = jnp.tril(jnp.ones((32, 32), bool))
+    s = jnp.where(mask[None, None], s, -1e30)
+    want = jax.nn.logsumexp(s, axis=-1)
+    np.testing.assert_allclose(np.asarray(lse), np.asarray(want), atol=1e-4, rtol=1e-4)
+
+
+def test_shard_map_path_single_device_mesh():
+    """ops.attention under a registered 1x1 mesh equals the direct path."""
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models import dist
+
+    q, k, v, kw = _inputs((2, 4, 2, 32, 16, 16, True, None, None), seed=2)
+    direct = K.attention(q, k, v, **kw)
+    with dist.use_mesh(make_smoke_mesh()):
+        meshed = K.attention(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(direct), np.asarray(meshed), atol=1e-6)
+
+
+def test_decode_consistency_with_kernel_path():
+    """1-token decode (reference path) is consistent with the kernel's
+    full-sequence output at the last position."""
+    q, k, v, kw = _inputs((1, 4, 2, 33, 32, 32, True, None, None), seed=4)
+    full = K.attention(q, k, v, **kw)
+    last = ref.flash_attention_ref(q[:, :, -1:], k, v, causal=True, q_pos0=32)
+    np.testing.assert_allclose(
+        np.asarray(full[:, :, -1:]), np.asarray(last), atol=2e-5, rtol=2e-5
+    )

@@ -1,0 +1,117 @@
+"""Unit tests for the on-demand broadcast predictor (paper Sec. 5)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.broadcast import (
+    HIDDEN,
+    NUM_LAYERS,
+    BroadcastPredictor,
+    init_rnn,
+    predictor_for_expansion,
+    predictor_for_merge,
+    pretrain_rnn,
+    rnn_logits,
+)
+
+
+@pytest.fixture(scope="module")
+def rnn_params():
+    return init_rnn(jax.random.PRNGKey(0))
+
+
+def test_rnn_shape_contract(rnn_params):
+    import jax.numpy as jnp
+
+    logits = rnn_logits(rnn_params, jnp.ones((10, 1)))
+    assert logits.shape == (2,)
+    assert rnn_params["wh0"].shape == (HIDDEN, HIDDEN)
+    assert len([k for k in rnn_params if k.startswith("wh")]) == NUM_LAYERS
+
+
+class TestPredictor:
+    def test_observe_keeps_topk_window(self, rnn_params):
+        p = BroadcastPredictor(params=rnn_params, k=5)
+        for i in range(12):
+            p.observe(float(i))
+        assert len(p.records) == 5
+        assert p.records == [7.0, 8.0, 9.0, 10.0, 11.0]
+
+    def test_cold_start_rule(self, rnn_params):
+        p = BroadcastPredictor(params=rnn_params, k=5)
+        p.observe(1.0)
+        assert p.decide(accumulated_gap=100.0)       # big gap -> broadcast
+        p2 = BroadcastPredictor(params=rnn_params, k=5)
+        p2.observe(1.0)
+        assert not p2.decide(accumulated_gap=0.001)  # tiny gap -> hold
+
+    def test_inactive_suppresses_exactly_one_decision(self, rnn_params):
+        p = BroadcastPredictor(params=rnn_params, k=5, active=False)
+        for c in (1.0, 2.0, 3.0):
+            p.observe(c)
+        assert p.decide(accumulated_gap=1e9) is False  # suppressed once
+        assert p.active
+
+    def test_learn_reduces_loss_on_repeated_label(self, rnn_params):
+        p = BroadcastPredictor(params=rnn_params, k=8)
+        for c in (5.0, 4.0, 3.0, 2.0):
+            p.observe(c)
+        losses = [p.learn(1) for _ in range(25)]
+        assert losses[-1] < losses[0]
+
+    def test_growing_changes_trigger_trained_predictor(self):
+        """After pretraining, growing change sequences (staleness building
+        up) should broadcast more often than decaying ones."""
+        params = pretrain_rnn(jax.random.PRNGKey(1), num_states=300)
+        grow, decay = 0, 0
+        for trial in range(5):
+            pg = BroadcastPredictor(params=params, k=10)
+            pd = BroadcastPredictor(params=params, k=10)
+            base = 0.5 + 0.2 * trial
+            for i in range(10):
+                pg.observe(base * 1.35**i)
+                pd.observe(base * 0.55**i)
+            grow += pg.decide(0.0)
+            decay += pd.decide(0.0)
+        assert grow > decay
+
+
+class TestMaintenance:
+    def test_expansion_resets_records_inherits_weights(self, rnn_params):
+        parent = BroadcastPredictor(params=rnn_params, k=6)
+        for c in (1.0, 2.0, 3.0):
+            parent.observe(c)
+        child = predictor_for_expansion(parent, change_of_new_client=9.0)
+        assert child.records == [9.0]           # reset to the new client
+        assert child.params is parent.params    # inherit RNN weights
+        assert child.active is False            # broadcast deactivated
+        seq = np.asarray(child._seq())
+        assert seq.shape == (6, 1)
+        assert (seq[:-1] == 0).all()            # zero-padded history
+
+    def test_merge_resamples_by_variance(self, rnn_params):
+        a = BroadcastPredictor(params=rnn_params, k=6)
+        b = BroadcastPredictor(params=init_rnn(jax.random.PRNGKey(1)), k=6)
+        for c in (1.0, 1.1, 0.9, 1.05):
+            a.observe(c)          # low variance
+        for c in (0.1, 5.0, 0.2, 8.0):
+            b.observe(c)          # high variance -> contributes more records
+        merged = predictor_for_merge(a, b)
+        assert merged.k == 6
+        assert len(merged.records) <= 6
+        from_b = sum(1 for r in merged.records if r in b.records)
+        from_a = sum(1 for r in merged.records if r in a.records)
+        assert from_b >= from_a
+        # RNN weights are the distilled (averaged) pair
+        for k in rnn_params:
+            np.testing.assert_allclose(
+                np.asarray(merged.params[k]),
+                0.5 * (np.asarray(a.params[k]) + np.asarray(b.params[k])),
+                rtol=1e-6,
+            )
+
+    def test_merge_of_empty_predictors(self, rnn_params):
+        a = BroadcastPredictor(params=rnn_params, k=4)
+        b = BroadcastPredictor(params=rnn_params, k=4)
+        merged = predictor_for_merge(a, b)
+        assert merged.records == []

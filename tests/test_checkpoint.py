@@ -1,0 +1,124 @@
+"""Fault-tolerant checkpointing: atomicity, manifests, async writer,
+retention, and full EchoPFL-server state restore (elastic restart)."""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.checkpointer import (
+    Checkpointer,
+    latest_step,
+    restore_pytree,
+    save_pytree,
+)
+
+
+def tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "layer0": {"w": jnp.asarray(rng.normal(size=(4, 3)), jnp.float32), "b": jnp.zeros(3)},
+        "step": jnp.asarray(7, jnp.int32),
+    }
+
+
+def assert_tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = tree()
+    save_pytree(str(tmp_path / "ckpt"), t, extra={"note": "hi"})
+    got, extra = restore_pytree(str(tmp_path / "ckpt"), like=t)
+    assert_tree_equal(t, got)
+    assert extra == {"note": "hi"}
+
+
+def test_restore_detects_corruption(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_pytree(d, tree())
+    with open(os.path.join(d, "manifest.json")) as f:
+        manifest = json.load(f)
+    manifest["checksum"] = "0" * 64
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with pytest.raises(IOError):
+        restore_pytree(d, like=tree())
+
+
+def test_restore_detects_structure_mismatch(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_pytree(d, tree())
+    wrong = {"other": jnp.zeros(3)}
+    with pytest.raises(ValueError):
+        restore_pytree(d, like=wrong)
+
+
+def test_overwrite_is_atomic_replacement(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_pytree(d, tree(0))
+    save_pytree(d, tree(1))
+    got, _ = restore_pytree(d, like=tree())
+    assert_tree_equal(tree(1), got)
+    assert not [n for n in os.listdir(tmp_path) if n.startswith("tmp.")]
+
+
+def test_checkpointer_retention_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ck.save(s, tree(s))
+    assert latest_step(str(tmp_path)) == 4
+    kept = sorted(n for n in os.listdir(tmp_path) if n.startswith("step_"))
+    assert len(kept) == 2
+    step, got, _ = ck.restore_latest(like=tree())
+    assert step == 4
+    assert_tree_equal(tree(4), got)
+    ck.close()
+
+
+def test_async_writer_snapshot_isolation(tmp_path):
+    """save_async snapshots immediately: mutating (donating) the arrays
+    afterwards must not corrupt the checkpoint."""
+    ck = Checkpointer(str(tmp_path), keep=3)
+    t = {"w": np.ones(8, np.float32)}
+    ck.save_async(5, t, extra={"k": 1})
+    t["w"] *= -1  # simulate buffer donation
+    ck.wait()
+    step, got, extra = ck.restore_latest(like={"w": np.zeros(8, np.float32)})
+    assert step == 5 and extra == {"k": 1}
+    np.testing.assert_array_equal(got["w"], np.ones(8))
+    ck.close()
+
+
+def test_server_state_checkpoint_roundtrip(tmp_path):
+    """Elastic restart: full EchoPFL server state (clusters, predictors,
+    Top-K records, staleness) survives save -> new server -> load."""
+    from repro.core.server import EchoPFLServer
+
+    init = {"w": jnp.zeros(6)}
+    srv = EchoPFLServer(init, num_initial_clusters=2, seed=0)
+    for i, x in enumerate((0.0, 10.0, 0.5, 9.5, 0.2)):
+        srv.handle_upload(i % 4, {"w": jnp.full(6, x)}, 0, 16, t=float(i))
+    tree_s, meta = srv.state_dict()
+    save_pytree(str(tmp_path / "srv"), tree_s, extra=meta)
+
+    srv2 = EchoPFLServer(init, num_initial_clusters=2, seed=0)
+    raw_meta = restore_pytree(str(tmp_path / "srv"), like=None)[1]
+    template = srv2.state_template(raw_meta)
+    tree_r, meta_r = restore_pytree(str(tmp_path / "srv"), like=template)
+    srv2.load_state(tree_r, meta_r)
+
+    assert srv2.clustering.assignment == srv.clustering.assignment
+    assert srv2.staleness.snapshot() == srv.staleness.snapshot()
+    assert set(srv2.predictors) == set(srv.predictors)
+    for cid in srv.predictors:
+        assert srv2.predictors[cid].records == srv.predictors[cid].records
+    for cid, c in srv.clustering.clusters.items():
+        assert_tree_equal(c.center, srv2.clustering.clusters[cid].center)
+        assert srv2.clustering.clusters[cid].version == c.version
+    # the restored server keeps serving uploads
+    out = srv2.handle_upload(0, {"w": jnp.full(6, 0.1)}, 1, 16, t=9.0)
+    assert out

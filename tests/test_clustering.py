@@ -1,0 +1,187 @@
+"""Unit tests for data-aware dynamic clustering (paper Sec. 4)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.clustering import Cluster, DynamicClustering
+
+
+def vec(*xs):
+    return {"w": jnp.asarray(xs, jnp.float32)}
+
+
+def make_clustering(num_initial=2, **kw):
+    return DynamicClustering(num_initial, **kw)
+
+
+class TestOnArrivalAssignment:
+    def test_first_c_arrivals_seed_centers(self):
+        cl = make_clustering(num_initial=3)
+        for i in range(3):
+            cid, created = cl.assign(f"client{i}", vec(float(i * 10)))
+            assert created
+        assert len(cl.clusters) == 3
+
+    def test_later_arrival_joins_nearest_center(self):
+        cl = make_clustering(num_initial=2)
+        cl.assign("a", vec(0.0))
+        cl.assign("b", vec(100.0))
+        cid, created = cl.assign("c", vec(99.0))
+        assert not created
+        assert cid == cl.assignment["b"]
+
+    def test_hysteresis_blocks_marginal_switches(self):
+        cl = make_clustering(num_initial=2)
+        cl.assign("a", vec(0.0))
+        cl.assign("b", vec(100.0))
+        cl.assign("c", vec(10.0))      # joins cluster of "a"
+        home = cl.assignment["c"]
+        # next upload is barely closer to the other center: should stay
+        cid, _ = cl.assign("c", vec(52.0))
+        assert cid == home
+        # decisively closer: switches
+        cid, _ = cl.assign("c", vec(95.0))
+        assert cid == cl.assignment["b"]
+
+    def test_partial_finetune_members_stay_put(self):
+        cl = make_clustering(num_initial=2)
+        cl.assign("a", vec(0.0))
+        cl.assign("b", vec(100.0))
+        cl.assign("c", vec(1.0))
+        cid = cl.assignment["c"]
+        cl.clusters[cid].partial_finetune.add("c")
+        got, _ = cl.assign("c", vec(100.0))  # would switch without the pin
+        assert got == cid
+
+
+class TestAggregation:
+    def test_mix_rate_lerp(self):
+        cl = make_clustering(num_initial=1, mix_rate=0.25)
+        cl.assign("a", vec(0.0, 0.0))
+        cid = cl.assignment["a"]
+        cl.aggregate(cid, vec(4.0, 8.0))
+        np.testing.assert_allclose(np.asarray(cl.clusters[cid].center["w"]), [1.0, 2.0])
+        assert cl.clusters[cid].version == 1
+
+    def test_no_staleness_decay(self):
+        """Challenge #2: stale updates aggregate at full weight — the lerp
+        coefficient does not depend on any staleness argument."""
+        cl = make_clustering(num_initial=1, mix_rate=0.5)
+        cl.assign("a", vec(0.0))
+        cid = cl.assignment["a"]
+        before = float(cl.clusters[cid].center["w"][0])
+        cl.aggregate(cid, vec(10.0))  # no staleness parameter exists at all
+        after = float(cl.clusters[cid].center["w"][0])
+        assert after == before + 0.5 * (10.0 - before)
+
+
+class TestMerge:
+    def test_merge_pair_moves_members_and_lifts_pf(self):
+        cl = make_clustering(num_initial=2)
+        cl.assign("a", vec(0.0))
+        cl.assign("b", vec(100.0))
+        cl.assign("c", vec(99.0))
+        ca, cb = cl.assignment["a"], cl.assignment["b"]
+        cl.clusters[cb].partial_finetune.add("c")
+        merged = cl.merge_pair(ca, cb, lambda p: p)
+        assert merged == cb  # larger cluster is main
+        assert cl.clusters[merged].members == {"a", "b", "c"}
+        assert not cl.clusters[merged].partial_finetune
+        assert ca not in cl.clusters
+        assert cl.merges == 1
+
+    def test_merge_identical_centers_is_identity(self):
+        cl = make_clustering(num_initial=2)
+        cl.assign("a", vec(1.0, 2.0, 3.0))
+        cl.assign("b", vec(1.0, 2.0, 3.0))
+        ca, cb = cl.assignment["a"], cl.assignment["b"]
+        merged = cl.merge_pair(ca, cb, lambda p: p)
+        np.testing.assert_allclose(
+            np.asarray(cl.clusters[merged].center["w"]), [1.0, 2.0, 3.0], atol=1e-6
+        )
+
+    def test_should_merge_is_strict_capacity(self):
+        cl = make_clustering(num_initial=2, hm=2.0)
+        for i in range(4):
+            cl._new_cluster(vec(float(i)))
+        assert not cl.should_merge()  # at hm*C: stable
+        cl._new_cluster(vec(9.0))
+        assert cl.should_merge()  # above hm*C: merge
+
+    def test_nearest_pair_guard(self):
+        cl = make_clustering(num_initial=3)
+        for i, x in enumerate((0.0, 1.0, 100.0)):
+            c = cl._new_cluster(vec(x))
+            c.version = 5
+        pair = cl.nearest_pair(close_frac=0.5)
+        assert pair is not None
+        a, b = pair
+        xs = sorted(float(cl.clusters[c].center["w"][0]) for c in (a, b))
+        assert xs == [0.0, 1.0]
+        # all far apart -> no redundant pair
+        cl2 = make_clustering(num_initial=3)
+        for x in (0.0, 50.0, 100.0):
+            c = cl2._new_cluster(vec(x))
+            c.version = 5
+        assert cl2.nearest_pair(close_frac=0.5) is None
+        # disabled guard always returns the nearest
+        assert cl2.nearest_pair(close_frac=None) is not None
+
+
+class TestExpansion:
+    def _cluster_with_feedback(self, n=10):
+        cl = make_clustering(num_initial=1)
+        for i in range(n):
+            cl.assign(f"m{i}", vec(0.0))
+        cid = cl.assignment["m0"]
+        fb = {f"m{i}": 1.0 for i in range(n)}
+        return cl, cid, fb
+
+    def test_uniform_feedback_never_splits(self):
+        cl, cid, fb = self._cluster_with_feedback()
+        assert cl.expand(cid, fb) is None
+
+    def test_poor_fits_peeled_into_new_cluster(self):
+        cl, cid, fb = self._cluster_with_feedback()
+        fb["m9"] = 100.0
+        fb["m8"] = 90.0
+        uploads = {m: vec(50.0) for m in fb}
+        new = cl.expand(cid, fb, uploads=uploads, refine_round=1)
+        assert new is not None
+        assert cl.clusters[new].members == {"m8", "m9"}
+        assert cl.clusters[new].partial_finetune == {"m8", "m9"}
+        # child center is seeded from the peeled members' uploads, not parent
+        assert float(cl.clusters[new].center["w"][0]) == 50.0
+        assert cl.expansions == 1
+
+    def test_cooldown_blocks_back_to_back_splits(self):
+        cl, cid, fb = self._cluster_with_feedback()
+        fb["m9"] = 100.0
+        assert cl.expand(cid, fb, refine_round=1) is not None
+        fb2 = {m: v for m, v in fb.items() if m != "m9"}
+        fb2["m8"] = 100.0
+        assert cl.expand(cid, fb2, refine_round=2) is None  # cooling down
+        assert cl.expand(cid, fb2, refine_round=3) is not None
+
+    def test_peel_cap_stops_serial_churn(self):
+        cl, cid, fb = self._cluster_with_feedback()
+        cl.peel_counts["m9"] = 3
+        fb["m9"] = 100.0
+        assert cl.expand(cid, fb, refine_round=1) is None
+
+    def test_tiny_clusters_never_split(self):
+        cl = make_clustering(num_initial=1)
+        cl.assign("a", vec(0.0))
+        cl.assign("b", vec(0.0))
+        cid = cl.assignment["a"]
+        assert cl.expand(cid, {"a": 1.0, "b": 100.0}) is None
+
+
+def test_membership_matrix_blocks():
+    cl = make_clustering(num_initial=2)
+    cl.assign("a", vec(0.0))
+    cl.assign("b", vec(100.0))
+    cl.assign("c", vec(1.0))
+    m = cl.membership_matrix(["a", "b", "c"])
+    assert m[0, 2] and m[2, 0] and m[0, 0]
+    assert not m[0, 1] and not m[2, 1]

@@ -1,0 +1,89 @@
+"""Federated data substrate: partitioners + synthetic task generators."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.data.partition import dirichlet_partition, shard_partition
+from repro.data.synthetic import TASKS, make_task
+
+
+@given(
+    st.integers(2, 10),  # num_clients
+    st.integers(1, 3),   # classes per client
+    st.integers(0, 999),
+)
+@settings(deadline=None, max_examples=15)
+def test_shard_partition_class_budget(num_clients, cpc, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 6, size=600)
+    parts = shard_partition(labels, num_clients, cpc, rng)
+    assert len(parts) == num_clients
+    for part in parts:
+        assert len(part) > 0
+        assert len(np.unique(labels[part])) <= cpc
+
+
+@given(st.integers(2, 8), st.floats(0.1, 5.0), st.integers(0, 999))
+@settings(deadline=None, max_examples=15)
+def test_dirichlet_partition_covers_disjointly(num_clients, alpha, seed):
+    rng = np.random.default_rng(seed)
+    labels = rng.integers(0, 5, size=800)
+    parts = dirichlet_partition(labels, num_clients, alpha, rng)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == len(np.unique(allidx))  # disjoint
+    for p in parts:
+        assert len(p) >= 8  # min_size guarantee
+
+
+@pytest.mark.parametrize("name", sorted(TASKS))
+def test_make_task_structure(name):
+    rng = np.random.default_rng(0)
+    task = make_task(name, num_clients=12, rng=rng, latent_clusters=3, samples_per_client=40)
+    spec = TASKS[name]
+    assert task.num_clients == 12
+    seen_clusters = set()
+    for c in task.clients:
+        assert c.x_train.shape[1] == spec["dim"]
+        assert c.n > 0 and len(c.y_test) > 0
+        # non-IID: each client's label support is a small subset
+        assert len(np.unique(c.y_train)) <= spec["classes_per_client"]
+        seen_clusters.add(c.latent_cluster)
+    assert len(seen_clusters) > 1
+
+
+def test_same_cluster_shares_label_subset():
+    """The paper's regime: a latent cluster is a device group sharing a class
+    subset (with unbalanced within-class proportions)."""
+    rng = np.random.default_rng(1)
+    task = make_task("image_recognition", 16, rng, latent_clusters=4, samples_per_client=64)
+    by_cluster: dict[int, set] = {}
+    for c in task.clients:
+        by_cluster.setdefault(c.latent_cluster, set()).update(np.unique(c.y_train).tolist())
+    subsets = list(by_cluster.values())
+    for s in subsets:
+        assert len(s) <= TASKS["image_recognition"]["classes_per_client"]
+    assert len({frozenset(s) for s in subsets}) > 1  # distinct subsets across clusters
+
+
+def test_shift_client_changes_latent_cluster():
+    rng = np.random.default_rng(2)
+    task = make_task("har", 8, rng, latent_clusters=3, samples_per_client=40)
+    victim = 0
+    old = task.clients[victim]
+    old_cluster = old.latent_cluster
+    new_cluster = (old_cluster + 1) % 3
+    task.shift_client(victim, new_cluster, rng)
+    fresh = task.clients[victim]
+    assert fresh.latent_cluster == new_cluster
+    assert fresh.x_train.shape == old.x_train.shape
+    assert not np.allclose(fresh.x_train, old.x_train)  # resampled under new transform
+
+
+def test_label_histogram():
+    rng = np.random.default_rng(3)
+    task = make_task("har", 4, rng, latent_clusters=2, samples_per_client=50)
+    c = task.clients[0]
+    h = c.label_histogram(6)
+    assert h.sum() == len(c.y_train)
+    assert h.shape == (6,)

@@ -1,0 +1,136 @@
+"""The loop-aware HLO cost model's billing rules on synthetic HLO: in-place
+dynamic-update-slice, window billing for scan-xs slicing, S^2 filtering,
+and trip-count multiplication — the §Perf instrument's unit tests."""
+import numpy as np
+
+from repro.launch.hlo_cost import HloCostModel, analyze
+
+DUS_HLO = """
+HloModule m
+ENTRY %main (p0: f32[1024,256], p1: f32[8,256]) -> f32[1024,256] {
+  %p0 = f32[1024,256]{1,0} parameter(0)
+  %p1 = f32[8,256]{1,0} parameter(1)
+  %c = s32[] constant(16)
+  ROOT %dus = f32[1024,256]{1,0} dynamic-update-slice(%p0, %p1, %c, %c)
+}
+"""
+
+
+def test_dus_billed_in_place():
+    out = analyze(DUS_HLO)
+    # 2 x update region (8x256x4B) + index scalars, NOT the 1MB carried buffer
+    assert out["bytes"] == 2 * 8 * 256 * 4 + 8
+
+
+DS_HLO = """
+HloModule m
+ENTRY %main (p0: f32[4096,512]) -> f32[16,512] {
+  %p0 = f32[4096,512]{1,0} parameter(0)
+  %c = s32[] constant(0)
+  ROOT %ds = f32[16,512]{1,0} dynamic-slice(%p0, %c, %c), dynamic_slice_sizes={16,512}
+}
+"""
+
+
+def test_dynamic_slice_billed_by_window():
+    out = analyze(DS_HLO)
+    assert out["bytes"] == 2 * 16 * 512 * 4  # window in + out, not 8MB source
+
+
+FUSION_SLICE_HLO = """
+HloModule m
+%fused (param_0: f32[4096,512], param_1: s32[]) -> f32[16,512] {
+  %param_0 = f32[4096,512]{1,0} parameter(0)
+  %param_1 = s32[] parameter(1)
+  %ds = f32[16,512]{1,0} dynamic-slice(%param_0, %param_1, %param_1), dynamic_slice_sizes={16,512}
+  ROOT %t = f32[16,512]{1,0} tanh(%ds)
+}
+ENTRY %main (p0: f32[4096,512], i0: s32[]) -> f32[16,512] {
+  %p0 = f32[4096,512]{1,0} parameter(0)
+  %i0 = s32[] parameter(1)
+  ROOT %f = f32[16,512]{1,0} fusion(%p0, %i0), kind=kLoop, calls=%fused
+}
+"""
+
+
+def test_fusion_param_window_billing():
+    out = analyze(FUSION_SLICE_HLO)
+    # input billed at the slice (16x512) + 4B index scalar, plus the result
+    assert out["bytes"] == (16 * 512 + 16 * 512) * 4 + 4
+
+
+WHILE_HLO = """
+HloModule m
+%body (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,64]{1,0} get-tuple-element(%p), index=1
+  %y = f32[64,64]{1,0} add(%x, %x)
+  %one = s32[] constant(1)
+  %i2 = s32[] add(%i, %one)
+  ROOT %r = (s32[], f32[64,64]) tuple(%i2, %y)
+}
+%cond (p: (s32[], f32[64,64])) -> pred[] {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+ENTRY %main (x: f32[64,64]) -> (s32[], f32[64,64]) {
+  %x = f32[64,64]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %init = (s32[], f32[64,64]) tuple(%z, %x)
+  ROOT %w = (s32[], f32[64,64]) while(%init), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+}
+"""
+
+
+def test_while_trip_multiplication():
+    out = analyze(WHILE_HLO)
+    one_iter = 64 * 64 + 1  # elementwise add + loop-counter increment
+    assert out["flops"] == 10 * one_iter
+    # add: result + 2 operands (x as both args), + 12B counter math, x10 trips
+    assert out["bytes"] == 10 * (3 * 64 * 64 * 4 + 12)
+
+
+S2_HLO = """
+HloModule m
+ENTRY %main (q: f32[2,4096,4096], w: f32[4096,128]) -> f32[2,4096,128] {
+  %q = f32[2,4096,4096]{2,1,0} parameter(0)
+  %w = f32[4096,128]{1,0} parameter(1)
+  %s = f32[2,4096,4096]{2,1,0} tanh(%q)
+  ROOT %o = f32[2,4096,128]{2,1,0} dot(%s, %w), lhs_contracting_dims={2}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_s2_filter_skips_trailing_shapes():
+    full = analyze(S2_HLO)
+    filt = analyze(S2_HLO, skip_trailing=frozenset({(4096, 4096)}))
+    s2_bytes = 2 * 4096 * 4096 * 4
+    # tanh billed result+operand, dot billed lhs: 3 S^2 tensors disappear
+    assert full["bytes"] - filt["bytes"] == 3 * s2_bytes
+    assert filt["skipped_bytes_once"] >= 3 * s2_bytes  # + unbilled param scans
+    assert filt["flops"] == full["flops"]  # filter touches bytes only
+
+
+COLLECTIVE_HLO = """
+HloModule m
+ENTRY %main (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%x), to_apply=%add, replica_groups={}
+  ROOT %ag = f32[1024]{0} all-gather(%ar), dimensions={0}, replica_groups={}
+}
+%add (a: f32[], b: f32[]) -> f32[] {
+  %a = f32[] parameter(0)
+  %b = f32[] parameter(1)
+  ROOT %s = f32[] add(%a, %b)
+}
+"""
+
+
+def test_collectives_bucketed_by_opcode():
+    out = analyze(COLLECTIVE_HLO)
+    assert out["collectives"]["all-reduce"] == 1024 * 4
+    assert out["collectives"]["all-gather"] == 1024 * 4
+    assert out["collective_count"] == 2

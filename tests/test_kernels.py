@@ -1,0 +1,141 @@
+"""Per-kernel allclose sweeps: every Pallas kernel (interpret=True on CPU)
+against its pure-jnp oracle in ref.py, across shapes and dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.chi2_feedback import chi2_feedback
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.l1_distance import l1_distance
+from repro.kernels.merge_attention import merge_attention
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------- flash attn
+FLASH_CASES = [
+    # B, H, KV, Sq, Sk, hd, causal, window, softcap
+    (1, 4, 2, 128, 128, 64, True, None, None),
+    (2, 4, 4, 64, 64, 32, True, None, 50.0),
+    (1, 2, 1, 100, 100, 80, True, 32, None),      # GQA 2:1, ragged seq, sliding window
+    (1, 2, 2, 64, 192, 128, False, None, None),   # cross/backward-style, non-causal
+    (2, 8, 2, 1, 256, 64, True, None, None),      # decode: 1 query vs long KV
+    (1, 4, 4, 256, 256, 16, True, None, None),    # tiny head dim
+    (1, 16, 2, 32, 32, 64, True, 8, 30.0),        # window + softcap together
+]
+
+
+@pytest.mark.parametrize("case", FLASH_CASES, ids=[str(c) for c in FLASH_CASES])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(case, dtype):
+    B, H, KV, Sq, Sk, hd, causal, window, softcap = case
+    key = jax.random.PRNGKey(hash(case) % 2**31)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, H, Sq, hd), dtype)
+    k = jax.random.normal(kk, (B, KV, Sk, hd), dtype)
+    v = jax.random.normal(kv, (B, KV, Sk, hd), dtype)
+    q_pos0 = Sk - Sq if causal and Sk > Sq else 0
+    got = flash_attention(
+        q, k, v, causal=causal, window=window, softcap=softcap, q_pos0=q_pos0, interpret=True
+    )
+    want = ref.flash_attention_ref(
+        q, k, v, causal=causal, window=window, softcap=softcap, q_pos0=q_pos0
+    )
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=ATOL[dtype], rtol=ATOL[dtype],
+    )
+
+
+def test_flash_attention_rejects_bad_gqa():
+    q = jnp.zeros((1, 3, 8, 16))
+    k = v = jnp.zeros((1, 2, 8, 16))
+    with pytest.raises(Exception):
+        flash_attention(q, k, v, interpret=True)
+
+
+# --------------------------------------------------------------- l1 distance
+@pytest.mark.parametrize("n", [1, 100, 1000, 65536, 70000])
+@pytest.mark.parametrize("c", [1, 2, 5])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l1_distance_matches_ref(n, c, dtype):
+    key = jax.random.PRNGKey(n * 7 + c)
+    u = jax.random.normal(key, (n,), dtype)
+    centers = jax.random.normal(jax.random.PRNGKey(n + c), (c, n), dtype)
+    got = np.asarray(l1_distance(u, centers, interpret=True))
+    want = np.asarray(ref.l1_distance_ref(u, centers))
+    np.testing.assert_allclose(got, want, rtol=3e-3 if dtype == jnp.bfloat16 else 1e-5)
+
+
+def test_l1_distance_zero_is_zero():
+    u = jnp.ones((4096,))
+    centers = jnp.stack([u, -u])
+    d = np.asarray(l1_distance(u, centers, interpret=True))
+    assert d[0] == 0.0
+    assert np.isclose(d[1], 2 * 4096)
+
+
+# ----------------------------------------------------------- merge attention
+@pytest.mark.parametrize("n", [100, 4096, 70000])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_merge_attention_matches_ref(n, dtype):
+    key = jax.random.PRNGKey(n)
+    k1, k2, k3 = jax.random.split(key, 3)
+    vm = jax.random.normal(k1, (n,), dtype)
+    va = jax.random.normal(k2, (n,), dtype)
+    vt = jax.random.normal(k3, (n,), dtype)
+    got = np.asarray(merge_attention(vm, va, vt, interpret=True))
+    want, alpha = ref.merge_attention_ref(vm, va, vt)
+    np.testing.assert_allclose(got, np.asarray(want), atol=1e-5, rtol=1e-5)
+    a = np.asarray(alpha)
+    assert (a >= 0).all() and (a <= 1 + 1e-6).all()
+
+
+def test_merge_attention_algorithm1_semantics():
+    """Where assumed & posterior directions agree, alpha>0 pulls toward aux;
+    where they disagree, alpha=0 keeps main (Algorithm 1's attention map)."""
+    vm = jnp.zeros((4,))
+    va = jnp.asarray([1.0, 1.0, -1.0, 2.0])   # assumed directions
+    vt = jnp.asarray([1.0, -1.0, 1.0, 2.0])   # posterior: agree, disagree, disagree, agree(max)
+    merged, alpha = ref.merge_attention_ref(vm, va, vt)
+    a = np.asarray(alpha)
+    assert a[1] == 0.0 and a[2] == 0.0          # sign disagreement -> keep main
+    assert np.isclose(a[3], 1.0)                # strongest agreement -> full aux
+    m = np.asarray(merged)
+    assert m[1] == 0.0 and m[2] == 0.0
+    assert np.isclose(m[3], 2.0)
+
+
+# ------------------------------------------------------------- chi2 feedback
+@pytest.mark.parametrize("m,j", [(1, 10), (7, 6), (300, 9), (64, 2), (5, 200)])
+def test_chi2_feedback_matches_ref(m, j):
+    key = jax.random.PRNGKey(m * 31 + j)
+    f_pred = jax.random.uniform(key, (m, j)) * 100
+    f_true = jax.random.uniform(jax.random.PRNGKey(j), (m, j)) * 100 + 1.0
+    s_soft = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(m), (m, j)), axis=-1)
+    got = np.asarray(chi2_feedback(f_pred, f_true, s_soft, interpret=True))
+    want = np.asarray(ref.chi2_feedback_ref(f_pred, f_true, s_soft))
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=1e-6)
+
+
+def test_chi2_feedback_perfect_fit_is_zero():
+    f = jnp.asarray([[10.0, 20.0, 30.0]])
+    s = jnp.asarray([[0.2, 0.3, 0.5]])
+    g = np.asarray(chi2_feedback(f, f, s, interpret=True))
+    assert np.allclose(g, 0.0)
+
+
+def test_chi2_feedback_uniform_soft_labels_damp():
+    """Var(S) de-confounds training stage (Eq. 3): an untrained model
+    (uniform soft labels) produces near-zero feedback even when the
+    predicted histogram mismatches."""
+    f_pred = jnp.asarray([[100.0, 0.0, 0.0]])
+    f_true = jnp.asarray([[1.0, 50.0, 49.0]])
+    s_uniform = jnp.full((1, 3), 1 / 3)
+    s_sharp = jnp.asarray([[0.98, 0.01, 0.01]])
+    g_u = float(chi2_feedback(f_pred, f_true, s_uniform, interpret=True)[0])
+    g_s = float(chi2_feedback(f_pred, f_true, s_sharp, interpret=True)[0])
+    assert g_u < 1e-6
+    assert g_s > g_u

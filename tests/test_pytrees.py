@@ -1,0 +1,99 @@
+"""Hypothesis property tests for the pytree math the protocol is built on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.common import pytrees as P
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def tree_strategy(draw):
+    shapes = draw(
+        st.lists(st.tuples(st.integers(1, 5), st.integers(1, 5)), min_size=1, max_size=4)
+    )
+    seed = draw(st.integers(0, 2**16))
+    rng = np.random.default_rng(seed)
+    return {
+        f"layer{i}": {"w": jnp.asarray(rng.normal(size=s), jnp.float32)}
+        for i, s in enumerate(shapes)
+    }
+
+
+trees = st.composite(lambda draw: tree_strategy(draw))()
+
+
+@given(trees)
+def test_flatten_unflatten_roundtrip(t):
+    vec = P.tree_flat_vector(t)
+    back = P.tree_unflatten_vector(vec, t)
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(back)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+
+
+@given(trees)
+def test_flat_vector_length_is_param_count(t):
+    assert P.tree_flat_vector(t).shape[0] == P.tree_num_params(t)
+
+
+@given(trees, st.floats(0, 1))
+def test_lerp_endpoints_and_midpoint(t, alpha):
+    zeros = P.tree_zeros_like(t)
+    mid = P.tree_lerp(zeros, t, alpha)
+    for a, b in zip(jax.tree_util.tree_leaves(mid), jax.tree_util.tree_leaves(t)):
+        np.testing.assert_allclose(np.asarray(a), alpha * np.asarray(b), rtol=1e-5, atol=1e-6)
+
+
+@given(trees)
+def test_l1_metric_properties(t):
+    """Symmetry, identity, and triangle inequality of the Eq. 1 distance."""
+    shifted = P.tree_scale(t, 1.5)
+    third = P.tree_add(t, P.tree_scale(t, -0.25))
+    d_ab = float(P.tree_l1(t, shifted))
+    d_ba = float(P.tree_l1(shifted, t))
+    assert np.isclose(d_ab, d_ba, rtol=1e-6)
+    assert float(P.tree_l1(t, t)) == 0.0
+    d_ac = float(P.tree_l1(t, third))
+    d_cb = float(P.tree_l1(third, shifted))
+    assert d_ab <= d_ac + d_cb + 1e-4
+
+
+@given(trees)
+def test_weighted_mean_convexity(t):
+    """Weighted mean of {t, 3t} with weights (w, 1-w) stays within hull."""
+    t3 = P.tree_scale(t, 3.0)
+    m = P.tree_weighted_mean([t, t3], [1.0, 3.0])
+    for leaf, l1, l3 in zip(
+        jax.tree_util.tree_leaves(m), jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(t3)
+    ):
+        lo = np.minimum(np.asarray(l1), np.asarray(l3)) - 1e-5
+        hi = np.maximum(np.asarray(l1), np.asarray(l3)) + 1e-5
+        assert (np.asarray(leaf) >= lo).all() and (np.asarray(leaf) <= hi).all()
+
+
+@given(trees)
+def test_weighted_mean_of_identical_is_identity(t):
+    m = P.tree_weighted_mean([t, t, t], [1, 5, 2])
+    for a, b in zip(jax.tree_util.tree_leaves(m), jax.tree_util.tree_leaves(t)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+
+
+@given(trees, st.floats(-2, 2))
+def test_axpy_definition(t, alpha):
+    y = P.tree_scale(t, 0.5)
+    out = P.tree_axpy(alpha, t, y)
+    for o, x, yy in zip(
+        jax.tree_util.tree_leaves(out), jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(y)
+    ):
+        np.testing.assert_allclose(
+            np.asarray(o), alpha * np.asarray(x) + np.asarray(yy), rtol=1e-5, atol=1e-5
+        )
+
+
+@given(trees)
+def test_l2_vs_numpy(t):
+    vec = np.asarray(P.tree_flat_vector(t))
+    np.testing.assert_allclose(float(P.tree_l2(t)), np.linalg.norm(vec), rtol=1e-5)
