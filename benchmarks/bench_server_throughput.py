@@ -1,0 +1,122 @@
+"""Server upload throughput: device-resident plane vs. per-cluster pytrees.
+
+Measures end-to-end ``handle_upload`` rate (assignment + staleness + CI push
++ aggregation + unicast materialization) for both storage backends across a
+clients x clusters grid. The pytree path re-flattens and re-stacks every
+cluster center per arriving upload; the plane path does one flatten, one
+row gather, and the fused assign+lerp kernel — the gap widens with cluster
+count, which is exactly the scaling dimension EchoPFL's refinement loop
+grows (hm * C clusters held stably).
+
+The broadcast predictor is disabled so the measurement isolates the
+parameter-coordination hot path (the RNN decision cost is identical in
+both backends); a secondary table reports the broadcast-on rate.
+
+    PYTHONPATH=src python -m benchmarks.run --only server_throughput
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import save_result, table
+from repro.core.server import EchoPFLServer
+
+
+def _model(dim_hidden: int):
+    """MLP-shaped pytree, ~26k params at the default width (realistic ratio
+    of leaf count to parameter count for the paper's on-device models)."""
+    k = jax.random.PRNGKey(0)
+    ks = jax.random.split(k, 6)
+    h = dim_hidden
+    return {
+        "dense1": {"w": jax.random.normal(ks[0], (64, h)), "b": jnp.zeros((h,))},
+        "dense2": {"w": jax.random.normal(ks[1], (h, h)), "b": jnp.zeros((h,))},
+        "dense3": {"w": jax.random.normal(ks[2], (h, h)), "b": jnp.zeros((h,))},
+        "head": {"w": jax.random.normal(ks[3], (h, 10)), "b": jnp.zeros((10,))},
+    }
+
+
+def _uploads(num_clients: int, num_clusters: int, n: int, template, seed=0):
+    """Pre-generated upload stream: clients orbit well-separated anchors so
+    the assignment paths exercise real multi-cluster distance math."""
+    rng = np.random.default_rng(seed)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    stream = []
+    for i in range(n):
+        client = int(rng.integers(0, num_clients))
+        anchor = 50.0 * (client % num_clusters) + float(rng.normal())
+        upd = jax.tree_util.tree_unflatten(
+            treedef, [leaf + anchor for leaf in leaves]
+        )
+        stream.append((client, upd))
+    return stream
+
+
+def _measure(backend: str, num_clients: int, num_clusters: int, *,
+             enable_broadcast: bool, n_timed: int, template) -> float:
+    srv = EchoPFLServer(
+        template,
+        num_initial_clusters=num_clusters,
+        refine_every=10**9,  # refinement is a cold path; measured separately
+        enable_broadcast=enable_broadcast,
+        plane_backend=backend,
+        seed=0,
+    )
+    # warm until every client has a plane row and capacity growth + jit
+    # shapes have settled, so the timed window sees steady state only
+    warm = _uploads(num_clients, num_clusters, max(64, 3 * num_clients), template, seed=1)
+    for i, (client, upd) in enumerate(warm):
+        srv.handle_upload(client, upd, 0, 8, t=float(i))
+    stream = _uploads(num_clients, num_clusters, n_timed, template, seed=2)
+    t0 = time.perf_counter()
+    for i, (client, upd) in enumerate(stream):
+        out = srv.handle_upload(client, upd, 0, 8, t=float(i))
+    # block on the last downlink so device work is inside the window
+    jax.block_until_ready(jax.tree_util.tree_leaves(out[-1].params))
+    dt = time.perf_counter() - t0
+    return n_timed / dt
+
+
+def run(quick: bool = False) -> None:
+    template = _model(64 if quick else 128)
+    n_timed = 100 if quick else 300
+    grid = [(16, 4), (64, 8)] if quick else [(16, 4), (64, 8), (64, 16), (128, 8)]
+    rows = []
+    for num_clients, num_clusters in grid:
+        row = {"clients": num_clients, "clusters": num_clusters}
+        for backend in ("pytree", "plane"):
+            row[backend] = _measure(
+                backend, num_clients, num_clusters,
+                enable_broadcast=False, n_timed=n_timed, template=template,
+            )
+        row["speedup"] = row["plane"] / row["pytree"]
+        rows.append(row)
+    print(table(rows, ["clients", "clusters", "pytree", "plane", "speedup"],
+                "uploads/sec (broadcast predictor off — pure coordination path)"))
+
+    bcast_rows = []
+    for num_clients, num_clusters in grid[:2]:
+        row = {"clients": num_clients, "clusters": num_clusters}
+        for backend in ("pytree", "plane"):
+            row[backend] = _measure(
+                backend, num_clients, num_clusters,
+                enable_broadcast=True, n_timed=n_timed, template=template,
+            )
+        row["speedup"] = row["plane"] / row["pytree"]
+        bcast_rows.append(row)
+    print(table(bcast_rows, ["clients", "clusters", "pytree", "plane", "speedup"],
+                "uploads/sec (broadcast predictor on)"))
+
+    save_result("server_throughput", {
+        "coordination_only": rows,
+        "with_broadcast": bcast_rows,
+        "n_timed": n_timed,
+    })
+
+
+if __name__ == "__main__":
+    run()

@@ -20,6 +20,7 @@ from benchmarks import (
     bench_drift_adaptation,
     bench_hm_sensitivity,
     bench_roofline,
+    bench_server_throughput,
     bench_slow_device_drop,
 )
 
@@ -34,6 +35,7 @@ BENCHES = {
     "hm_sensitivity": bench_hm_sensitivity.run,     # Fig.16
     "drift_adaptation": bench_drift_adaptation.run, # Fig.18 / Fig.19
     "roofline": bench_roofline.run,                 # deliverable (g)
+    "server_throughput": bench_server_throughput.run,  # plane vs pytree hot path
 }
 
 

@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# Tier-1 CI: the default (fast) suite plus the kernel-parity sweeps under
+# both kernel backends and both server storage backends. No cache provider
+# so repeated container runs never trip over a stale .pytest_cache.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
+
+echo "=== tier-1 (default backends: REPRO_KERNELS=auto, REPRO_PLANE=plane) ==="
+python -m pytest -q -p no:cacheprovider -m "not slow"
+
+PARITY_TESTS=(tests/test_batched_kernels.py tests/test_kernels.py tests/test_parameter_plane.py)
+
+echo "=== kernel parity under REPRO_KERNELS=ref ==="
+REPRO_KERNELS=ref python -m pytest -q -p no:cacheprovider "${PARITY_TESTS[@]}"
+
+echo "=== kernel parity under REPRO_KERNELS=pallas (interpret on CPU) ==="
+REPRO_KERNELS=pallas python -m pytest -q -p no:cacheprovider "${PARITY_TESTS[@]}"
+
+echo "=== server/clustering on the pytree storage backend (REPRO_PLANE=pytree) ==="
+REPRO_PLANE=pytree python -m pytest -q -p no:cacheprovider -m "not slow" \
+    tests/test_parameter_plane.py tests/test_clustering.py tests/test_server_integration.py
+
+echo "ci.sh: all green"

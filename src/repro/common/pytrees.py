@@ -65,23 +65,73 @@ def tree_l2(a: PyTree, b: PyTree | None = None) -> jax.Array:
     return jnp.sqrt(jnp.sum(jnp.stack(parts))) if parts else jnp.zeros(())
 
 
+class FlattenSpec:
+    """Precomputed flatten/unflatten plan for one pytree structure.
+
+    ``tree_flat_vector``/``tree_unflatten_vector`` historically re-derived
+    the treedef, leaf shapes, and offsets on *every* call — measurable pure
+    Python overhead on the server hot path, where every arriving upload is
+    flattened and every downlink materialized. A spec derives that plan
+    once per (treedef, shapes, dtypes) and jit-caches the two adapters, so
+    repeat calls are a single compiled dispatch. Obtain specs via
+    :func:`flatten_spec`, which memoizes them globally.
+    """
+
+    def __init__(self, template: PyTree, dtype=jnp.float32):
+        leaves, treedef = jax.tree_util.tree_flatten(template)
+        self.treedef = treedef
+        self.shapes = tuple(tuple(jnp.shape(x)) for x in leaves)
+        self.dtypes = tuple(jnp.result_type(x) for x in leaves)
+        self.sizes = tuple(math.prod(s) if s else 1 for s in self.shapes)
+        offsets, off = [], 0
+        for n in self.sizes:
+            offsets.append(off)
+            off += n
+        self.offsets = tuple(offsets)
+        self.dim = off
+        self.dtype = jnp.dtype(dtype)
+        self.flatten = jax.jit(self._flatten)
+        self.unflatten = jax.jit(self._unflatten)
+
+    def _flatten(self, tree: PyTree) -> jax.Array:
+        leaves = jax.tree_util.tree_leaves(tree)
+        if not leaves:
+            return jnp.zeros((0,), self.dtype)
+        return jnp.concatenate([jnp.ravel(x).astype(self.dtype) for x in leaves])
+
+    def _unflatten(self, vec: jax.Array) -> PyTree:
+        out = [
+            jnp.reshape(vec[off : off + n], shape).astype(dt)
+            for off, n, shape, dt in zip(self.offsets, self.sizes, self.shapes, self.dtypes)
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
+
+_SPEC_CACHE: dict = {}
+
+
+def flatten_spec(template: PyTree, dtype=jnp.float32) -> FlattenSpec:
+    """Memoized :class:`FlattenSpec` for ``template``'s structure."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    key = (
+        treedef,
+        tuple((tuple(jnp.shape(x)), jnp.result_type(x)) for x in leaves),
+        jnp.dtype(dtype),
+    )
+    spec = _SPEC_CACHE.get(key)
+    if spec is None:
+        spec = _SPEC_CACHE[key] = FlattenSpec(template, dtype)
+    return spec
+
+
 def tree_flat_vector(a: PyTree, dtype=jnp.float32) -> jax.Array:
     """Flatten a parameter pytree into a single 1-D vector (stable leaf order)."""
-    leaves = jax.tree_util.tree_leaves(a)
-    if not leaves:
-        return jnp.zeros((0,), dtype)
-    return jnp.concatenate([jnp.ravel(x).astype(dtype) for x in leaves])
+    return flatten_spec(a, dtype).flatten(a)
 
 
 def tree_unflatten_vector(vec: jax.Array, like: PyTree) -> PyTree:
     """Inverse of :func:`tree_flat_vector` against a template pytree."""
-    leaves, treedef = jax.tree_util.tree_flatten(like)
-    out, off = [], 0
-    for leaf in leaves:
-        n = math.prod(leaf.shape) if leaf.shape else 1
-        out.append(jnp.reshape(vec[off : off + n], leaf.shape).astype(leaf.dtype))
-        off += n
-    return jax.tree_util.tree_unflatten(treedef, out)
+    return flatten_spec(like).unflatten(vec)
 
 
 def tree_num_params(a: PyTree) -> int:

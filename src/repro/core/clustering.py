@@ -10,44 +10,149 @@ Three mechanisms:
     direction attention; expansion peels the worst-feedback 20% of a cluster
     into a new cluster seeded by transfer from the old center, whose members
     do head-only fine-tuning until the next merge.
+
+Two storage backends, selected by ``REPRO_PLANE`` (or the ``backend``
+argument): ``plane`` (default) keeps every center and broadcast anchor as a
+row of a device-resident :class:`~repro.core.plane.ParameterPlane`, so the
+hot path — assignment distances, the mixed-rate blend, merge candidate
+search — runs on stacked flat matrices with no per-upload pytree
+flattening; ``pytree`` is the original per-cluster-pytree path, kept
+bit-compatible for parity testing and as the benchmark baseline. Both
+backends apply identical fp32 arithmetic, so cluster assignments match
+exactly.
 """
 from __future__ import annotations
 
-import dataclasses
+import os
 from typing import Any, Callable
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.common.pytrees import tree_flat_vector, tree_lerp, tree_unflatten_vector
+from repro.core.plane import ParameterPlane
 from repro.kernels import ops as K
 
 PyTree = Any
 
 
-@dataclasses.dataclass
+def default_backend() -> str:
+    return os.environ.get("REPRO_PLANE", "plane").lower()
+
+
 class Cluster:
-    cluster_id: int
-    center: PyTree
-    version: int = 0  # bumped on every aggregation into this cluster
-    members: set = dataclasses.field(default_factory=set)
-    partial_finetune: set = dataclasses.field(default_factory=set)  # expansion mode clients
-    pf_round: int = -1  # refine round in which partial_finetune was imposed
-    last_broadcast_version: int = 0
-    last_broadcast_center: PyTree | None = None
+    """One cluster branch. ``center`` and ``last_broadcast_center`` are live
+    pytree views; in plane mode they materialize on demand from plane rows
+    (cached until the row changes), so the matrices stay device-resident
+    and pytrees only exist at protocol boundaries."""
+
+    def __init__(
+        self,
+        cluster_id: int,
+        center: PyTree | None = None,
+        *,
+        plane: ParameterPlane | None = None,
+        row: int | None = None,
+        bcast_row: int | None = None,
+    ):
+        self.cluster_id = cluster_id
+        self.version = 0  # bumped on every aggregation into this cluster
+        self.members: set = set()
+        self.partial_finetune: set = set()  # expansion mode clients
+        self.pf_round = -1  # refine round in which partial_finetune was imposed
+        self.last_broadcast_version = 0
+        self._plane = plane
+        self._row = row
+        self._bcast_row = bcast_row
+        self._center_cache: PyTree | None = None
+        self._bcast_cache: PyTree | None = None
+        self._center_tree: PyTree | None = center if plane is None else None
+        self._bcast_tree: PyTree | None = None
 
     @property
     def size(self) -> int:
         return len(self.members)
 
+    # --------------------------------------------------------- pytree views
+    @property
+    def center(self) -> PyTree:
+        if self._plane is None:
+            return self._center_tree
+        if self._center_cache is None:
+            self._center_cache = self._plane.to_pytree(self._row)
+        return self._center_cache
+
+    @center.setter
+    def center(self, value: PyTree) -> None:
+        if self._plane is None:
+            self._center_tree = value
+        else:
+            self._plane.write(self._row, value)
+            self._center_cache = None
+
+    @property
+    def last_broadcast_center(self) -> PyTree:
+        if self._plane is None:
+            return self._bcast_tree
+        if self._bcast_cache is None:
+            self._bcast_cache = self._plane.to_pytree(self._bcast_row)
+        return self._bcast_cache
+
+    @last_broadcast_center.setter
+    def last_broadcast_center(self, value: PyTree) -> None:
+        if self._plane is None:
+            self._bcast_tree = value
+        else:
+            self._plane.write(self._bcast_row, value)
+            self._bcast_cache = None
+
+    # ----------------------------------------------------- plane-mode views
+    @property
+    def center_vec(self):
+        """Flat center vector (plane mode): a device row, no tree traversal."""
+        return self._plane.row(self._row)
+
+    @property
+    def broadcast_vec(self):
+        return self._plane.row(self._bcast_row)
+
+    def set_center_vec(self, vec) -> None:
+        self._plane.write(self._row, vec)
+        self._center_cache = None
+
+    def snapshot_broadcast(self) -> None:
+        """Record the current center as the broadcast anchor (row copy in
+        plane mode — the center pytree is never materialized for this)."""
+        if self._plane is None:
+            self._bcast_tree = self._center_tree
+        else:
+            self._plane.copy_row(self._row, self._bcast_row)
+            self._bcast_cache = None
+
+    def release(self) -> None:
+        """Return this cluster's plane rows to the free list."""
+        if self._plane is not None:
+            self._plane.free(self._row)
+            self._plane.free(self._bcast_row)
+
 
 class DynamicClustering:
     """Server-side cluster registry with incremental init + refinement."""
 
-    def __init__(self, num_initial: int, mix_rate: float = 0.5, hm: float = 2.0):
+    def __init__(
+        self,
+        num_initial: int,
+        mix_rate: float = 0.5,
+        hm: float = 2.0,
+        backend: str | None = None,
+    ):
         self.num_initial = num_initial
         self.mix_rate = mix_rate
         self.hm = hm  # merge trigger: merge when count >= hm * num_initial
+        self.backend = (backend or default_backend()).lower()
+        if self.backend not in ("plane", "pytree"):
+            raise ValueError(f"REPRO_PLANE backend must be plane|pytree, got {self.backend}")
+        self.plane: ParameterPlane | None = None  # built from the first center's structure
         self.clusters: dict[int, Cluster] = {}
         self._next_id = 0
         self.assignment: dict[Any, int] = {}
@@ -55,16 +160,69 @@ class DynamicClustering:
         self.expansions = 0
         self.peel_counts: dict[Any, int] = {}  # anti-churn: cap per-client peels
         self._last_expand_round: dict[int, int] = {}
+        # assign-time flatten + fused blend, reused by the same upload's
+        # aggregate call: (update object, argmin cluster, u vec, blended vec,
+        # center version the blend was computed from). The update itself is
+        # held (not its id()) so a recycled object address can never alias a
+        # stale cache entry.
+        self._pending: tuple[Any, int | None, Any, Any, int] | None = None
 
     # ------------------------------------------------------------------ init
+    def _ensure_plane(self, template: PyTree) -> None:
+        if self.backend == "plane" and self.plane is None:
+            self.plane = ParameterPlane(template, capacity=max(8, 4 * self.num_initial))
+
     def _new_cluster(self, center: PyTree) -> Cluster:
-        c = Cluster(cluster_id=self._next_id, center=center)
-        c.last_broadcast_center = center
+        """``center`` may be a pytree or (plane mode) an already-flat row."""
+        if self.backend == "plane":
+            self._ensure_plane(center)
+            row = self.plane.alloc(center)
+            bcast_row = self.plane.alloc()
+            self.plane.copy_row(row, bcast_row)
+            c = Cluster(
+                cluster_id=self._next_id, plane=self.plane, row=row, bcast_row=bcast_row
+            )
+        else:
+            c = Cluster(cluster_id=self._next_id, center=center)
+            c.last_broadcast_center = center
         self.clusters[self._next_id] = c
         self._next_id += 1
         return c
 
+    def restore_cluster(self, cid: int, center: PyTree, bcast_center: PyTree) -> Cluster:
+        """Rebuild one cluster from checkpointed pytrees (elastic restart)."""
+        if self.backend == "plane":
+            self._ensure_plane(center)
+            row = self.plane.alloc(center)
+            bcast_row = self.plane.alloc(bcast_center)
+            c = Cluster(cluster_id=cid, plane=self.plane, row=row, bcast_row=bcast_row)
+        else:
+            c = Cluster(cluster_id=cid, center=center)
+            c.last_broadcast_center = bcast_center
+        self.clusters[cid] = c
+        return c
+
+    def drop_cluster(self, cid: int) -> None:
+        self.clusters.pop(cid).release()
+
+    def reset(self) -> None:
+        """Drop every cluster (and return its plane rows) before a restore."""
+        for c in self.clusters.values():
+            c.release()
+        self.clusters = {}
+
     # -------------------------------------------------------------- assign
+    def upload_vec(self, update: PyTree):
+        """Flat view of ``update`` (plane mode), reusing the assign-time
+        flatten when this is the same object ``assign`` just processed."""
+        p = self._pending
+        if p is not None and p[0] is update:
+            return p[2]
+        self._ensure_plane(update)
+        u = self.plane.from_pytree(update)
+        self._pending = (update, None, u, None, -1)
+        return u
+
     def assign(self, client_id, update: PyTree, switch_margin: float = 0.1) -> tuple[int, bool]:
         """On-arrival assignment (Eq. 1). Returns (cluster_id, is_new_cluster).
 
@@ -77,6 +235,8 @@ class DynamicClustering:
         prev = self.assignment.get(client_id)
         if prev is not None and client_id in self.clusters[prev].partial_finetune:
             return prev, False  # expansion members stay put until next merge
+        if self.backend == "plane":
+            return self._assign_plane(client_id, update, switch_margin, prev)
         if len(self.clusters) < self.num_initial:
             c = self._new_cluster(update)
             self._move(client_id, c.cluster_id)
@@ -86,6 +246,36 @@ class DynamicClustering:
         centers = jnp.stack([tree_flat_vector(self.clusters[c].center) for c in cids])
         dists = np.asarray(K.l1_distance(u, centers))
         cid = cids[int(np.argmin(dists))]
+        if prev is not None and prev in self.clusters and prev != cid:
+            d_prev = dists[cids.index(prev)]
+            if dists[cids.index(cid)] > (1.0 - switch_margin) * d_prev:
+                cid = prev  # not decisively closer: stay
+        self._move(client_id, cid)
+        return cid, False
+
+    def _assign_plane(self, client_id, update, switch_margin, prev) -> tuple[int, bool]:
+        """Plane hot path: one flatten, one row gather, one fused kernel.
+
+        ``assign_and_lerp`` returns the distances, the argmin, *and* the
+        mixed-rate blend against the winning center — if the upcoming
+        ``aggregate`` targets that same cluster (the common case), the
+        center update is already computed and is written back as a single
+        staged row."""
+        self._ensure_plane(update)
+        u = self.plane.from_pytree(update)
+        if len(self.clusters) < self.num_initial:
+            self._pending = (update, None, u, None, -1)
+            c = self._new_cluster(u)
+            self._move(client_id, c.cluster_id)
+            return c.cluster_id, True
+        cids = sorted(self.clusters)
+        centers = self.plane.rows([self.clusters[c]._row for c in cids])
+        dists_d, _amin, blended = K.assign_and_lerp(u, centers, self.mix_rate)
+        dists = np.asarray(dists_d)  # one host sync; argmin re-read from it
+        cid = cids[int(np.argmin(dists))]
+        # the blend is only valid against the center version it was computed
+        # from; aggregate() re-checks under the branch write lock
+        self._pending = (update, cid, u, blended, self.clusters[cid].version)
         if prev is not None and prev in self.clusters and prev != cid:
             d_prev = dists[cids.index(prev)]
             if dists[cids.index(cid)] > (1.0 - switch_margin) * d_prev:
@@ -110,7 +300,24 @@ class DynamicClustering:
         """
         c = self.clusters[cid]
         b = self.mix_rate if weight is None else weight
-        c.center = tree_lerp(c.center, update, b)
+        if self.backend == "plane":
+            p = self._pending
+            # the fused blend only applies if the center is still at the
+            # version assign saw — a concurrent push (this method runs under
+            # the branch write lock) or an intervening merge falls back to a
+            # live lerp so no aggregation is ever overwritten
+            if (
+                p is not None and p[0] is update and p[1] == cid
+                and weight is None and c.version == p[4]
+            ):
+                c.set_center_vec(p[3])  # fused assign+lerp result: free update
+            else:
+                u = p[2] if p is not None and p[0] is update else self.upload_vec(update)
+                self.plane.lerp_row(c._row, u, b)
+                c._center_cache = None
+            self._pending = None
+        else:
+            c.center = tree_lerp(c.center, update, b)
         c.version += 1
 
     # -------------------------------------------------------------- merging
@@ -130,18 +337,23 @@ class DynamicClustering:
         one local training pass that yields the posterior direction."""
         a, b = self.clusters[cid_a], self.clusters[cid_b]
         main, aux = (a, b) if a.size >= b.size else (b, a)
-        v_m = tree_flat_vector(main.center)
-        v_aux = tree_flat_vector(aux.center)
-        v_trained = tree_flat_vector(local_train_fn(main.center))
-        merged_vec = K.merge_attention(v_m, v_aux, v_trained)
-        merged = tree_unflatten_vector(merged_vec, main.center)
+        if self.backend == "plane":
+            v_m = self.plane.row(main._row)
+            v_aux = self.plane.row(aux._row)
+            v_trained = self.plane.from_pytree(local_train_fn(main.center))
+            main.set_center_vec(K.merge_attention(v_m, v_aux, v_trained))
+        else:
+            v_m = tree_flat_vector(main.center)
+            v_aux = tree_flat_vector(aux.center)
+            v_trained = tree_flat_vector(local_train_fn(main.center))
+            merged_vec = K.merge_attention(v_m, v_aux, v_trained)
+            main.center = tree_unflatten_vector(merged_vec, main.center)
 
-        main.center = merged
         main.version += 1
         for client in list(aux.members):
             self._move(client, main.cluster_id)
         main.partial_finetune.clear()  # merge lifts the partial-finetune restriction
-        del self.clusters[aux.cluster_id]
+        self.drop_cluster(aux.cluster_id)
         self.merges += 1
         return main.cluster_id
 
@@ -162,12 +374,17 @@ class DynamicClustering:
             cids = mature
         if len(cids) < 2:
             return None
-        vecs = jnp.stack([tree_flat_vector(self.clusters[c].center) for c in cids])
-        dmat = np.zeros((len(cids), len(cids)))
-        for i in range(len(cids)):
-            dmat[i] = np.asarray(K.l1_distance(vecs[i], vecs))
+        if self.backend == "plane":
+            vecs = self.plane.rows([self.clusters[c]._row for c in cids])
+            dmat = np.asarray(K.l1_distance_pairwise(vecs, vecs))
+        else:
+            vecs = jnp.stack([tree_flat_vector(self.clusters[c].center) for c in cids])
+            dmat = np.zeros((len(cids), len(cids)))
+            for i in range(len(cids)):
+                dmat[i] = np.asarray(K.l1_distance(vecs[i], vecs))
         off = dmat[~np.eye(len(cids), dtype=bool)]
         median = float(np.median(off))
+        dmat = dmat.copy()
         np.fill_diagonal(dmat, np.inf)
         i, j = np.unravel_index(np.argmin(dmat), dmat.shape)
         if close_frac is not None and len(cids) > 2 and dmat[i, j] > close_frac * median:
@@ -176,18 +393,22 @@ class DynamicClustering:
 
     # ------------------------------------------------------- reassignment
     def reassign_poor_fits(
-        self, feedbacks: dict[int, dict[Any, float]], uploads: dict[Any, PyTree]
+        self, feedbacks: dict[int, dict[Any, float]], uploads: dict[Any, Any]
     ) -> int:
         """Feedback-corrective reassignment: a member whose feedback is poor
         may simply belong to *another existing* cluster (initial assignment
         is fast but errorful — Sec. 4.2.2). Before spawning new clusters,
         move such members to a decisively closer center, bypassing the
-        assignment hysteresis. Returns the number of moves."""
+        assignment hysteresis. Returns the number of moves.
+
+        ``uploads`` maps client -> last upload: pytrees in pytree mode,
+        plane row indices in plane mode (where all flagged members probe
+        every center in a single pairwise launch).
+        """
         if len(self.clusters) < 2:
             return 0
         cids = sorted(self.clusters)
-        centers = jnp.stack([tree_flat_vector(self.clusters[c].center) for c in cids])
-        moves = 0
+        flagged: list[tuple[Any, int]] = []
         for cid, fb in feedbacks.items():
             if cid not in self.clusters or len(fb) < 2:
                 continue
@@ -197,12 +418,28 @@ class DynamicClustering:
                     continue
                 if m in self.clusters[cid].partial_finetune:
                     continue
-                u = tree_flat_vector(uploads[m])
-                d = np.asarray(K.l1_distance(u, centers))
+                flagged.append((m, cid))
+        if not flagged:
+            return 0
+        moves = 0
+        if self.backend == "plane":
+            U = self._upload_matrix(uploads, [m for m, _ in flagged])
+            centers = self.plane.rows([self.clusters[c]._row for c in cids])
+            D = np.asarray(K.l1_distance_pairwise(U, centers))
+            for (m, cid), d in zip(flagged, D):
                 best = cids[int(np.argmin(d))]
                 if best != cid and d[cids.index(best)] < 0.9 * d[cids.index(cid)]:
                     self._move(m, best)
                     moves += 1
+            return moves
+        centers = jnp.stack([tree_flat_vector(self.clusters[c].center) for c in cids])
+        for m, cid in flagged:
+            u = tree_flat_vector(uploads[m])
+            d = np.asarray(K.l1_distance(u, centers))
+            best = cids[int(np.argmin(d))]
+            if best != cid and d[cids.index(best)] < 0.9 * d[cids.index(cid)]:
+                self._move(m, best)
+                moves += 1
         return moves
 
     # ------------------------------------------------------------ expansion
@@ -211,7 +448,7 @@ class DynamicClustering:
         cid: int,
         feedbacks: dict[Any, float],
         frac: float = 0.2,
-        uploads: dict[Any, PyTree] | None = None,
+        uploads: dict[Any, Any] | None = None,
         refine_round: int = 0,
     ) -> int | None:
         """Sec. 4.3.3: clients whose feedback ranks in the worst ``frac`` of
@@ -222,7 +459,10 @@ class DynamicClustering:
         original cluster": it starts from the mean of the peeled members'
         own uploads — which *are* the original center fine-tuned on the
         drifted local data — so the new cluster is immediately separable
-        from its parent instead of being reabsorbed at the next merge."""
+        from its parent instead of being reabsorbed at the next merge.
+
+        ``uploads`` holds pytrees in pytree mode, plane rows in plane mode.
+        """
         c = self.clusters[cid]
         if self._last_expand_round.get(cid, -10) >= refine_round - 1:
             return None  # cooldown: let the last split differentiate first
@@ -243,13 +483,24 @@ class DynamicClustering:
         ]
         if not bad:
             return None
-        seeds = [uploads[m] for m in bad if uploads and m in uploads]
-        if seeds:
-            seed_center = seeds[0]
-            for i, s in enumerate(seeds[1:], start=2):
-                seed_center = tree_lerp(seed_center, s, 1.0 / i)  # running mean
+        if self.backend == "plane":
+            have = [m for m in bad if uploads and m in uploads]
+            if have:
+                vecs = self._upload_matrix(uploads, have)
+                seed_center = vecs[0]
+                for i in range(1, len(have)):  # same running mean as pytree path
+                    t = 1.0 / (i + 1)
+                    seed_center = (1.0 - t) * seed_center + t * vecs[i]
+            else:
+                seed_center = self.plane.row(c._row)
         else:
-            seed_center = c.center
+            seeds = [uploads[m] for m in bad if uploads and m in uploads]
+            if seeds:
+                seed_center = seeds[0]
+                for i, s in enumerate(seeds[1:], start=2):
+                    seed_center = tree_lerp(seed_center, s, 1.0 / i)  # running mean
+            else:
+                seed_center = c.center
         new = self._new_cluster(seed_center)
         for client in bad:
             self._move(client, new.cluster_id)
@@ -262,6 +513,15 @@ class DynamicClustering:
         return new.cluster_id
 
     # ------------------------------------------------------------- helpers
+    def _upload_matrix(self, uploads: dict, keys: list) -> Any:
+        """Stack clients' last uploads into (len(keys), dim). Values may be
+        plane row indices (the server's plane-mode store), flat vectors, or
+        pytrees (direct API use / tests) — rows take the one-gather path."""
+        vals = [uploads[m] for m in keys]
+        if vals and all(isinstance(v, (int, np.integer)) for v in vals):
+            return self.plane.rows(vals)
+        return jnp.stack([self.plane.as_vec(v) for v in vals])
+
     def membership_matrix(self, client_ids: list) -> np.ndarray:
         """Boolean collaboration matrix (Fig. 11): M[i, j] = same cluster."""
         n = len(client_ids)

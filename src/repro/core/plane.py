@@ -1,0 +1,218 @@
+"""Device-resident parameter plane: the server's hot matrix state.
+
+EchoPFL's coordination layer is arithmetic over flattened parameter
+vectors — L1 assignment distances (Eq. 1), mixed-rate center updates,
+broadcast-gap norms, feedback probes. Keeping each of those vectors inside
+a per-cluster pytree forces every arriving upload to re-flatten C pytrees
+and re-stack them into a matrix (O(C * leaves) dispatches per upload).
+Papaya-style async coordination only scales when that state is *already*
+matrix-resident: one preallocated ``(capacity, dim)`` device buffer whose
+rows are cluster centers, last-broadcast anchors, and per-client last
+uploads, addressed through an explicit free-list.
+
+Write-back is batched: row writes stage in a host-side dirty map (the
+values are device arrays; only the row *bookkeeping* is host-side) and are
+flushed into the buffer with a single scatter right before any batched
+read (``rows``/``matrix``). Single-row reads are served straight from the
+staging map, so ping-pong write/read of one row never touches the big
+buffer. Pytrees are materialized only at protocol boundaries via the
+cached :class:`~repro.common.pytrees.FlattenSpec` adapters.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.pytrees import flatten_spec
+
+PyTree = Any
+
+# jitted vector helpers shared by the plane and the server hot path
+lerp_vec = jax.jit(lambda a, b, t: (1.0 - t) * a + t * b)
+l1_vec = jax.jit(lambda a, b: jnp.sum(jnp.abs(a - b)))
+
+# The flush scatter donates the buffer: without donation every row write-back
+# would copy the whole (capacity, dim) plane, which scales with fleet size —
+# exactly the O(capacity)-per-upload behavior the plane exists to avoid.
+import functools as _functools
+
+
+@_functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(buf, rows, vals):
+    return buf.at[rows].set(vals)
+
+
+@_functools.partial(jax.jit, donate_argnums=(0,))
+def _set_row(buf, idx, vec):
+    # single-row fast path: dynamic_update_slice lowers leaner than scatter
+    return jax.lax.dynamic_update_slice_in_dim(buf, vec[None, :], idx, axis=0)
+
+
+@jax.jit  # no donation: the output shape doubles, so aliasing is impossible
+def _grow_buf(buf):
+    return jnp.concatenate([buf, jnp.zeros_like(buf)], axis=0)
+
+
+class ParameterPlane:
+    """Preallocated ``(capacity, dim)`` row store for flat parameter vectors."""
+
+    def __init__(self, template: PyTree, capacity: int = 32, dtype=jnp.float32):
+        self.spec = flatten_spec(template, dtype)
+        self.dim = self.spec.dim
+        self.dtype = jnp.dtype(dtype)
+        capacity = max(1, int(capacity))
+        self._buf = jnp.zeros((capacity, self.dim), self.dtype)
+        self._free: list[int] = list(range(capacity - 1, -1, -1))
+        self._used: set[int] = set()
+        self._dirty: dict[int, jax.Array] = {}
+        # incrementally-patched gather cache: XLA's row gather is slow on
+        # CPU, and the hot path (`assign`) requests the same center-row set
+        # every upload while only the aggregated row changes — so a cached
+        # view is patched with a 1-row scatter instead of re-gathered.
+        self._views: dict[tuple, jax.Array] = {}
+        self._view_stale: dict[tuple, set] = {}
+
+    # ---------------------------------------------------------------- sizing
+    @property
+    def capacity(self) -> int:
+        return self._buf.shape[0]
+
+    @property
+    def num_allocated(self) -> int:
+        return len(self._used)
+
+    def _grow(self) -> None:
+        old_cap = self.capacity
+        self._buf = _grow_buf(self._buf)
+        self._free.extend(range(2 * old_cap - 1, old_cap - 1, -1))
+
+    # ------------------------------------------------------------ allocation
+    def alloc(self, value: PyTree | jax.Array | None = None) -> int:
+        """Claim a row; ``value`` (vector or pytree) seeds it, else zeros.
+
+        Zero-seeding matters: freed rows keep their old bytes in the buffer,
+        and a reader of a recycled row must never see the previous tenant.
+        """
+        if not self._free:
+            self._grow()
+        row = self._free.pop()
+        self._used.add(row)
+        if value is None:
+            self._dirty[row] = jnp.zeros((self.dim,), self.dtype)
+        else:
+            self.write(row, value)
+        return row
+
+    def free(self, row: int) -> None:
+        if row not in self._used:
+            raise KeyError(f"row {row} is not allocated")
+        self._used.discard(row)
+        self._dirty.pop(row, None)
+        self._free.append(row)
+        for key in [k for k in self._views if row in self._view_stale[k] or row in k]:
+            del self._views[key], self._view_stale[key]
+
+    # ----------------------------------------------------------------- io
+    def as_vec(self, value: PyTree | jax.Array) -> jax.Array:
+        """Coerce a 1-D vector or a pytree to a plane-dtype row vector."""
+        if isinstance(value, jax.Array) and value.ndim == 1 and value.dtype == self.dtype:
+            return value  # hot path: rows handed back to the plane verbatim
+        if not isinstance(value, (dict, list, tuple)) and getattr(value, "ndim", None) == 1:
+            return jnp.asarray(value, self.dtype)
+        return self.spec.flatten(value)
+
+    def write(self, row: int, value: PyTree | jax.Array) -> None:
+        """Stage a row write (flushed lazily before the next batched read)."""
+        if row not in self._used:
+            raise KeyError(f"row {row} is not allocated")
+        vec = self.as_vec(value)
+        if vec.shape != (self.dim,):
+            raise ValueError(f"expected ({self.dim},) vector, got {vec.shape}")
+        self._dirty[row] = vec
+        for key in self._views:
+            if row in key:
+                self._view_stale[key].add(row)
+
+    def flush(self) -> None:
+        if not self._dirty:
+            return
+        order = sorted(self._dirty)
+        if len(order) == 1:
+            self._buf = _set_row(self._buf, jnp.int32(order[0]), self._dirty[order[0]])
+        else:
+            rows = jnp.asarray(order, jnp.int32)
+            vals = jnp.stack([self._dirty[r] for r in order])
+            self._buf = _scatter_rows(self._buf, rows, vals)
+        self._dirty.clear()
+
+    def row(self, row: int) -> jax.Array:
+        """Current ``(dim,)`` vector for one row (staged write wins)."""
+        if row in self._dirty:
+            return self._dirty[row]
+        if row not in self._used:
+            raise KeyError(f"row {row} is not allocated")
+        return self._buf[row]
+
+    def rows(self, row_ids: Sequence[int]) -> jax.Array:
+        """Stacked ``(len(row_ids), dim)`` view of the requested rows.
+
+        Repeat requests for the same row set (the per-upload center matrix)
+        are served from a cached gather patched in place with the rows that
+        changed since — O(changed_rows * dim), not O(len * dim). The
+        returned array is a snapshot: valid until the same row set is
+        requested again after a write.
+        """
+        if len(row_ids) == 0:
+            return jnp.zeros((0, self.dim), self.dtype)
+        key = tuple(row_ids)
+        view = self._views.get(key)
+        if view is not None:
+            stale = self._view_stale[key]
+            if stale:
+                if len(stale) == 1:
+                    (r,) = stale
+                    view = _set_row(view, jnp.int32(key.index(r)), self.row(r))
+                else:
+                    pos = [key.index(r) for r in stale]
+                    vals = jnp.stack([self.row(r) for r in stale])
+                    view = _scatter_rows(view, jnp.asarray(pos, jnp.int32), vals)
+                self._views[key] = view
+                stale.clear()
+            return view
+        self.flush()
+        view = self._buf[jnp.asarray(list(key), jnp.int32)]
+        if len(self._views) >= 4:  # tiny LRU-ish cache: hot sets only
+            oldest = next(iter(self._views))
+            del self._views[oldest], self._view_stale[oldest]
+        self._views[key] = view
+        self._view_stale[key] = set()
+        return view
+
+    def matrix(self) -> jax.Array:
+        """The full backing buffer (flushed); rows not allocated are zeros.
+        A snapshot view: valid until the next write-back donates the buffer."""
+        self.flush()
+        return self._buf
+
+    # ------------------------------------------------------------ arithmetic
+    def lerp_row(self, row: int, value: PyTree | jax.Array, t: float) -> None:
+        """row <- (1 - t) * row + t * value (the async mixing step)."""
+        self.write(row, lerp_vec(self.row(row), self.as_vec(value), t))
+
+    def copy_row(self, src: int, dst: int) -> None:
+        self.write(dst, self.row(src))
+
+    def l1_rows(self, a: int, b: int) -> jax.Array:
+        return l1_vec(self.row(a), self.row(b))
+
+    # ------------------------------------------------------------- adapters
+    def from_pytree(self, tree: PyTree) -> jax.Array:
+        return self.spec.flatten(tree)
+
+    def to_pytree(self, row: int) -> PyTree:
+        return self.spec.unflatten(self.row(row))
+
+    def vec_to_pytree(self, vec: jax.Array) -> PyTree:
+        return self.spec.unflatten(vec)

@@ -29,6 +29,7 @@ from repro.core.broadcast import (
     pretrain_rnn,
 )
 from repro.core.clustering import DynamicClustering
+from repro.core.plane import l1_vec
 from repro.core.staleness import StalenessTracker
 from repro.core.versioning import ModelRepo
 from repro.kernels import ops as K
@@ -63,10 +64,13 @@ class EchoPFLServer:
         pretrain_key: jax.Array | None = None,
         enable_clustering: bool = True,
         enable_broadcast: bool = True,
+        plane_backend: str | None = None,
         seed: int = 0,
     ):
         self.init_params = init_params
-        self.clustering = DynamicClustering(num_initial_clusters, mix_rate=mix_rate, hm=hm)
+        self.clustering = DynamicClustering(
+            num_initial_clusters, mix_rate=mix_rate, hm=hm, backend=plane_backend
+        )
         self.repo = ModelRepo()
         self.staleness = StalenessTracker()
         self.top_k = top_k
@@ -79,7 +83,9 @@ class EchoPFLServer:
         self._decisions = 0  # cumulative (predictor objects are replaced on refine)
         self._rnn_broadcasts = 0
         self._refine_round = 0
-        self.last_uploads: dict[Any, PyTree] = {}  # client -> most recent update
+        self.last_uploads: dict[Any, PyTree] = {}  # pytree mode: client -> last update
+        self._upload_rows: dict[Any, int] = {}  # plane mode: client -> plane row
+        self.last_cluster_feedback_mean: dict[int, float] = {}
         self._rng = np.random.default_rng(seed)
         key = pretrain_key if pretrain_key is not None else jax.random.PRNGKey(seed)
         self._rnn_init = pretrain_rnn(key) if enable_broadcast else None
@@ -109,7 +115,6 @@ class EchoPFLServer:
         self, client_id, params: PyTree, base_version: int, n_samples: int, t: float
     ) -> list[Downlink]:
         self._uploads += 1
-        self.last_uploads[client_id] = params
         out: list[Downlink] = []
 
         # 1. cluster assignment (or the single global "cluster" in ablation)
@@ -121,7 +126,25 @@ class EchoPFLServer:
             cid, created = 0, False
             self.clustering._move(client_id, 0)
         cluster = self.clustering.clusters[cid]
-        branch = self.repo.branch(f"cluster/{cid}", cluster.center)
+        plane = self.clustering.plane
+        if plane is None:
+            self.last_uploads[client_id] = params
+        else:
+            # plane mode: the last upload lives in a plane row (staged write;
+            # flushed in one scatter at the next batched read), reusing the
+            # flatten `assign` already did for this same object
+            row = self._upload_rows.get(client_id)
+            if row is None:
+                row = self._upload_rows[client_id] = plane.alloc()
+            plane.write(row, self.clustering.upload_vec(params))
+        # the branch head is only materialized on branch creation; in plane
+        # mode it tracks the flat row (the protocol never pulls it back)
+        try:
+            branch = self.repo.branch(f"cluster/{cid}")
+        except KeyError:
+            branch = self.repo.branch(
+                f"cluster/{cid}", cluster.center if plane is None else cluster.center_vec
+            )
 
         # 2. staleness bookkeeping (all updates included, none dropped)
         base_cluster, base_ver = self.client_versions.get(client_id, (cid, 0))
@@ -138,17 +161,26 @@ class EchoPFLServer:
         self.staleness.record(staleness)
 
         # 3. aggregate = CI push into the branch
-        prev_center = cluster.center
+        pred = self._predictor(cid) if self.enable_broadcast else None
+        if pred is not None:  # the pre-update center only feeds the predictor
+            prev_center = cluster.center if plane is None else cluster.center_vec
+
         def merge_fn(head):
             self.clustering.aggregate(cid, params)
-            return self.clustering.clusters[cid].center
+            c = self.clustering.clusters[cid]
+            return c.center if plane is None else c.center_vec
         branch.push(client_id, merge_fn, f"upload from {client_id} (staleness {staleness})")
 
         # 4. Top-K change record + ground-truth label for the previous decision
-        change = float(tree_l1(cluster.center, prev_center))
-        pred = self._predictor(cid) if self.enable_broadcast else None
         if pred is not None:
-            gap_before = float(tree_l1(prev_center, cluster.last_broadcast_center))
+            if plane is None:
+                change = float(tree_l1(cluster.center, prev_center))
+            else:
+                change = float(l1_vec(cluster.center_vec, prev_center))
+            if plane is None:
+                gap_before = float(tree_l1(prev_center, cluster.last_broadcast_center))
+            else:
+                gap_before = float(l1_vec(prev_center, cluster.broadcast_vec))
             # Ground truth for the decision made before this upload (Eq. 4,
             # with the sign read per the Sec. 5.2.1 text rule): the realized
             # model change exceeding the accumulated gap since the last
@@ -164,7 +196,10 @@ class EchoPFLServer:
 
         # 6. on-demand broadcast to the rest of the cluster
         if pred is not None and cluster.size > 1:
-            gap = float(tree_l1(cluster.center, cluster.last_broadcast_center))
+            if plane is None:
+                gap = float(tree_l1(cluster.center, cluster.last_broadcast_center))
+            else:
+                gap = float(l1_vec(cluster.center_vec, cluster.broadcast_vec))
             self._decisions += 1
             if pred.decide(gap):
                 self._rnn_broadcasts += 1
@@ -176,7 +211,7 @@ class EchoPFLServer:
         return out
 
     def _broadcast(self, cluster, exclude: set = frozenset()) -> list[Downlink]:
-        cluster.last_broadcast_center = cluster.center
+        cluster.snapshot_broadcast()  # row copy in plane mode
         cluster.last_broadcast_version = cluster.version
         msgs = []
         for member in cluster.members - exclude:
@@ -186,61 +221,92 @@ class EchoPFLServer:
         return msgs
 
     # ---------------------------------------------------------- refinement
+    def _feedback_rows(self, pairs: list) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Stack feedback_fn outputs for (client, center) pairs. The model
+        evaluation is inherently per-client (it runs on the client's own
+        data), but the chi2 x Var statistic is then one kernel launch."""
+        rows = [self.feedback_fn(m, center) for m, center in pairs]
+        f_pred = np.stack([r[0] for r in rows])
+        f_true = np.stack([np.maximum(r[1], 1e-3) for r in rows])
+        s_soft = np.stack([r[2] for r in rows])
+        return f_pred, f_true, s_soft
+
     def _collect_feedback(self) -> dict[int, dict[Any, float]]:
-        """chi2 x Var(S) feedback per cluster, via the Pallas-batched kernel."""
+        """chi2 x Var(S) feedback for every member of every cluster, in one
+        cluster-segmented kernel launch (the seed looped a launch per
+        cluster). The same launch accumulates per-cluster sums of g, which
+        become the cluster-mean feedback exposed in :meth:`stats`."""
         if self.feedback_fn is None:
             return {}
-        per_cluster: dict[int, dict[Any, float]] = {}
-        for cid, cluster in self.clustering.clusters.items():
-            members = sorted(cluster.members)
-            if not members:
-                continue
-            rows = [self.feedback_fn(m, cluster.center) for m in members]
-            f_pred = np.stack([r[0] for r in rows])
-            f_true = np.stack([np.maximum(r[1], 1e-3) for r in rows])
-            s_soft = np.stack([r[2] for r in rows])
-            g = np.asarray(K.chi2_feedback(f_pred, f_true, s_soft))
-            per_cluster[cid] = dict(zip(members, g.tolist()))
-        return per_cluster
-
-    def _feedback_of(self, client_id, center) -> float:
-        f_pred, f_true, s_soft = self.feedback_fn(client_id, center)
-        g = K.chi2_feedback(
-            np.asarray(f_pred)[None], np.maximum(np.asarray(f_true), 1e-3)[None],
-            np.asarray(s_soft)[None],
+        cid_order = sorted(self.clustering.clusters)
+        entries: list[tuple[int, int, Any, Any]] = []  # (segment, cid, member, center)
+        for si, cid in enumerate(cid_order):
+            cluster = self.clustering.clusters[cid]
+            center = cluster.center  # materialized once per cluster
+            for m in sorted(cluster.members):
+                entries.append((si, cid, m, center))
+        if not entries:
+            return {}
+        f_pred, f_true, s_soft = self._feedback_rows([(m, c) for _, _, m, c in entries])
+        seg_ids = np.asarray([si for si, _, _, _ in entries], np.int32)
+        g, seg_sum = K.chi2_feedback_all(
+            f_pred, f_true, s_soft, seg_ids, num_segments=len(cid_order)
         )
-        return float(np.asarray(g)[0])
+        g = np.asarray(g)
+        counts = np.bincount(seg_ids, minlength=len(cid_order))
+        seg_sum = np.asarray(seg_sum)
+        self.last_cluster_feedback_mean = {
+            cid: float(seg_sum[si] / counts[si])
+            for si, cid in enumerate(cid_order)
+            if counts[si] > 0  # empty clusters have no feedback, not g=0
+        }
+        per_cluster: dict[int, dict[Any, float]] = {}
+        for (si, cid, m, _), gi in zip(entries, g.tolist()):
+            per_cluster.setdefault(cid, {})[m] = gi
+        return per_cluster
 
     def _reassign_by_feedback(self, feedback: dict[int, dict[Any, float]]) -> int:
         """A poor-fit member may simply belong to another *existing* cluster
         (on-arrival L1 assignment is fast but errorful — Sec. 4.2.2, and an
         upload stays geometrically closest to the center it trained from).
-        Probe flagged members' feedback against every center and move them to
-        a decisively better-fitting one."""
-        if self.feedback_fn is None or len(self.clustering.clusters) < 2:
+        Probe every flagged member's feedback against every other center in
+        a single batched launch and move them to a decisively better fit."""
+        clusters = self.clustering.clusters
+        if self.feedback_fn is None or len(clusters) < 2:
             return 0
-        moves = 0
+        flagged: list[tuple[Any, int, float]] = []  # (member, home cid, g)
         for cid, fb in feedback.items():
-            if cid not in self.clustering.clusters or len(fb) < 2:
+            if cid not in clusters or len(fb) < 2:
                 continue
             med = float(np.median(list(fb.values())))
             for m, g in fb.items():
                 if g <= 2.0 * (med + 1e-12):
                     continue
-                if m in self.clustering.clusters[cid].partial_finetune:
+                if m in clusters[cid].partial_finetune:
                     continue
-                scores = {
-                    c2: self._feedback_of(m, cl.center)
-                    for c2, cl in self.clustering.clusters.items()
-                    if c2 != cid
-                }
-                if not scores:
-                    continue
-                best = min(scores, key=scores.get)
-                if scores[best] < 0.5 * g:
-                    self.clustering._move(m, best)
-                    self.client_versions[m] = (best, self.clustering.clusters[best].version)
-                    moves += 1
+                flagged.append((m, cid, g))
+        if not flagged:
+            return 0
+        centers = {cid: clusters[cid].center for cid in clusters}
+        others_of = {
+            home: [c2 for c2 in sorted(clusters) if c2 != home]
+            for home in {home for _, home, _ in flagged}
+        }
+        pairs = [
+            (m, centers[c2]) for m, home, _ in flagged for c2 in others_of[home]
+        ]
+        f_pred, f_true, s_soft = self._feedback_rows(pairs)
+        scores = np.asarray(K.chi2_feedback(f_pred, f_true, s_soft)).reshape(
+            len(flagged), len(clusters) - 1
+        )
+        moves = 0
+        for (m, home, g), row in zip(flagged, scores):
+            best_i = int(np.argmin(row))
+            if row[best_i] < 0.5 * g:
+                best = others_of[home][best_i]
+                self.clustering._move(m, best)
+                self.client_versions[m] = (best, clusters[best].version)
+                moves += 1
         return moves
 
     def _refine(self) -> list[Downlink]:
@@ -268,12 +334,16 @@ class EchoPFLServer:
             self.events.append({"kind": "reassign", "n": moved})
             feedback = self._collect_feedback()
 
-        # expansion: split poor fits out of each cluster
+        # expansion: split poor fits out of each cluster (last uploads are
+        # plane rows in plane mode, pytrees otherwise)
+        uploads = (
+            self.last_uploads if self.clustering.plane is None else self._upload_rows
+        )
         for cid, fb in list(feedback.items()):
             if cid not in self.clustering.clusters:
                 continue
             new_cid = self.clustering.expand(
-                cid, fb, uploads=self.last_uploads, refine_round=self._refine_round
+                cid, fb, uploads=uploads, refine_round=self._refine_round
             )
             if new_cid is not None:
                 parent_pred = self._predictor(cid)
@@ -313,27 +383,50 @@ class EchoPFLServer:
     def _dissolve_smallest(self) -> bool:
         """Capacity overflow with no redundant pair: retire the smallest
         cluster and refit each member to its best remaining cluster (by
-        feedback probe when available, else by L1 of its last upload)."""
-        clusters = self.clustering.clusters
+        feedback probe when available, else by L1 of its last upload) —
+        every probe for every member batched into a single launch."""
+        clustering = self.clustering
+        clusters = clustering.clusters
         if len(clusters) < 2:
             return False
         victim = min(clusters, key=lambda c: (clusters[c].size, clusters[c].version))
         rest = [c for c in clusters if c != victim]
-        for m in list(clusters[victim].members):
-            if self.feedback_fn is not None:
-                scores = {c: self._feedback_of(m, clusters[c].center) for c in rest}
-                best = min(scores, key=scores.get)
-            elif m in self.last_uploads:
-                u = tree_flat_vector(self.last_uploads[m])
-                import jax.numpy as jnp
+        members = sorted(clusters[victim].members, key=str)
+        best_of: dict[Any, int] = {m: rest[0] for m in members}
+        plane = clustering.plane
+        if members and self.feedback_fn is not None:
+            centers = {c: clusters[c].center for c in rest}
+            f_pred, f_true, s_soft = self._feedback_rows(
+                [(m, centers[c]) for m in members for c in rest]
+            )
+            scores = np.asarray(K.chi2_feedback(f_pred, f_true, s_soft)).reshape(
+                len(members), len(rest)
+            )
+            for m, row in zip(members, scores):
+                best_of[m] = rest[int(np.argmin(row))]
+        elif members and plane is not None:
+            have = [m for m in members if m in self._upload_rows]
+            if have:
+                U = plane.rows([self._upload_rows[m] for m in have])
+                centers = plane.rows([clusters[c]._row for c in rest])
+                D = np.asarray(K.l1_distance_pairwise(U, centers))
+                for m, d in zip(have, D):
+                    best_of[m] = rest[int(np.argmin(d))]
+        elif members:
+            import jax.numpy as jnp
+
+            with_uploads = [m for m in members if m in self.last_uploads]
+            if with_uploads:
                 centers = jnp.stack([tree_flat_vector(clusters[c].center) for c in rest])
-                d = np.asarray(K.l1_distance(u, centers))
-                best = rest[int(np.argmin(d))]
-            else:
-                best = rest[0]
-            self.clustering._move(m, best)
+                U = jnp.stack([tree_flat_vector(self.last_uploads[m]) for m in with_uploads])
+                D = np.asarray(K.l1_distance_pairwise(U, centers))
+                for m, d in zip(with_uploads, D):
+                    best_of[m] = rest[int(np.argmin(d))]
+        for m in members:
+            best = best_of[m]
+            clustering._move(m, best)
             self.client_versions[m] = (best, clusters[best].version)
-        del clusters[victim]
+        clustering.drop_cluster(victim)
         self.predictors.pop(victim, None)
         self.repo.delete(f"cluster/{victim}")
         self.events.append({"kind": "dissolve", "cluster": victim})
@@ -404,21 +497,17 @@ class EchoPFLServer:
 
     def load_state(self, tree: PyTree, meta: dict, client_id_type=int) -> None:
         """Restore from :meth:`state_dict` output (elastic restart)."""
-        from repro.core.clustering import Cluster
-
         cid_of = lambda s: client_id_type(s)
         cl = self.clustering
-        cl.clusters = {}
+        cl.reset()  # frees any live plane rows before adopting the snapshot
         for cid_s, info in meta["clusters"].items():
             cid = int(cid_s)
-            c = Cluster(cluster_id=cid, center=tree["centers"][cid_s])
+            c = cl.restore_cluster(cid, tree["centers"][cid_s], tree["bcast_centers"][cid_s])
             c.version = info["version"]
             c.members = {cid_of(m) for m in info["members"]}
             c.partial_finetune = {cid_of(m) for m in info["partial_finetune"]}
             c.pf_round = info["pf_round"]
             c.last_broadcast_version = info["last_broadcast_version"]
-            c.last_broadcast_center = tree["bcast_centers"][cid_s]
-            cl.clusters[cid] = c
             self.repo.branch(f"cluster/{cid}", c.center)
         cl.assignment = {cid_of(k): v for k, v in meta["assignment"].items()}
         cl._next_id = meta["next_id"]
@@ -446,6 +535,7 @@ class EchoPFLServer:
 
     # ------------------------------------------------------------- metrics
     def stats(self) -> dict:
+        plane = self.clustering.plane
         return {
             "clusters": len(self.clustering.clusters),
             "merges": self.clustering.merges,
@@ -454,4 +544,12 @@ class EchoPFLServer:
             "broadcasts": sum(1 for e in self.events if e["kind"] == "broadcast"),
             "rnn_broadcasts": self._rnn_broadcasts,
             "decisions": self._decisions,
+            "backend": self.clustering.backend,
+            "plane_rows": 0 if plane is None else plane.num_allocated,
+            # snapshot from the last refine, filtered to clusters still alive
+            "cluster_feedback_mean": {
+                cid: g
+                for cid, g in self.last_cluster_feedback_mean.items()
+                if cid in self.clustering.clusters
+            },
         }

@@ -69,6 +69,7 @@ def build_strategy(
     enable_clustering: bool = True,
     enable_broadcast: bool = True,
     sync_interval: float = 120.0,
+    plane_backend: str | None = None,
 ):
     sizes = {c.client_id: c.data.n for c in clients}
     by_id = {c.client_id: c for c in clients}
@@ -91,6 +92,7 @@ def build_strategy(
             local_train_fn=local_train_fn,
             enable_clustering=enable_clustering,
             enable_broadcast=enable_broadcast,
+            plane_backend=plane_backend,
             seed=seed,
         )
     if name == "fedavg":

@@ -1,3 +1,19 @@
-from repro.kernels.ops import chi2_feedback, flash_attention, l1_distance, merge_attention
+from repro.kernels.ops import (
+    assign_and_lerp,
+    chi2_feedback,
+    chi2_feedback_all,
+    flash_attention,
+    l1_distance,
+    l1_distance_pairwise,
+    merge_attention,
+)
 
-__all__ = ["flash_attention", "l1_distance", "merge_attention", "chi2_feedback"]
+__all__ = [
+    "flash_attention",
+    "l1_distance",
+    "l1_distance_pairwise",
+    "assign_and_lerp",
+    "merge_attention",
+    "chi2_feedback",
+    "chi2_feedback_all",
+]

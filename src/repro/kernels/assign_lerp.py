@@ -1,0 +1,85 @@
+"""Fused on-arrival assignment + mixed-rate center update (Eq. 1 + Sec. 4).
+
+Every upload triggers the same two hot steps: find the L1-nearest center,
+then blend the upload into it at the mix rate b. ``assign_and_lerp`` fuses
+them into one device-resident pass: the streaming one-vs-many L1 kernel
+produces the distance vector, the argmin stays on device, and a
+scalar-prefetch kernel reads *only* the winning center row (the argmin
+index steers the BlockSpec index map) to emit the blended row — the full
+(C, N) center matrix is never re-read, and nothing round-trips through the
+host between distance, argmin, and update.
+
+The caller applies hysteresis host-side: when the argmin is vetoed (the
+client stays in its previous cluster), the precomputed blended row is
+simply discarded and a plain row lerp runs instead.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.l1_distance import l1_distance
+
+
+def _select_lerp_kernel(idx_ref, c_ref, u_ref, o_ref, *, beta: float):
+    del idx_ref  # consumed by the index maps
+    c = c_ref[...].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)
+    o_ref[...] = (1.0 - beta) * c + beta * u
+
+
+def _select_lerp(
+    centers: jax.Array,  # (C, N)
+    u: jax.Array,  # (N,)
+    idx: jax.Array,  # () int32 — which center row to blend
+    beta: float,
+    *,
+    block_n: int,
+    interpret: bool,
+) -> jax.Array:
+    C, N = centers.shape
+    n_p = math.ceil(N / block_n) * block_n
+    cp = jnp.pad(centers, ((0, 0), (0, n_p - N)))
+    up = jnp.pad(u, (0, n_p - N)).reshape(1, n_p)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_p // block_n,),
+        in_specs=[
+            pl.BlockSpec((1, block_n), lambda n, idx_ref: (idx_ref[0], n)),
+            pl.BlockSpec((1, block_n), lambda n, idx_ref: (0, n)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda n, idx_ref: (0, n)),
+    )
+    out = pl.pallas_call(
+        functools.partial(_select_lerp_kernel, beta=beta),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((1, n_p), jnp.float32),
+        interpret=interpret,
+    )(jnp.reshape(idx, (1,)).astype(jnp.int32), cp, up)
+    return out[0, :N]
+
+
+def assign_and_lerp(
+    u: jax.Array,  # (N,) arriving flattened upload
+    centers: jax.Array,  # (C, N) stacked cluster centers (plane rows)
+    beta: float,  # mix rate b
+    *,
+    block_n: int = 65536,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (dists (C,) fp32, idx () int32 argmin, blended (N,) fp32)
+    where ``blended = (1 - beta) * centers[idx] + beta * u``."""
+    (N,) = u.shape
+    dists = l1_distance(u, centers, block_n=block_n, interpret=interpret)
+    idx = jnp.argmin(dists).astype(jnp.int32)
+    lerp_block = min(block_n, max(128, 1 << (N - 1).bit_length()))
+    blended = _select_lerp(
+        centers, u, idx, beta, block_n=lerp_block, interpret=interpret
+    )
+    return dists, idx, blended

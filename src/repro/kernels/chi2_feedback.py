@@ -56,3 +56,70 @@ def chi2_feedback(
         interpret=interpret,
     )(fp, ft, ss)
     return out[:M, 0]
+
+
+def _chi2_seg_kernel(fp_ref, ft_ref, ss_ref, oh_ref, g_ref, sum_ref, *, j_valid: int):
+    mi = pl.program_id(0)
+
+    @pl.when(mi == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+
+    fp = fp_ref[...].astype(jnp.float32)  # (block_m, Jp)
+    ft = ft_ref[...].astype(jnp.float32)
+    ss = ss_ref[...].astype(jnp.float32)
+    valid = jax.lax.broadcasted_iota(jnp.int32, fp.shape, 1) < j_valid
+
+    chi2 = jnp.sum(jnp.where(valid, jnp.square(fp - ft) / jnp.maximum(ft, 1e-6), 0.0), axis=1)
+    mean = jnp.sum(jnp.where(valid, ss, 0.0), axis=1, keepdims=True) / j_valid
+    var = jnp.sum(jnp.where(valid, jnp.square(ss - mean), 0.0), axis=1) / j_valid
+    g = chi2 * var
+    g_ref[:, 0] = g
+    # segment reduction: one-hot membership scatters each member's g into
+    # its cluster's accumulator; padded rows carry an all-zero one-hot.
+    oh = oh_ref[...].astype(jnp.float32)  # (block_m, Sp)
+    sum_ref[...] += jnp.sum(oh * g[:, None], axis=0, keepdims=True)
+
+
+def chi2_feedback_segmented(
+    f_pred: jax.Array,  # (M, J) all members of all clusters, stacked
+    f_true: jax.Array,  # (M, J)
+    s_soft: jax.Array,  # (M, J)
+    seg_onehot: jax.Array,  # (M, S) fp one-hot cluster membership
+    *,
+    block_m: int = 256,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array]:
+    """One launch over every member of every cluster.
+
+    Returns (g (M,), seg_sum (S,)): the per-member feedback statistic plus
+    per-cluster sums of g accumulated inside the same kernel — the server
+    turns those into cluster-mean feedback without a second pass.
+    """
+    M, J = f_pred.shape
+    S = seg_onehot.shape[1]
+    j_p = math.ceil(J / 128) * 128
+    s_p = math.ceil(S / 128) * 128
+    block_m = min(block_m, max(8, 1 << (M - 1).bit_length()))
+    m_p = math.ceil(M / block_m) * block_m
+    pad = lambda x: jnp.pad(x, ((0, m_p - M), (0, j_p - J)))
+    fp, ft, ss = pad(f_pred), pad(f_true), pad(s_soft)
+    oh = jnp.pad(seg_onehot, ((0, m_p - M), (0, s_p - S)))
+    grid = (m_p // block_m,)
+    spec = pl.BlockSpec((block_m, j_p), lambda i: (i, 0))
+
+    g, seg = pl.pallas_call(
+        functools.partial(_chi2_seg_kernel, j_valid=J),
+        grid=grid,
+        in_specs=[spec, spec, spec, pl.BlockSpec((block_m, s_p), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_m, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, s_p), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m_p, 1), jnp.float32),
+            jax.ShapeDtypeStruct((1, s_p), jnp.float32),
+        ],
+        interpret=interpret,
+    )(fp, ft, ss, oh)
+    return g[:M, 0], seg[0, :S]

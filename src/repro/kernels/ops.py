@@ -14,9 +14,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.assign_lerp import assign_and_lerp as _assign_lerp_kernel
 from repro.kernels.chi2_feedback import chi2_feedback as _chi2_kernel
+from repro.kernels.chi2_feedback import chi2_feedback_segmented as _chi2_seg_kernel
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.l1_distance import l1_distance as _l1_kernel
+from repro.kernels.l1_pairwise import l1_distance_pairwise as _l1_pairwise_kernel
 from repro.kernels.merge_attention import merge_attention as _merge_kernel
 
 
@@ -188,3 +191,30 @@ def chi2_feedback(f_pred, f_true, s_soft):
     if _use_pallas():
         return _chi2_kernel(f_pred, f_true, s_soft, interpret=not _on_tpu())
     return ref.chi2_feedback_ref(f_pred, f_true, s_soft)
+
+
+@jax.jit
+def l1_distance_pairwise(xs, centers):
+    """(M, N) x (C, N) -> (M, C) L1 matrix in one launch (plane hot path)."""
+    if _use_pallas():
+        return _l1_pairwise_kernel(xs, centers, interpret=not _on_tpu())
+    return ref.l1_distance_pairwise_ref(xs, centers)
+
+
+@functools.partial(jax.jit, static_argnames=("beta",))
+def assign_and_lerp(u, centers, beta):
+    """Fused Eq. 1 argmin + mixed-rate center blend: (dists, idx, blended)."""
+    if _use_pallas():
+        return _assign_lerp_kernel(u, centers, beta, interpret=not _on_tpu())
+    return ref.assign_and_lerp_ref(u, centers, beta)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments",))
+def chi2_feedback_all(f_pred, f_true, s_soft, seg_ids, num_segments):
+    """Cluster-segmented feedback: every member of every cluster in one
+    launch. ``seg_ids`` maps each row to its cluster slot in [0,
+    num_segments); returns (g (M,), seg_sum (num_segments,))."""
+    onehot = (seg_ids[:, None] == jnp.arange(num_segments)[None, :]).astype(jnp.float32)
+    if _use_pallas():
+        return _chi2_seg_kernel(f_pred, f_true, s_soft, onehot, interpret=not _on_tpu())
+    return ref.chi2_feedback_segmented_ref(f_pred, f_true, s_soft, onehot)

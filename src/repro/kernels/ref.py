@@ -62,6 +62,36 @@ def merge_attention_ref(
     return merged.astype(v_main.dtype), alpha
 
 
+def l1_distance_pairwise_ref(xs: jax.Array, centers: jax.Array) -> jax.Array:
+    """xs: (M, N), centers: (C, N) -> (M, C) pairwise L1 distances."""
+    x = xs.astype(jnp.float32)
+    c = centers.astype(jnp.float32)
+    return jnp.sum(jnp.abs(x[:, None, :] - c[None, :, :]), axis=-1)
+
+
+def assign_and_lerp_ref(
+    u: jax.Array, centers: jax.Array, beta: float
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """u: (N,), centers: (C, N) -> (dists (C,), argmin idx, blended row)."""
+    dists = l1_distance_ref(u, centers)
+    idx = jnp.argmin(dists).astype(jnp.int32)
+    best = centers[idx].astype(jnp.float32)
+    blended = (1.0 - beta) * best + beta * u.astype(jnp.float32)
+    return dists, idx, blended
+
+
+def chi2_feedback_segmented_ref(
+    f_pred: jax.Array,  # (M, J)
+    f_true: jax.Array,  # (M, J)
+    s_soft: jax.Array,  # (M, J)
+    seg_onehot: jax.Array,  # (M, S)
+) -> tuple[jax.Array, jax.Array]:
+    """Every member of every cluster in one batch: (g (M,), seg_sum (S,))."""
+    g = chi2_feedback_ref(f_pred, f_true, s_soft)
+    seg_sum = jnp.sum(seg_onehot.astype(jnp.float32) * g[:, None], axis=0)
+    return g, seg_sum
+
+
 def chi2_feedback_ref(
     f_pred: jax.Array,  # (M, J) predicted label histograms
     f_true: jax.Array,  # (M, J) expected label histograms

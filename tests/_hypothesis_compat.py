@@ -1,0 +1,106 @@
+"""Hypothesis with a fixed-example fallback.
+
+The property tests prefer real `hypothesis` when it is installed (see
+requirements-dev.txt). In hermetic environments without it, this module
+provides a deterministic stand-in: each `@given(...)` test runs against a
+fixed number of seeded pseudo-random examples instead of a shrinking
+search. The strategy surface is only what the suite actually uses —
+integers / floats / lists / tuples / composite / .map — all drawing from
+`numpy.random.default_rng` with a seed derived from the test name, so
+failures reproduce exactly across runs.
+"""
+from __future__ import annotations
+
+try:  # real hypothesis when available
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic fixed-example shim
+    import zlib
+
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _EXAMPLES = 10  # fixed examples per @given test
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw_fn = draw_fn
+
+        def example(self, rng) -> object:
+            return self._draw_fn(rng)
+
+        def map(self, fn) -> "_Strategy":
+            return _Strategy(lambda rng: fn(self._draw_fn(rng)))
+
+    class _St:
+        @staticmethod
+        def integers(min_value=0, max_value=2**31 - 1) -> _Strategy:
+            return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_kw) -> _Strategy:
+            return _Strategy(lambda rng: float(rng.uniform(min_value, max_value)))
+
+        @staticmethod
+        def lists(elements: _Strategy, min_size=0, max_size=10) -> _Strategy:
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elements.example(rng) for _ in range(n)]
+
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*parts: _Strategy) -> _Strategy:
+            return _Strategy(lambda rng: tuple(p.example(rng) for p in parts))
+
+        @staticmethod
+        def composite(fn):
+            def build(*args, **kwargs):
+                def draw_value(rng):
+                    draw = lambda strategy: strategy.example(rng)
+                    return fn(draw, *args, **kwargs)
+
+                return _Strategy(draw_value)
+
+            return build
+
+    st = _St()
+
+    def given(*strategies):
+        def decorator(fn):
+            def wrapper(*args, **kwargs):
+                base = zlib.crc32(fn.__qualname__.encode())
+                for i in range(_EXAMPLES):
+                    rng = np.random.default_rng((base + i * 7919) % 2**32)
+                    values = [s.example(rng) for s in strategies]
+                    fn(*args, *values, **kwargs)
+
+            # NOT functools.wraps: copying __wrapped__ would let pytest see
+            # the original signature and demand the @given args as fixtures
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            return wrapper
+
+        return decorator
+
+    class settings:  # noqa: N801 — mirrors hypothesis' lowercase class
+        def __init__(self, *args, **kwargs):
+            pass
+
+        def __call__(self, fn):
+            return fn
+
+        @staticmethod
+        def register_profile(*args, **kwargs):
+            pass
+
+        @staticmethod
+        def load_profile(*args, **kwargs):
+            pass
+
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -1,8 +1,7 @@
 """Federated data substrate: partitioners + synthetic task generators."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.data.partition import dirichlet_partition, shard_partition
 from repro.data.synthetic import TASKS, make_task

@@ -1,0 +1,157 @@
+"""The device-resident parameter plane: adapters, allocation, and parity of
+the plane-backed clustering path against the original pytree path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.pytrees import flatten_spec, tree_flat_vector, tree_num_params
+from repro.core.clustering import DynamicClustering
+from repro.core.plane import ParameterPlane
+
+
+def leaves_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------------------ adapters
+class TestAdapters:
+    def test_roundtrip_to_from_pytree(self, tiny_params):
+        plane = ParameterPlane(tiny_params, capacity=4)
+        row = plane.alloc(tiny_params)
+        back = plane.to_pytree(row)
+        assert jax.tree_util.tree_structure(back) == jax.tree_util.tree_structure(tiny_params)
+        leaves_equal(back, tiny_params)
+
+    def test_from_pytree_matches_tree_flat_vector(self, tiny_params):
+        plane = ParameterPlane(tiny_params)
+        np.testing.assert_array_equal(
+            np.asarray(plane.from_pytree(tiny_params)),
+            np.asarray(tree_flat_vector(tiny_params)),
+        )
+
+    def test_dim_is_param_count(self, tiny_params):
+        plane = ParameterPlane(tiny_params)
+        assert plane.dim == tree_num_params(tiny_params)
+
+    def test_flatten_spec_is_memoized(self, tiny_params):
+        assert flatten_spec(tiny_params) is flatten_spec(tiny_params)
+
+
+# ---------------------------------------------------------------- allocation
+class TestAllocation:
+    def test_free_then_realloc_reuses_row_zeroed(self, tiny_params):
+        plane = ParameterPlane(tiny_params, capacity=2)
+        row = plane.alloc(tiny_params)
+        plane.flush()  # old bytes land in the buffer
+        plane.free(row)
+        again = plane.alloc()
+        assert again == row  # LIFO free list reuses the row
+        np.testing.assert_array_equal(np.asarray(plane.row(again)), 0.0)
+
+    def test_grow_preserves_rows(self, tiny_params):
+        plane = ParameterPlane(tiny_params, capacity=1)
+        r0 = plane.alloc(tiny_params)
+        r1 = plane.alloc()  # forces a grow
+        assert plane.capacity == 2
+        assert r0 != r1
+        leaves_equal(plane.to_pytree(r0), tiny_params)
+
+    def test_double_free_rejected(self, tiny_params):
+        plane = ParameterPlane(tiny_params, capacity=2)
+        row = plane.alloc()
+        plane.free(row)
+        with pytest.raises(KeyError):
+            plane.free(row)
+
+    def test_staged_write_visible_before_flush(self, tiny_params):
+        plane = ParameterPlane(tiny_params, capacity=2)
+        row = plane.alloc()
+        vec = jnp.arange(plane.dim, dtype=jnp.float32)
+        plane.write(row, vec)
+        np.testing.assert_array_equal(np.asarray(plane.row(row)), np.asarray(vec))
+        got = plane.rows([row])  # flushes
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(vec))
+        assert not plane._dirty
+
+    def test_lerp_row(self, tiny_params):
+        plane = ParameterPlane(tiny_params, capacity=2)
+        row = plane.alloc()  # zeros
+        plane.lerp_row(row, jnp.full((plane.dim,), 4.0), 0.25)
+        np.testing.assert_allclose(np.asarray(plane.row(row)), 1.0)
+
+
+# -------------------------------------------------------------------- parity
+def _tree(x, shift=0.0):
+    return {
+        "a": {"w": jnp.full((6, 4), float(x), jnp.float32)},
+        "b": jnp.asarray([float(x) - shift, float(x) + shift], jnp.float32),
+    }
+
+
+def _run_scenario(backend: str):
+    """Seeded 3-cluster stream: seeding, nearest-joins, hysteresis switches,
+    and aggregation — identical upload sequence for both backends."""
+    cl = DynamicClustering(3, mix_rate=0.25, backend=backend)
+    rng = np.random.default_rng(42)
+    anchors = {0: 0.0, 1: 30.0, 2: 90.0}
+    events = []
+    for step in range(40):
+        client = int(rng.integers(0, 9))
+        anchor = anchors[client % 3] + float(rng.normal() * 2.0)
+        update = _tree(anchor, shift=0.5)
+        cid, created = cl.assign(f"c{client}", update)
+        cl.aggregate(cid, update)
+        events.append((f"c{client}", cid, created))
+    return cl, events
+
+
+class TestBackendParity:
+    def test_assign_aggregate_parity(self):
+        plane_cl, plane_events = _run_scenario("plane")
+        tree_cl, tree_events = _run_scenario("pytree")
+        assert plane_events == tree_events  # identical assignment decisions
+        assert plane_cl.assignment == tree_cl.assignment
+        for cid in tree_cl.clusters:
+            a = np.asarray(plane_cl.plane.row(plane_cl.clusters[cid]._row))
+            b = np.asarray(tree_flat_vector(tree_cl.clusters[cid].center))
+            np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)
+            assert plane_cl.clusters[cid].version == tree_cl.clusters[cid].version
+
+    def test_nearest_pair_parity(self):
+        plane_cl, _ = _run_scenario("plane")
+        tree_cl, _ = _run_scenario("pytree")
+        assert plane_cl.nearest_pair(close_frac=None) == tree_cl.nearest_pair(close_frac=None)
+        assert plane_cl.nearest_pair() == tree_cl.nearest_pair()
+
+    def test_center_property_materializes_equal_trees(self):
+        plane_cl, _ = _run_scenario("plane")
+        tree_cl, _ = _run_scenario("pytree")
+        for cid in tree_cl.clusters:
+            a, b = plane_cl.clusters[cid].center, tree_cl.clusters[cid].center
+            for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-6, atol=1e-6)
+
+    def test_merge_parity(self):
+        results = {}
+        for backend in ("plane", "pytree"):
+            cl, _ = _run_scenario(backend)
+            pair = cl.nearest_pair(close_frac=None)
+            merged = cl.merge_pair(pair[0], pair[1], lambda p: p)
+            vec = (
+                np.asarray(cl.plane.row(cl.clusters[merged]._row))
+                if backend == "plane"
+                else np.asarray(tree_flat_vector(cl.clusters[merged].center))
+            )
+            results[backend] = (merged, vec, sorted(cl.clusters))
+        assert results["plane"][0] == results["pytree"][0]
+        assert results["plane"][2] == results["pytree"][2]
+        np.testing.assert_allclose(results["plane"][1], results["pytree"][1], rtol=1e-6, atol=1e-6)
+
+    def test_plane_rows_freed_on_merge_and_drop(self):
+        cl, _ = _run_scenario("plane")
+        before = cl.plane.num_allocated
+        pair = cl.nearest_pair(close_frac=None)
+        cl.merge_pair(pair[0], pair[1], lambda p: p)
+        assert cl.plane.num_allocated == before - 2  # center + anchor rows returned

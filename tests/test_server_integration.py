@@ -75,6 +75,95 @@ class TestServerProtocol:
             assert k in s
 
 
+class TestServerStateAndStaleness:
+    def test_staleness_from_broadcast_anchor_when_base_merged_away(self):
+        """Regression for the server.py staleness rule: a client whose base
+        branch no longer exists (merged away) is measured from the current
+        cluster's last_broadcast_version — the merge broadcast refreshed
+        every member, so only post-broadcast aggregations count as stale."""
+        srv = EchoPFLServer(vec(0.0), num_initial_clusters=1, seed=0,
+                            enable_broadcast=False, refine_every=10**9)
+        for i in range(5):
+            srv.handle_upload("a", vec(1.0 + i), 0, 8, t=float(i))
+        cid = srv.clustering.assignment["a"]
+        cluster = srv.clustering.clusters[cid]
+        # pretend "a" trained from a branch that has since been merged away,
+        # and that the merge broadcast happened 2 aggregations ago
+        srv.client_versions["a"] = (999, 3)
+        cluster.last_broadcast_version = cluster.version - 2
+        expected = cluster.version - cluster.last_broadcast_version  # pre-upload
+        before = srv.staleness.total
+        srv.handle_upload("a", vec(9.0), 0, 8, t=10.0)
+        assert srv.staleness.total - before == expected
+
+    def test_state_dict_round_trips_bit_exact(self):
+        """state_dict -> load_state -> state_dict must reproduce the
+        plane-backed server exactly: every center/anchor/RNN leaf bit-equal
+        and the json meta identical."""
+        import jax
+
+        def build():
+            return EchoPFLServer(vec(0.0), num_initial_clusters=2, seed=0,
+                                 refine_every=7, local_train_fn=lambda p: p)
+
+        srv = build()
+        for i in range(30):
+            srv.handle_upload(i % 6, vec((i % 2) * 40.0 + 0.1 * i), 0, 8, t=float(i))
+        tree1, meta1 = srv.state_dict()
+
+        restored = build()
+        restored.load_state(tree1, meta1)
+        tree2, meta2 = restored.state_dict()
+        assert meta1 == meta2
+        assert jax.tree_util.tree_structure(tree1) == jax.tree_util.tree_structure(tree2)
+        for a, b in zip(jax.tree_util.tree_leaves(tree1), jax.tree_util.tree_leaves(tree2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # and the restored server behaves identically on the next upload
+        d1 = srv.handle_upload(0, vec(3.0), 0, 8, t=100.0)
+        d2 = restored.handle_upload(0, vec(3.0), 0, 8, t=100.0)
+        assert [(d.client_id, d.version, d.cluster_id, d.reason) for d in d1] == \
+               [(d.client_id, d.version, d.cluster_id, d.reason) for d in d2]
+
+
+class TestPlaneBackendParity:
+    def _run(self, backend):
+        """Tiny full-protocol run with feedback-driven refinement: clients
+        c4/c5 are hard outliers (huge chi2), so expansion must fire and seed
+        the child from their uploads."""
+        def feedback_fn(client_id, center):
+            err = 80.0 if client_id in ("c4", "c5") else 1.0
+            f_pred = np.asarray([50.0 + err, 50.0 - err, 1.0])
+            f_true = np.asarray([50.0, 50.0, 1.0])
+            s_soft = np.asarray([0.9, 0.08, 0.02])
+            return f_pred, f_true, s_soft
+
+        srv = EchoPFLServer(vec(0.0), num_initial_clusters=1, refine_every=8,
+                            feedback_fn=feedback_fn, local_train_fn=lambda p: p,
+                            plane_backend=backend, seed=0)
+        for i in range(40):
+            srv.handle_upload(f"c{i % 6}", vec(40.0 * (i % 2) + 0.01 * i), 0, 8, t=float(i))
+        assert srv.stats()["expansions"] > 0  # the scenario must exercise expand
+        return srv
+
+    def test_server_refine_trajectory_matches_pytree_path(self):
+        """The refine loop (feedback -> reassign -> expand -> merge) must
+        take identical decisions on both storage backends — including
+        expansion children seeded from the peeled members' *uploads*
+        (plane rows), not from the parent center."""
+        plane_srv = self._run("plane")
+        tree_srv = self._run("pytree")
+        assert plane_srv.clustering.assignment == tree_srv.clustering.assignment
+        ps, ts = plane_srv.stats(), tree_srv.stats()
+        for key in ("clusters", "merges", "expansions", "staleness", "broadcasts"):
+            assert ps[key] == ts[key], key
+        for cid, tc in tree_srv.clustering.clusters.items():
+            pc = plane_srv.clustering.clusters[cid]
+            import jax
+            for a, b in zip(jax.tree_util.tree_leaves(pc.center),
+                            jax.tree_util.tree_leaves(tc.center)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-6)
+
+
 @pytest.mark.slow
 class TestSimulatorEndToEnd:
     def test_deterministic_given_seed(self):

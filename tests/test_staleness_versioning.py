@@ -3,8 +3,7 @@ import threading
 
 import numpy as np
 import pytest
-from hypothesis import given
-from hypothesis import strategies as st
+from _hypothesis_compat import given, st
 
 from repro.core.staleness import StalenessTracker
 from repro.core.versioning import ModelRepo, RWLock
