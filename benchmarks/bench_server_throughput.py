@@ -12,6 +12,19 @@ The broadcast predictor is disabled so the measurement isolates the
 parameter-coordination hot path (the RNN decision cost is identical in
 both backends); a secondary table reports the broadcast-on rate.
 
+When more than one local device is visible, a third column measures the
+row-sharded plane (``plane_sharded``): the same server with its row store
+placed over a "plane" mesh spanning every local device. Note compute
+placement is adaptive — at this grid's cluster counts the batched launches
+stay below ``REPRO_PLANE_MESH_MIN_ROWS`` and run single-device against the
+sharded storage; export ``REPRO_PLANE_MESH_MIN_ROWS=0`` to force the
+per-shard kernel path (kernels/plane_sharded.py, exercised by the ci.sh
+multi-device leg) into the measurement. On one CPU a multi-device mesh
+needs a forced host platform, e.g.::
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+        PYTHONPATH=src python -m benchmarks.run --only server_throughput
+
     PYTHONPATH=src python -m benchmarks.run --only server_throughput
 """
 from __future__ import annotations
@@ -57,13 +70,16 @@ def _uploads(num_clients: int, num_clusters: int, n: int, template, seed=0):
 
 
 def _measure(backend: str, num_clients: int, num_clusters: int, *,
-             enable_broadcast: bool, n_timed: int, template) -> float:
+             enable_broadcast: bool, n_timed: int, template, mesh=None) -> float:
     srv = EchoPFLServer(
         template,
         num_initial_clusters=num_clusters,
         refine_every=10**9,  # refinement is a cold path; measured separately
         enable_broadcast=enable_broadcast,
         plane_backend=backend,
+        # False pins the baseline columns to the single-device plane even if
+        # REPRO_PLANE_MESH is exported in the environment
+        plane_mesh=mesh if mesh is not None else False,
         seed=0,
     )
     # warm until every client has a plane row and capacity growth + jit
@@ -85,6 +101,14 @@ def run(quick: bool = False) -> None:
     template = _model(64 if quick else 128)
     n_timed = 100 if quick else 300
     grid = [(16, 4), (64, 8)] if quick else [(16, 4), (64, 8), (64, 16), (128, 8)]
+    plane_mesh = None
+    if len(jax.devices()) > 1:
+        from repro.launch.mesh import make_plane_mesh
+
+        plane_mesh = make_plane_mesh()
+    cols = ["clients", "clusters", "pytree", "plane"]
+    if plane_mesh is not None:
+        cols.append("plane_sharded")
     rows = []
     for num_clients, num_clusters in grid:
         row = {"clients": num_clients, "clusters": num_clusters}
@@ -93,10 +117,18 @@ def run(quick: bool = False) -> None:
                 backend, num_clients, num_clusters,
                 enable_broadcast=False, n_timed=n_timed, template=template,
             )
+        if plane_mesh is not None:
+            row["plane_sharded"] = _measure(
+                "plane", num_clients, num_clusters,
+                enable_broadcast=False, n_timed=n_timed, template=template,
+                mesh=plane_mesh,
+            )
         row["speedup"] = row["plane"] / row["pytree"]
         rows.append(row)
-    print(table(rows, ["clients", "clusters", "pytree", "plane", "speedup"],
-                "uploads/sec (broadcast predictor off — pure coordination path)"))
+    title = "uploads/sec (broadcast predictor off — pure coordination path)"
+    if plane_mesh is not None:
+        title += f"; plane_sharded = row store over {plane_mesh.devices.size} devices"
+    print(table(rows, cols + ["speedup"], title))
 
     bcast_rows = []
     for num_clients, num_clusters in grid[:2]:

@@ -21,4 +21,15 @@ echo "=== server/clustering on the pytree storage backend (REPRO_PLANE=pytree) =
 REPRO_PLANE=pytree python -m pytest -q -p no:cacheprovider -m "not slow" \
     tests/test_parameter_plane.py tests/test_clustering.py tests/test_server_integration.py
 
+echo "=== sharded plane over 8 simulated devices (REPRO_PLANE_MESH=auto) ==="
+# Forced host-platform device count: the plane/kernel parity suites run with
+# every DynamicClustering defaulting to the row-sharded backend (MIN_ROWS=0
+# drives the sharded kernel dispatch even at test-sized fleets), plus the
+# sharded-plane suite itself (skipped on the 1-device legs above).
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+REPRO_PLANE_MESH=auto REPRO_PLANE_MESH_MIN_ROWS=0 \
+python -m pytest -q -p no:cacheprovider -m "not slow" \
+    tests/test_sharded_plane.py tests/test_parameter_plane.py \
+    tests/test_batched_kernels.py tests/test_clustering.py
+
 echo "ci.sh: all green"

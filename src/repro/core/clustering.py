@@ -20,6 +20,13 @@ flattening; ``pytree`` is the original per-cluster-pytree path, kept
 bit-compatible for parity testing and as the benchmark baseline. Both
 backends apply identical fp32 arithmetic, so cluster assignments match
 exactly.
+
+The plane backend can additionally shard its row store over a device mesh
+(``REPRO_PLANE_MESH`` knob, or an explicit ``mesh`` argument): the batched
+kernels then run per row-shard with cross-shard reductions only at the
+argmin/segment-sum points (see kernels/plane_sharded.py). Per-row
+arithmetic is unchanged, so sharded and single-device planes take
+identical assignment/merge decisions on the same upload stream.
 """
 from __future__ import annotations
 
@@ -145,6 +152,7 @@ class DynamicClustering:
         mix_rate: float = 0.5,
         hm: float = 2.0,
         backend: str | None = None,
+        mesh: Any | None = None,
     ):
         self.num_initial = num_initial
         self.mix_rate = mix_rate
@@ -152,6 +160,21 @@ class DynamicClustering:
         self.backend = (backend or default_backend()).lower()
         if self.backend not in ("plane", "pytree"):
             raise ValueError(f"REPRO_PLANE backend must be plane|pytree, got {self.backend}")
+        # mesh=None defers to the REPRO_PLANE_MESH env knob; mesh=False
+        # forces the single-device plane even when the knob is set (the
+        # benchmark baseline must not silently go sharded under ci.sh env)
+        if mesh is False:
+            mesh = None
+        elif mesh is None and self.backend == "plane":
+            from repro.launch.mesh import plane_mesh_from_env
+
+            mesh = plane_mesh_from_env()  # default None: single-device plane
+        self.mesh = mesh if self.backend == "plane" else None
+        # Below this many batched rows the collectives cost more than they
+        # save and one device runs the launch faster — the row *store* stays
+        # sharded either way (that is the memory win); only compute
+        # placement adapts. 0 forces sharded compute (parity tests).
+        self.mesh_min_rows = int(os.environ.get("REPRO_PLANE_MESH_MIN_ROWS", "128"))
         self.plane: ParameterPlane | None = None  # built from the first center's structure
         self.clusters: dict[int, Cluster] = {}
         self._next_id = 0
@@ -170,7 +193,20 @@ class DynamicClustering:
     # ------------------------------------------------------------------ init
     def _ensure_plane(self, template: PyTree) -> None:
         if self.backend == "plane" and self.plane is None:
-            self.plane = ParameterPlane(template, capacity=max(8, 4 * self.num_initial))
+            self.plane = ParameterPlane(
+                template, capacity=max(8, 4 * self.num_initial), mesh=self.mesh
+            )
+
+    def _kernel_mesh_kwargs(self, nrows: int) -> dict:
+        """Static mesh kwargs for a batched kernel launch over ``nrows``
+        sharded rows. Empty when the plane is unsharded — or when the batch
+        is too small to amortize the cross-shard collectives (see
+        ``mesh_min_rows``) — so the single-device dispatch stays untouched
+        and a sharded plane is never slower than an unsharded one on small
+        fleets."""
+        if self.plane is None or self.plane.mesh is None or nrows < self.mesh_min_rows:
+            return {}
+        return {"mesh": self.plane.mesh, "axis": self.plane.row_axis}
 
     def _new_cluster(self, center: PyTree) -> Cluster:
         """``center`` may be a pytree or (plane mode) an already-flat row."""
@@ -269,8 +305,9 @@ class DynamicClustering:
             self._move(client_id, c.cluster_id)
             return c.cluster_id, True
         cids = sorted(self.clusters)
-        centers = self.plane.rows([self.clusters[c]._row for c in cids])
-        dists_d, _amin, blended = K.assign_and_lerp(u, centers, self.mix_rate)
+        kw = self._kernel_mesh_kwargs(len(cids))
+        centers = self.plane.rows([self.clusters[c]._row for c in cids], on_mesh=bool(kw))
+        dists_d, _amin, blended = K.assign_and_lerp(u, centers, self.mix_rate, **kw)
         dists = np.asarray(dists_d)  # one host sync; argmin re-read from it
         cid = cids[int(np.argmin(dists))]
         # the blend is only valid against the center version it was computed
@@ -375,8 +412,9 @@ class DynamicClustering:
         if len(cids) < 2:
             return None
         if self.backend == "plane":
-            vecs = self.plane.rows([self.clusters[c]._row for c in cids])
-            dmat = np.asarray(K.l1_distance_pairwise(vecs, vecs))
+            kw = self._kernel_mesh_kwargs(len(cids))
+            vecs = self.plane.rows([self.clusters[c]._row for c in cids], on_mesh=bool(kw))
+            dmat = np.asarray(K.l1_distance_pairwise(vecs, vecs, **kw))
         else:
             vecs = jnp.stack([tree_flat_vector(self.clusters[c].center) for c in cids])
             dmat = np.zeros((len(cids), len(cids)))
@@ -423,9 +461,12 @@ class DynamicClustering:
             return 0
         moves = 0
         if self.backend == "plane":
+            kw = self._kernel_mesh_kwargs(len(flagged))
             U = self._upload_matrix(uploads, [m for m, _ in flagged])
-            centers = self.plane.rows([self.clusters[c]._row for c in cids])
-            D = np.asarray(K.l1_distance_pairwise(U, centers))
+            centers = self.plane.rows(
+                [self.clusters[c]._row for c in cids], on_mesh=bool(kw)
+            )
+            D = np.asarray(K.l1_distance_pairwise(U, centers, **kw))
             for (m, cid), d in zip(flagged, D):
                 best = cids[int(np.argmin(d))]
                 if best != cid and d[cids.index(best)] < 0.9 * d[cids.index(cid)]:

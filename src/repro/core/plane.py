@@ -17,6 +17,25 @@ read (``rows``/``matrix``). Single-row reads are served straight from the
 staging map, so ping-pong write/read of one row never touches the big
 buffer. Pytrees are materialized only at protocol boundaries via the
 cached :class:`~repro.common.pytrees.FlattenSpec` adapters.
+
+Row-shard layout (fleet scale)
+------------------------------
+At the million-user north star the ``(capacity, dim)`` buffer outgrows one
+accelerator's memory, so the plane optionally places it with a
+``NamedSharding`` over a mesh (``launch.mesh.make_plane_mesh``): rows —
+cluster centers, broadcast anchors, and per-client last uploads alike —
+spread contiguously over the ``plane`` axis (device *i* owns rows
+``[i*cap/S, (i+1)*cap/S)``), and the flat parameter dim may additionally
+spread over a ``model`` axis when it divides. Capacity is rounded up to a
+multiple of the row-shard count so every shard stays equal through
+``_grow`` doublings, and the donated flush scatter preserves the placement
+(re-pinned defensively if XLA ever drops it). Batched reads feed the
+kernels in :mod:`repro.kernels.plane_sharded`, which run per-shard and
+reduce across shards only where the protocol genuinely couples rows: an
+``all_gather`` of per-shard distance vectors before an argmin, a one-hot
+``psum`` to fetch the winning center row, and a ``psum`` of per-cluster
+feedback segment sums. Everything per-row is bitwise-identical to the
+single-device plane, so server trajectories do not depend on the mesh.
 """
 from __future__ import annotations
 
@@ -24,6 +43,7 @@ from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
 
 from repro.common.pytrees import flatten_spec
 
@@ -58,12 +78,39 @@ def _grow_buf(buf):
 class ParameterPlane:
     """Preallocated ``(capacity, dim)`` row store for flat parameter vectors."""
 
-    def __init__(self, template: PyTree, capacity: int = 32, dtype=jnp.float32):
+    def __init__(
+        self,
+        template: PyTree,
+        capacity: int = 32,
+        dtype=jnp.float32,
+        *,
+        mesh: jax.sharding.Mesh | None = None,
+        row_axis: str = "plane",
+        dim_axis: str | None = "model",
+    ):
         self.spec = flatten_spec(template, dtype)
         self.dim = self.spec.dim
         self.dtype = jnp.dtype(dtype)
+        self.mesh = mesh
+        self.row_axis = row_axis
+        self._row_shards = 1
+        self._sharding: NamedSharding | None = None
+        if mesh is not None and row_axis in mesh.axis_names:
+            self._row_shards = mesh.shape[row_axis]
+            dspec = (
+                dim_axis
+                if dim_axis is not None
+                and dim_axis in mesh.axis_names
+                and self.dim % mesh.shape[dim_axis] == 0
+                else None
+            )
+            self._sharding = NamedSharding(mesh, PartitionSpec(row_axis, dspec))
+            self._local_device = mesh.devices.flat[0]
+            self._replicated = NamedSharding(mesh, PartitionSpec())
         capacity = max(1, int(capacity))
-        self._buf = jnp.zeros((capacity, self.dim), self.dtype)
+        # equal row shards, preserved through _grow doublings
+        capacity = -(-capacity // self._row_shards) * self._row_shards
+        self._buf = self._place(jnp.zeros((capacity, self.dim), self.dtype))
         self._free: list[int] = list(range(capacity - 1, -1, -1))
         self._used: set[int] = set()
         self._dirty: dict[int, jax.Array] = {}
@@ -71,8 +118,38 @@ class ParameterPlane:
         # CPU, and the hot path (`assign`) requests the same center-row set
         # every upload while only the aggregated row changes — so a cached
         # view is patched with a 1-row scatter instead of re-gathered.
+        # Keyed (row_ids, domain): "local" views feed single-device compute,
+        # "mesh" views are mesh-replicated operands for sharded launches.
         self._views: dict[tuple, jax.Array] = {}
         self._view_stale: dict[tuple, set] = {}
+
+    # ------------------------------------------------------------- placement
+    def _place(self, buf: jax.Array) -> jax.Array:
+        """Pin ``buf`` to the plane's row sharding (no-op when unsharded or
+        already placed — XLA propagates the sharding through the donated
+        scatters, so this is a correctness guard, not a per-flush copy)."""
+        if self._sharding is None or (
+            hasattr(buf, "sharding")
+            and buf.sharding.is_equivalent_to(self._sharding, buf.ndim)
+        ):
+            return buf
+        return jax.device_put(buf, self._sharding)
+
+    def _localize(self, x: jax.Array) -> jax.Array:
+        """Land a small read (one row, a row-set view) on a single device.
+
+        A slice/gather of the sharded buffer comes back *committed to the
+        whole mesh*, which turns every downstream consumer — the fused
+        assign kernel on an 8-row center view, a gap norm — into a
+        full-mesh SPMD dispatch. Small batches belong on one device (the
+        same economics as ``mesh_min_rows``); the sharded kernel launches
+        reshard their operands on entry regardless (ops._to_mesh)."""
+        if self._sharding is None:
+            return x
+        sharding = getattr(x, "sharding", None)
+        if sharding is not None and sharding.device_set == {self._local_device}:
+            return x
+        return jax.device_put(x, self._local_device)
 
     # ---------------------------------------------------------------- sizing
     @property
@@ -85,7 +162,7 @@ class ParameterPlane:
 
     def _grow(self) -> None:
         old_cap = self.capacity
-        self._buf = _grow_buf(self._buf)
+        self._buf = self._place(_grow_buf(self._buf))
         self._free.extend(range(2 * old_cap - 1, old_cap - 1, -1))
 
     # ------------------------------------------------------------ allocation
@@ -111,7 +188,7 @@ class ParameterPlane:
         self._used.discard(row)
         self._dirty.pop(row, None)
         self._free.append(row)
-        for key in [k for k in self._views if row in self._view_stale[k] or row in k]:
+        for key in [k for k in self._views if row in self._view_stale[k] or row in k[0]]:
             del self._views[key], self._view_stale[key]
 
     # ----------------------------------------------------------------- io
@@ -130,9 +207,12 @@ class ParameterPlane:
         vec = self.as_vec(value)
         if vec.shape != (self.dim,):
             raise ValueError(f"expected ({self.dim},) vector, got {vec.shape}")
-        self._dirty[row] = vec
+        # normalize the staging domain: a value coming back from a sharded
+        # kernel launch is mesh-committed, and mixing that with local-device
+        # rows in later jitted arithmetic is a placement error
+        self._dirty[row] = self._localize(vec)
         for key in self._views:
-            if row in key:
+            if row in key[0]:
                 self._view_stale[key].add(row)
 
     def flush(self) -> None:
@@ -140,12 +220,22 @@ class ParameterPlane:
             return
         order = sorted(self._dirty)
         if len(order) == 1:
-            self._buf = _set_row(self._buf, jnp.int32(order[0]), self._dirty[order[0]])
+            val = self._replicate(self._dirty[order[0]])
+            self._buf = _set_row(self._buf, jnp.int32(order[0]), val)
         else:
             rows = jnp.asarray(order, jnp.int32)
-            vals = jnp.stack([self._dirty[r] for r in order])
+            vals = self._replicate(jnp.stack([self._dirty[r] for r in order]))
             self._buf = _scatter_rows(self._buf, rows, vals)
+        self._buf = self._place(self._buf)
         self._dirty.clear()
+
+    def _replicate(self, v: jax.Array) -> jax.Array:
+        """Move a staged value onto the mesh before it meets the sharded
+        buffer in a jitted scatter (committed single-device operands and
+        mesh-committed operands cannot share a jit)."""
+        if self._sharding is None:
+            return v
+        return jax.device_put(v, self._replicated)
 
     def row(self, row: int) -> jax.Array:
         """Current ``(dim,)`` vector for one row (staged write wins)."""
@@ -153,9 +243,9 @@ class ParameterPlane:
             return self._dirty[row]
         if row not in self._used:
             raise KeyError(f"row {row} is not allocated")
-        return self._buf[row]
+        return self._localize(self._buf[row])
 
-    def rows(self, row_ids: Sequence[int]) -> jax.Array:
+    def rows(self, row_ids: Sequence[int], *, on_mesh: bool = False) -> jax.Array:
         """Stacked ``(len(row_ids), dim)`` view of the requested rows.
 
         Repeat requests for the same row set (the per-upload center matrix)
@@ -163,27 +253,40 @@ class ParameterPlane:
         changed since — O(changed_rows * dim), not O(len * dim). The
         returned array is a snapshot: valid until the same row set is
         requested again after a write.
+
+        ``on_mesh`` asks for the view replicated across the plane mesh —
+        the operand form a *sharded* kernel launch consumes. It is cached
+        and patched exactly like the local view, so sharded launches do not
+        re-broadcast the whole matrix across devices on every call. Ignored
+        (plain local view) when the plane is unsharded.
         """
         if len(row_ids) == 0:
             return jnp.zeros((0, self.dim), self.dtype)
-        key = tuple(row_ids)
-        view = self._views.get(key)
+        on_mesh = bool(on_mesh) and self._sharding is not None
+        ids = tuple(row_ids)
+        key = (ids, "mesh" if on_mesh else "local")
+        place = self._replicate if on_mesh else (lambda v: v)
+        view = self._views.pop(key, None)  # pop + reinsert: move-to-end on hit
         if view is not None:
             stale = self._view_stale[key]
             if stale:
                 if len(stale) == 1:
                     (r,) = stale
-                    view = _set_row(view, jnp.int32(key.index(r)), self.row(r))
+                    view = _set_row(view, jnp.int32(ids.index(r)), place(self.row(r)))
                 else:
-                    pos = [key.index(r) for r in stale]
-                    vals = jnp.stack([self.row(r) for r in stale])
+                    pos = [ids.index(r) for r in stale]
+                    vals = place(jnp.stack([self.row(r) for r in stale]))
                     view = _scatter_rows(view, jnp.asarray(pos, jnp.int32), vals)
-                self._views[key] = view
                 stale.clear()
+            self._views[key] = view
             return view
         self.flush()
-        view = self._buf[jnp.asarray(list(key), jnp.int32)]
-        if len(self._views) >= 4:  # tiny LRU-ish cache: hot sets only
+        view = self._buf[jnp.asarray(list(ids), jnp.int32)]
+        view = self._replicate(view) if on_mesh else self._localize(view)
+        if len(self._views) >= 4:  # tiny LRU cache: hot sets only. Insertion
+            # order is recency order (hits reinsert), so the head is the
+            # true LRU victim — a burst of cold reads can no longer evict
+            # the hot per-upload center set just because it was cached first.
             oldest = next(iter(self._views))
             del self._views[oldest], self._view_stale[oldest]
         self._views[key] = view
@@ -191,8 +294,11 @@ class ParameterPlane:
         return view
 
     def matrix(self) -> jax.Array:
-        """The full backing buffer (flushed); rows not allocated are zeros.
-        A snapshot view: valid until the next write-back donates the buffer."""
+        """The full backing buffer (flushed). Never-allocated rows are
+        zeros; *freed* rows keep their last tenant's bytes until realloc
+        (``alloc`` zero-seeds, so ``row``/``rows`` of live rows never
+        expose them). A snapshot view: valid until the next write-back
+        donates the buffer."""
         self.flush()
         return self._buf
 

@@ -65,11 +65,16 @@ class EchoPFLServer:
         enable_clustering: bool = True,
         enable_broadcast: bool = True,
         plane_backend: str | None = None,
+        plane_mesh: Any | None = None,
         seed: int = 0,
     ):
         self.init_params = init_params
         self.clustering = DynamicClustering(
-            num_initial_clusters, mix_rate=mix_rate, hm=hm, backend=plane_backend
+            num_initial_clusters,
+            mix_rate=mix_rate,
+            hm=hm,
+            backend=plane_backend,
+            mesh=plane_mesh,
         )
         self.repo = ModelRepo()
         self.staleness = StalenessTracker()
@@ -250,7 +255,8 @@ class EchoPFLServer:
         f_pred, f_true, s_soft = self._feedback_rows([(m, c) for _, _, m, c in entries])
         seg_ids = np.asarray([si for si, _, _, _ in entries], np.int32)
         g, seg_sum = K.chi2_feedback_all(
-            f_pred, f_true, s_soft, seg_ids, num_segments=len(cid_order)
+            f_pred, f_true, s_soft, seg_ids, num_segments=len(cid_order),
+            **self.clustering._kernel_mesh_kwargs(len(entries)),
         )
         g = np.asarray(g)
         counts = np.bincount(seg_ids, minlength=len(cid_order))
@@ -407,9 +413,10 @@ class EchoPFLServer:
         elif members and plane is not None:
             have = [m for m in members if m in self._upload_rows]
             if have:
+                kw = clustering._kernel_mesh_kwargs(len(have))
                 U = plane.rows([self._upload_rows[m] for m in have])
-                centers = plane.rows([clusters[c]._row for c in rest])
-                D = np.asarray(K.l1_distance_pairwise(U, centers))
+                centers = plane.rows([clusters[c]._row for c in rest], on_mesh=bool(kw))
+                D = np.asarray(K.l1_distance_pairwise(U, centers, **kw))
                 for m, d in zip(have, D):
                     best_of[m] = rest[int(np.argmin(d))]
         elif members:
@@ -439,11 +446,21 @@ class EchoPFLServer:
         per-cluster RNN predictor weights, Top-K records, membership,
         versions, staleness counters. Restore with :meth:`load_state`."""
         cl = self.clustering
+        # per-client last uploads: the dissolve/expand refinement geometry.
+        # Without them a restarted server silently refines blind (every
+        # member probes as its cluster center) until each client re-uploads.
+        if cl.plane is None:
+            last_uploads = {str(k): v for k, v in self.last_uploads.items()}
+        else:
+            last_uploads = {
+                str(k): cl.plane.to_pytree(row) for k, row in self._upload_rows.items()
+            }
         tree = {
             "centers": {str(cid): c.center for cid, c in cl.clusters.items()},
             "bcast_centers": {
                 str(cid): c.last_broadcast_center for cid, c in cl.clusters.items()
             },
+            "last_uploads": last_uploads,
             "rnn": {str(cid): p.params for cid, p in self.predictors.items()},
         }
         meta = {
@@ -479,6 +496,7 @@ class EchoPFLServer:
             "decisions": self._decisions,
             "rnn_broadcasts": self._rnn_broadcasts,
             "refine_round": self._refine_round,
+            "upload_clients": sorted(last_uploads),
         }
         return tree, meta
 
@@ -492,6 +510,7 @@ class EchoPFLServer:
         return {
             "centers": {cid: self.init_params for cid in meta["clusters"]},
             "bcast_centers": {cid: self.init_params for cid in meta["clusters"]},
+            "last_uploads": {c: self.init_params for c in meta.get("upload_clients", [])},
             "rnn": {cid: rnn_like for cid in meta["predictors"]},
         }
 
@@ -499,6 +518,11 @@ class EchoPFLServer:
         """Restore from :meth:`state_dict` output (elastic restart)."""
         cid_of = lambda s: client_id_type(s)
         cl = self.clustering
+        if cl.plane is not None:  # return pre-restore upload rows too
+            for row in self._upload_rows.values():
+                cl.plane.free(row)
+        self._upload_rows = {}
+        self.last_uploads = {}
         cl.reset()  # frees any live plane rows before adopting the snapshot
         for cid_s, info in meta["clusters"].items():
             cid = int(cid_s)
@@ -509,6 +533,15 @@ class EchoPFLServer:
             c.pf_round = info["pf_round"]
             c.last_broadcast_version = info["last_broadcast_version"]
             self.repo.branch(f"cluster/{cid}", c.center)
+        # restore per-client last uploads (absent in pre-upload_clients
+        # checkpoints: refinement then runs without last-upload geometry —
+        # no dissolve/expand seeding — until every client re-uploads)
+        for k, v in (tree.get("last_uploads") or {}).items():
+            if cl.backend == "plane":
+                cl._ensure_plane(v)
+                self._upload_rows[cid_of(k)] = cl.plane.alloc(v)
+            else:
+                self.last_uploads[cid_of(k)] = v
         cl.assignment = {cid_of(k): v for k, v in meta["assignment"].items()}
         cl._next_id = meta["next_id"]
         cl.merges = meta["merges"]

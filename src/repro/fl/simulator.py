@@ -68,9 +68,17 @@ class SimReport:
 
 
 def model_bytes(params: PyTree) -> int:
+    """Wire size of one model payload: sum of per-leaf nbytes. Leaf dtype is
+    honored — a compressed/quantized payload (int8, fp16) is not 4 bytes per
+    element; non-array leaves (python scalars) count as 4-byte words."""
     import jax
 
-    return sum(np.prod(x.shape) * 4 for x in jax.tree_util.tree_leaves(params))
+    total = 0
+    for x in jax.tree_util.tree_leaves(params):
+        dtype = getattr(x, "dtype", None)
+        itemsize = dtype.itemsize if dtype is not None else 4
+        total += int(np.prod(getattr(x, "shape", ()))) * itemsize
+    return total
 
 
 class Simulator:
@@ -239,6 +247,7 @@ class Simulator:
 
         next_eval = self.eval_interval
         groups_time = {g: t for g in strat.groups(sorted(self.clients))}
+        rounds_done = 0  # rounds=0 must return a zero-round report, not crash
         for rnd in range(rounds):
             # each group (one global group, or one per cluster) runs its own barrier
             for group_id, members in strat.groups(sorted(self.clients)).items():
@@ -265,13 +274,14 @@ class Simulator:
                     c.base_version = dl.version
                 groups_time[group_id] = barrier + dl_time
             t = max(groups_time.values())
+            rounds_done = rnd + 1
             while t >= next_eval:
                 self._evaluate(next_eval)
                 next_eval += self.eval_interval
             if max_time and t > max_time:
                 break
         extra = strat.stats() if hasattr(strat, "stats") else {}
-        extra["rounds"] = rnd + 1
+        extra["rounds"] = rounds_done
         return self._report(t, extra)
 
     def run(self, **kw) -> SimReport:

@@ -13,7 +13,7 @@ import os
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import plane_sharded, ref
 from repro.kernels.assign_lerp import assign_and_lerp as _assign_lerp_kernel
 from repro.kernels.chi2_feedback import chi2_feedback as _chi2_kernel
 from repro.kernels.chi2_feedback import chi2_feedback_segmented as _chi2_seg_kernel
@@ -193,28 +193,163 @@ def chi2_feedback(f_pred, f_true, s_soft):
     return ref.chi2_feedback_ref(f_pred, f_true, s_soft)
 
 
-@jax.jit
-def l1_distance_pairwise(xs, centers):
-    """(M, N) x (C, N) -> (M, C) L1 matrix in one launch (plane hot path)."""
+# ---------------------------------------------------------------------------
+# Batched plane kernels. Each public wrapper takes an optional plane mesh:
+# with ``mesh=None`` (default) the single-device path runs unchanged; with a
+# row-sharded mesh the same kernel bodies run per-shard inside shard_map
+# (see kernels/plane_sharded.py for the reduction points). Mesh and axis are
+# static jit arguments, so each (mesh, shape) pair compiles once.
+# ---------------------------------------------------------------------------
+
+
+def _mesh_active(mesh, axis: str) -> bool:
+    return mesh is not None and axis in mesh.axis_names and mesh.shape[axis] > 1
+
+
+def _to_mesh(mesh, *arrays):
+    """Replicate *small, genuinely replicated* operands (the arriving upload
+    vector, the center matrix every query row scores against) onto the mesh
+    before a sharded launch. The plane serves small reads committed to a
+    single device (plane._localize), and a jit spanning the whole mesh
+    rejects single-device-committed inputs rather than resharding them — so
+    the dispatch layer moves them here. Arrays already living on the mesh's
+    device set pass through untouched."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    devices = frozenset(mesh.devices.flat)
+    rep = NamedSharding(mesh, PartitionSpec())
+    out = []
+    for x in arrays:
+        sharding = getattr(x, "sharding", None)
+        if sharding is not None and sharding.device_set == devices:
+            out.append(x)
+        else:
+            out.append(jax.device_put(x, rep))
+    return out
+
+
+def _to_mesh_rows(mesh, axis, x, fill=0):
+    """Place a row-batched operand *sharded* over ``axis`` (rows padded up
+    to the shard count first). The fleet-scale operand — an (M, dim) upload
+    matrix, (M, J) feedback rows — must never be materialized whole on
+    every device; replicate-then-reshard would cost shard_count x the
+    sharded footprint on exactly the path sharding exists to relieve."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    shards = mesh.shape[axis]
+    rows = x.shape[0]
+    rows_p = -(-rows // shards) * shards
+    if rows_p != rows:
+        x = jnp.pad(
+            jnp.asarray(x),
+            ((0, rows_p - rows),) + ((0, 0),) * (x.ndim - 1),
+            constant_values=fill,
+        )
+    want = NamedSharding(mesh, PartitionSpec(axis, *(None,) * (x.ndim - 1)))
+    sharding = getattr(x, "sharding", None)
+    if sharding is not None and sharding.is_equivalent_to(want, x.ndim):
+        return x
+    return jax.device_put(x, want)
+
+
+def _l1_pairwise_local(xs, centers):
     if _use_pallas():
         return _l1_pairwise_kernel(xs, centers, interpret=not _on_tpu())
     return ref.l1_distance_pairwise_ref(xs, centers)
 
 
+def _l1_local(u, centers):
+    if _use_pallas():
+        return _l1_kernel(u, centers, interpret=not _on_tpu())
+    return ref.l1_distance_ref(u, centers)
+
+
+def _chi2_seg_local(f_pred, f_true, s_soft, onehot):
+    if _use_pallas():
+        return _chi2_seg_kernel(f_pred, f_true, s_soft, onehot, interpret=not _on_tpu())
+    return ref.chi2_feedback_segmented_ref(f_pred, f_true, s_soft, onehot)
+
+
+@jax.jit
+def _l1_pairwise_single(xs, centers):
+    return _l1_pairwise_local(xs, centers)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis"))
+def _l1_pairwise_mesh(xs, centers, mesh, axis):
+    return plane_sharded.l1_pairwise_sharded(xs, centers, mesh, axis, _l1_pairwise_local)
+
+
+def l1_distance_pairwise(xs, centers, *, mesh=None, axis="plane"):
+    """(M, N) x (C, N) -> (M, C) L1 matrix in one launch (plane hot path).
+
+    With a plane mesh, the M query rows shard over ``axis`` and each shard
+    scores only its rows (identical per-row arithmetic)."""
+    if _mesh_active(mesh, axis):
+        M = xs.shape[0]
+        xs = _to_mesh_rows(mesh, axis, xs)
+        (centers,) = _to_mesh(mesh, centers)
+        return _l1_pairwise_mesh(xs, centers, mesh=mesh, axis=axis)[:M]
+    return _l1_pairwise_single(xs, centers)
+
+
 @functools.partial(jax.jit, static_argnames=("beta",))
-def assign_and_lerp(u, centers, beta):
-    """Fused Eq. 1 argmin + mixed-rate center blend: (dists, idx, blended)."""
+def _assign_lerp_single(u, centers, beta):
     if _use_pallas():
         return _assign_lerp_kernel(u, centers, beta, interpret=not _on_tpu())
     return ref.assign_and_lerp_ref(u, centers, beta)
 
 
+@functools.partial(jax.jit, static_argnames=("beta", "valid_rows", "mesh", "axis"))
+def _assign_lerp_mesh(u, centers, beta, valid_rows, mesh, axis):
+    return plane_sharded.assign_lerp_sharded(
+        u, centers, beta, mesh, axis, _l1_local, valid_rows=valid_rows
+    )
+
+
+def assign_and_lerp(u, centers, beta, *, mesh=None, axis="plane"):
+    """Fused Eq. 1 argmin + mixed-rate center blend: (dists, idx, blended).
+
+    With a plane mesh, the C center rows shard over ``axis``; distances
+    all_gather, the argmin replicates, and the winning row is fetched with
+    a one-hot psum — the full center matrix never moves."""
+    if _mesh_active(mesh, axis):
+        C = centers.shape[0]
+        centers = _to_mesh_rows(mesh, axis, centers)
+        (u,) = _to_mesh(mesh, u)
+        return _assign_lerp_mesh(u, centers, beta, valid_rows=C, mesh=mesh, axis=axis)
+    return _assign_lerp_single(u, centers, beta)
+
+
 @functools.partial(jax.jit, static_argnames=("num_segments",))
-def chi2_feedback_all(f_pred, f_true, s_soft, seg_ids, num_segments):
+def _chi2_all_single(f_pred, f_true, s_soft, seg_ids, num_segments):
+    onehot = (seg_ids[:, None] == jnp.arange(num_segments)[None, :]).astype(jnp.float32)
+    return _chi2_seg_local(f_pred, f_true, s_soft, onehot)
+
+
+@functools.partial(jax.jit, static_argnames=("num_segments", "mesh", "axis"))
+def _chi2_all_mesh(f_pred, f_true, s_soft, seg_ids, num_segments, mesh, axis):
+    onehot = (seg_ids[:, None] == jnp.arange(num_segments)[None, :]).astype(jnp.float32)
+    return plane_sharded.chi2_all_sharded(
+        f_pred, f_true, s_soft, onehot, mesh, axis, _chi2_seg_local
+    )
+
+
+def chi2_feedback_all(f_pred, f_true, s_soft, seg_ids, num_segments, *, mesh=None, axis="plane"):
     """Cluster-segmented feedback: every member of every cluster in one
     launch. ``seg_ids`` maps each row to its cluster slot in [0,
-    num_segments); returns (g (M,), seg_sum (num_segments,))."""
-    onehot = (seg_ids[:, None] == jnp.arange(num_segments)[None, :]).astype(jnp.float32)
-    if _use_pallas():
-        return _chi2_seg_kernel(f_pred, f_true, s_soft, onehot, interpret=not _on_tpu())
-    return ref.chi2_feedback_segmented_ref(f_pred, f_true, s_soft, onehot)
+    num_segments); returns (g (M,), seg_sum (num_segments,)). With a plane
+    mesh, member rows shard over ``axis`` and segment sums psum."""
+    if _mesh_active(mesh, axis):
+        M = f_pred.shape[0]
+        f_pred = _to_mesh_rows(mesh, axis, f_pred)
+        f_true = _to_mesh_rows(mesh, axis, f_true)
+        s_soft = _to_mesh_rows(mesh, axis, s_soft)
+        # padded members get segment -1: a one-hot row of zeros, so they
+        # never contribute to any cluster's sum
+        seg_ids = _to_mesh_rows(mesh, axis, jnp.asarray(seg_ids, jnp.int32), fill=-1)
+        g, seg = _chi2_all_mesh(
+            f_pred, f_true, s_soft, seg_ids, num_segments, mesh=mesh, axis=axis
+        )
+        return g[:M], seg
+    return _chi2_all_single(f_pred, f_true, s_soft, seg_ids, num_segments)

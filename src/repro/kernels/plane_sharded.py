@@ -1,0 +1,136 @@
+"""Row-sharded execution of the batched plane kernels (fleet-scale path).
+
+When the parameter plane shards its ``(capacity, dim)`` row store over a
+``plane`` mesh axis, the batched coordination kernels must consume sharded
+operands without gathering fleet state onto one device. Each wrapper here
+runs the single-device kernel body (Pallas on TPU, jnp oracle elsewhere)
+inside ``shard_map`` on the *local* row shard and stitches the global
+answer with one collective:
+
+  * ``l1_pairwise_sharded`` — query rows shard over ``plane``; every shard
+    scores its rows against the (replicated) centers. No reduction: the
+    (M, C) output is row-sharded and reassembles on exit.
+  * ``assign_lerp_sharded`` — center rows shard over ``plane``; local
+    distance vectors ``all_gather`` into the full (C,) vector, the argmin
+    is computed redundantly on every shard, and the winning center row is
+    recovered with a one-hot ``psum`` (only its owner contributes), so the
+    blend never moves the whole center matrix.
+  * ``chi2_all_sharded`` — member rows shard over ``plane``; per-cluster
+    segment sums are partial per shard and ``psum`` into the global sums.
+
+Per-row arithmetic (distances, feedback statistics, the blended row) is
+bitwise-identical to the single-device kernels — each row's reduction runs
+unchanged on whichever shard owns it — so server *decisions* (assignments,
+merges, broadcasts) are trajectory-identical under sharding. Only the
+cross-shard ``psum`` of segment sums may differ from sequential
+accumulation in the last ulp, and that value feeds reporting, not control
+flow.
+
+Padding and placement are owned by the dispatch layer (``ops._to_mesh_rows``
+pads row counts up to a shard multiple and device_puts the operand with the
+row sharding; ``ops._to_mesh`` replicates the small operands): the wrappers
+here assume shard-divisible inputs and handle only the *masking* —
+padded center rows go to ``+inf`` distance before any argmin
+(``valid_rows``), padded member rows carry an all-zero segment one-hot
+(segment id -1) — while the dispatch slices padded query rows off the
+output. Meshes with an extra ``model`` axis replicate these kernels'
+operands over it (the plane may still *store* ``dim`` sharded; shard_map
+reshards on entry).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+try:  # stable path in newer jax; experimental in the pinned 0.4.x
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+
+def l1_pairwise_sharded(
+    xs: jax.Array,  # (M_padded, N) query rows, shard-divisible
+    centers: jax.Array,  # (C, N) replicated
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    local_fn: Callable[[jax.Array, jax.Array], jax.Array],
+) -> jax.Array:
+    """(M_padded, C) pairwise L1 with M sharded over ``axis``; the caller
+    slices the padded query rows off."""
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(None, None)),
+        out_specs=P(axis, None),
+        check_rep=False,
+    )(xs, centers)
+
+
+def assign_lerp_sharded(
+    u: jax.Array,  # (N,) arriving upload, replicated
+    centers: jax.Array,  # (C_padded, N) center rows, sharded over ``axis``
+    beta: float,
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    local_dist_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    valid_rows: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Sharded fused Eq. 1 argmin + blend: (dists (C,), idx (), blended (N,)).
+
+    ``valid_rows`` is the true center count; the shard-padding rows above
+    it are masked to ``+inf`` so they can never win the argmin."""
+    C = valid_rows if valid_rows is not None else centers.shape[0]
+    cp = centers
+
+    def body(u_full, c_local):
+        rows_local = c_local.shape[0]
+        row0 = jax.lax.axis_index(axis) * rows_local
+        d_local = local_dist_fn(u_full, c_local)
+        gids = row0 + jnp.arange(rows_local)
+        d_local = jnp.where(gids < C, d_local, jnp.inf)  # mask padded rows
+        d_full = jax.lax.all_gather(d_local, axis).reshape(-1)
+        idx = jnp.argmin(d_full).astype(jnp.int32)
+        # one-hot cross-shard row fetch: only the owner contributes nonzero
+        li = jnp.clip(idx - row0, 0, rows_local - 1)
+        row = jax.lax.dynamic_index_in_dim(c_local, li, 0, keepdims=False)
+        owned = (idx >= row0) & (idx < row0 + rows_local)
+        row = jax.lax.psum(jnp.where(owned, row, 0.0), axis)
+        blended = (1.0 - beta) * row.astype(jnp.float32) + beta * u_full.astype(jnp.float32)
+        return d_full, idx, blended
+
+    d_full, idx, blended = shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(None), P(axis, None)),
+        out_specs=(P(None), P(), P(None)),
+        check_rep=False,
+    )(u, cp)
+    return d_full[:C], idx, blended
+
+
+def chi2_all_sharded(
+    f_pred: jax.Array,  # (M_padded, J) member rows, sharded over ``axis``
+    f_true: jax.Array,  # (M_padded, J)
+    s_soft: jax.Array,  # (M_padded, J)
+    seg_onehot: jax.Array,  # (M_padded, S) membership one-hot; zero rows for padding
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    local_fn: Callable[..., tuple[jax.Array, jax.Array]],
+) -> tuple[jax.Array, jax.Array]:
+    """Sharded segmented feedback: (g (M_padded,), seg_sum (S,) psum'd
+    globally); the caller slices the padded member rows off ``g``."""
+
+    def body(fp_l, ft_l, ss_l, oh_l):
+        g_local, seg_local = local_fn(fp_l, ft_l, ss_l, oh_l)
+        return g_local, jax.lax.psum(seg_local, axis)
+
+    return shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(axis, None),) * 4,
+        out_specs=(P(axis), P(None)),
+        check_rep=False,
+    )(f_pred, f_true, s_soft, seg_onehot)

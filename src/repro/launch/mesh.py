@@ -8,8 +8,16 @@ Single pod: (16, 16) = 256 chips, axes (data, model).
 Multi-pod:  (2, 16, 16) = 512 chips, axes (pod, data, model) — the pod axis
 is pure data parallelism across pods (or, in EchoPFL-over-pods mode, one FL
 client per pod slice).
+
+Plane mesh: the server's parameter plane (core/plane.py) shards its
+(capacity, dim) row store over a dedicated "plane" axis (rows = cluster
+centers / anchors / per-client last uploads) and optionally "model" (the
+flat parameter dim). Built by :func:`make_plane_mesh`; selected at runtime
+by the ``REPRO_PLANE_MESH`` env knob via :func:`plane_mesh_from_env`.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 
@@ -29,6 +37,39 @@ def make_smoke_mesh() -> jax.sharding.Mesh:
     """1-device mesh with the production axis names — smoke tests and the
     quickstart use it so the same shardings lower everywhere."""
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_plane_mesh(row_shards: int | None = None, *, dim_shards: int = 1) -> jax.sharding.Mesh:
+    """Mesh for the sharded parameter plane: axes ("plane",) or, when
+    ``dim_shards > 1``, ("plane", "model"). Rows (fleet state: centers,
+    anchors, per-client last uploads) spread over "plane"; the flat
+    parameter dim may additionally spread over "model" for models whose
+    single row outgrows one device."""
+    n = len(jax.devices())
+    if dim_shards < 1 or n % dim_shards != 0:
+        raise ValueError(f"dim_shards {dim_shards} must divide device count {n}")
+    if row_shards is None:
+        row_shards = n // dim_shards
+    if dim_shards == 1:
+        return jax.make_mesh((row_shards,), ("plane",))
+    return jax.make_mesh((row_shards, dim_shards), ("plane", "model"))
+
+
+def plane_mesh_from_env() -> jax.sharding.Mesh | None:
+    """Parse ``REPRO_PLANE_MESH``: unset/""/"0"/"off" -> None (single-device
+    plane, the default); "auto" -> all local devices on the "plane" axis;
+    "R" -> exactly R row shards (so "1" is a 1-device mesh, not auto);
+    "RxM" -> R row shards x M dim shards."""
+    spec = os.environ.get("REPRO_PLANE_MESH", "").strip().lower()
+    if spec in ("", "0", "off", "none"):
+        return None
+    if spec == "auto":
+        n = len(jax.devices())
+        return None if n == 1 else make_plane_mesh(n)
+    if "x" in spec:
+        rows, dims = (int(p) for p in spec.split("x", 1))
+        return make_plane_mesh(rows, dim_shards=dims)
+    return make_plane_mesh(int(spec))
 
 
 def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

@@ -81,6 +81,63 @@ class TestAllocation:
         plane.lerp_row(row, jnp.full((plane.dim,), 4.0), 0.25)
         np.testing.assert_allclose(np.asarray(plane.row(row)), 1.0)
 
+    def test_recycled_row_never_exposes_previous_tenant(self, tiny_params):
+        """free -> alloc must hand out a zeroed row even though the freed
+        tenant's bytes are still physically in the buffer — through every
+        read path: row(), a fresh rows() gather, and a flushed matrix()."""
+        plane = ParameterPlane(tiny_params, capacity=4)
+        row = plane.alloc(jnp.full((plane.dim,), 7.7))
+        other = plane.alloc(jnp.full((plane.dim,), 1.0))
+        plane.rows((row, other))  # flush: tenant bytes land in the buffer
+        plane.free(row)
+        again = plane.alloc()
+        assert again == row  # LIFO free list recycles the same physical row
+        np.testing.assert_array_equal(np.asarray(plane.row(again)), 0.0)
+        np.testing.assert_array_equal(np.asarray(plane.rows((again, other))[0]), 0.0)
+        np.testing.assert_array_equal(np.asarray(plane.matrix()[again]), 0.0)
+        np.testing.assert_array_equal(np.asarray(plane.row(other)), 1.0)
+
+    def test_grow_preserves_staged_dirty_rows(self, tiny_params):
+        """_grow with a write still staged must not lose it: the dirty map
+        is host-side bookkeeping and survives the buffer doubling."""
+        plane = ParameterPlane(tiny_params, capacity=1)
+        r0 = plane.alloc()
+        vec = jnp.arange(plane.dim, dtype=jnp.float32)
+        plane.write(r0, vec)  # staged, deliberately not flushed
+        r1 = plane.alloc()  # forces _grow while r0 is dirty
+        assert plane.capacity == 2
+        got = plane.rows((r0, r1))
+        np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(vec))
+        np.testing.assert_array_equal(np.asarray(got[1]), 0.0)
+
+
+# ----------------------------------------------------------------- view cache
+class TestViewCache:
+    def test_rows_cache_is_true_lru_hot_set_survives_cold_reads(self, tiny_params):
+        """Regression: eviction used to pick the oldest-*inserted* key, which
+        is typically the hot per-upload center set — a burst of cold
+        one-off reads would evict it every refinement. Hits must refresh
+        recency so the hot set outlives interleaved cold reads."""
+        plane = ParameterPlane(tiny_params, capacity=16)
+        rows = [plane.alloc(jnp.full((plane.dim,), float(i))) for i in range(12)]
+        hot = tuple(rows[:3])
+        plane.rows(hot)  # inserted first (oldest by insertion order)
+        for i in range(3, 12):  # far more cold sets than the cache holds
+            plane.rows((rows[i],))
+            assert (hot, "local") in plane._views, f"hot set evicted by cold read {i}"
+            plane.rows(hot)  # hit: must move the hot set to MRU
+        # the cached hot view still patches correctly after all that churn
+        plane.write(rows[0], jnp.full((plane.dim,), 99.0))
+        np.testing.assert_array_equal(np.asarray(plane.rows(hot)[0]), 99.0)
+
+    def test_cold_reads_still_evict_each_other(self, tiny_params):
+        plane = ParameterPlane(tiny_params, capacity=16)
+        rows = [plane.alloc() for _ in range(10)]
+        for i in range(10):
+            plane.rows((rows[i],))
+        assert len(plane._views) <= 4
+        assert ((rows[9],), "local") in plane._views  # most recent survives
+
 
 # -------------------------------------------------------------------- parity
 def _tree(x, shift=0.0):

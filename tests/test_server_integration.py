@@ -75,6 +75,28 @@ class TestServerProtocol:
             assert k in s
 
 
+class TestSimulatorAccounting:
+    def test_model_bytes_respects_leaf_dtype(self):
+        """Regression: 4 bytes/element was hardcoded, so compressed or
+        quantized payloads (int8, fp16) were billed as if fp32."""
+        params = {
+            "w": jnp.zeros((10, 4), jnp.float32),  # 160 B
+            "q": jnp.zeros((8,), jnp.int8),  # 8 B
+            "h": jnp.zeros((6,), jnp.float16),  # 12 B
+            "scalar": 1.0,  # non-array leaf: 4 B word
+        }
+        assert model_bytes(params) == 160 + 8 + 12 + 4
+
+    def test_run_sync_zero_rounds_returns_zero_round_report(self):
+        """Regression: rounds=0 raised UnboundLocalError on the round
+        counter instead of returning an empty report."""
+        task, clients, init = build_clients("har", 4, seed=0)
+        strat = build_strategy("fedavg", init, clients, seed=0)
+        report = Simulator(clients, strat, seed=0).run_sync(rounds=0)
+        assert report.extra["rounds"] == 0
+        assert report.up_events == 0
+
+
 class TestServerStateAndStaleness:
     def test_staleness_from_broadcast_anchor_when_base_merged_away(self):
         """Regression for the server.py staleness rule: a client whose base
@@ -123,6 +145,44 @@ class TestServerStateAndStaleness:
         d2 = restored.handle_upload(0, vec(3.0), 0, 8, t=100.0)
         assert [(d.client_id, d.version, d.cluster_id, d.reason) for d in d1] == \
                [(d.client_id, d.version, d.cluster_id, d.reason) for d in d2]
+
+    def test_load_state_restores_last_uploads(self):
+        """Regression: last_uploads/_upload_rows were dropped on restore, so
+        an elastically-restarted server ran its dissolve/expand refinement
+        without last-upload geometry until every client re-uploaded."""
+        import jax
+
+        def build():
+            return EchoPFLServer(vec(0.0), num_initial_clusters=2, seed=0,
+                                 refine_every=10**9)
+
+        srv = build()
+        for i in range(8):
+            srv.handle_upload(i % 4, vec((i % 2) * 30.0 + 0.1 * i), 0, 8, t=float(i))
+        tree, meta = srv.state_dict()
+        assert len(meta["upload_clients"]) == 4
+
+        restored = build()
+        restored.load_state(tree, meta)
+        plane = restored.clustering.plane
+        if plane is None:
+            assert set(restored.last_uploads) == set(srv.last_uploads)
+            for cid, up in srv.last_uploads.items():
+                for a, b in zip(jax.tree_util.tree_leaves(up),
+                                jax.tree_util.tree_leaves(restored.last_uploads[cid])):
+                    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        else:
+            assert set(restored._upload_rows) == set(srv._upload_rows)
+            for cid, row in srv._upload_rows.items():
+                np.testing.assert_array_equal(
+                    np.asarray(srv.clustering.plane.row(row)),
+                    np.asarray(plane.row(restored._upload_rows[cid])),
+                )
+        # a second load must not leak plane rows (pre-restore rows freed)
+        before = None if plane is None else plane.num_allocated
+        restored.load_state(tree, meta)
+        if plane is not None:
+            assert restored.clustering.plane.num_allocated == before
 
 
 class TestPlaneBackendParity:
