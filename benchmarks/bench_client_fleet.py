@@ -1,0 +1,146 @@
+"""Client-fleet engine benchmark: loop vs fleet backends (REPRO_CLIENT).
+
+Measures the three client-plane hot paths the fleet engine batches:
+
+  * sync-round wall time — ``run_sync`` rounds where every selected
+    client's local training is one fused vmapped-scan launch instead of
+    O(clients x epochs) jit dispatches,
+  * fleet-eval throughput — the simulator eval tick as one masked-accuracy
+    launch instead of one ``evaluate`` dispatch (plus two host->device
+    copies) per client,
+  * dispatch flatness — fused launches per sync round stay O(1) as the
+    fleet grows (the loop backend issues O(clients) dispatches).
+
+``--json`` writes BENCH_client_fleet.json at the repo root so the perf
+trajectory is tracked across PRs.
+
+Usage:
+    python benchmarks/bench_client_fleet.py [--clients 128] [--rounds 3] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+for p in (os.path.join(REPO_ROOT, "src"), REPO_ROOT):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.common import save_result, table  # noqa: E402
+from repro.fl.experiment import build_clients, build_strategy  # noqa: E402
+from repro.fl.simulator import Simulator  # noqa: E402
+
+
+def _fresh_sim(num_clients: int, backend: str, seed: int = 0) -> Simulator:
+    task, clients, init = build_clients("har", num_clients, seed=seed)
+    strat = build_strategy("fedavg", init, clients, seed=seed)
+    return Simulator(clients, strat, seed=seed, client_backend=backend)
+
+
+def bench_sync_round(num_clients: int, rounds: int) -> dict:
+    out = {}
+    for backend in ("loop", "fleet"):
+        _fresh_sim(num_clients, backend).run_sync(rounds=1)  # compile warmup
+        sim = _fresh_sim(num_clients, backend)
+        t0 = time.perf_counter()
+        sim.run_sync(rounds=rounds)
+        out[backend] = (time.perf_counter() - t0) / rounds
+    out["speedup"] = out["loop"] / out["fleet"]
+    return out
+
+
+def bench_eval_tick(num_clients: int, reps: int = 10) -> dict:
+    out = {}
+    for backend in ("loop", "fleet"):
+        sim = _fresh_sim(num_clients, backend)
+        strat = sim.strategy
+        init = strat.initial_models(sorted(sim.clients))
+        sim._ensure_fleet(next(iter(init.values())))
+        for cid, p in init.items():
+            sim._set_model(sim.clients[cid], p)
+        sim._evaluate(0.0)  # compile warmup
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            sim._evaluate(0.0)
+        out[backend] = num_clients * reps / (time.perf_counter() - t0)  # client-evals/s
+    out["speedup"] = out["fleet"] / out["loop"]
+    return out
+
+
+def bench_dispatch_flatness(sizes: tuple[int, ...], rounds: int = 2) -> list[dict]:
+    """Fused launches per sync round under the fleet backend vs the
+    dispatch count the loop backend would issue for the same round."""
+    rows = []
+    for n in sizes:
+        sim = _fresh_sim(n, "fleet")
+        sim.run_sync(rounds=rounds)
+        epochs = next(iter(sim.clients.values())).local_epochs
+        rows.append({
+            "clients": n,
+            "fleet_launches_per_round": sim._fleet.launches / rounds,
+            "loop_dispatches_per_round": n * epochs + n,  # train epochs + evals
+        })
+    return rows
+
+
+def run(quick: bool = False, clients: int = 128, rounds: int = 3, eval_reps: int = 10,
+        json_out: bool = False) -> dict:
+    if quick:
+        clients, rounds, eval_reps = 32, 2, 4
+    sync = bench_sync_round(clients, rounds)
+    ev = bench_eval_tick(clients, eval_reps)
+    flat = bench_dispatch_flatness(tuple(sorted({32, min(64, clients), clients})))
+
+    print(table(
+        [
+            {"metric": "sync round (s)", "loop": sync["loop"], "fleet": sync["fleet"],
+             "speedup": sync["speedup"]},
+            {"metric": "eval (client-evals/s)", "loop": ev["loop"], "fleet": ev["fleet"],
+             "speedup": ev["speedup"]},
+        ],
+        ["metric", "loop", "fleet", "speedup"],
+        title=f"client fleet @ {clients} clients (har)",
+    ))
+    print(table(
+        flat,
+        ["clients", "fleet_launches_per_round", "loop_dispatches_per_round"],
+        title="dispatch flatness (fused launches per sync round)",
+    ))
+
+    payload = {
+        "clients": clients,
+        "task": "har",
+        "rounds": rounds,
+        "sync_round_s": {"loop": sync["loop"], "fleet": sync["fleet"]},
+        "sync_round_speedup": sync["speedup"],
+        "eval_client_evals_per_s": {"loop": ev["loop"], "fleet": ev["fleet"]},
+        "eval_speedup": ev["speedup"],
+        "dispatch_flatness": flat,
+    }
+    save_result("client_fleet", payload)
+    if json_out:
+        path = os.path.join(REPO_ROOT, "BENCH_client_fleet.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+        print(f"wrote {path}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", type=int, default=128)
+    ap.add_argument("--rounds", type=int, default=3)
+    ap.add_argument("--eval-reps", type=int, default=10)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", action="store_true", help="write BENCH_client_fleet.json")
+    args = ap.parse_args()
+    run(quick=args.quick, clients=args.clients, rounds=args.rounds,
+        eval_reps=args.eval_reps, json_out=args.json)
+
+
+if __name__ == "__main__":
+    main()

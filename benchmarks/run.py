@@ -13,6 +13,7 @@ import traceback
 from benchmarks import (
     bench_ablations,
     bench_accuracy_time,
+    bench_client_fleet,
     bench_clustering_quality,
     bench_comm_cost,
     bench_comm_peaks,
@@ -36,6 +37,7 @@ BENCHES = {
     "drift_adaptation": bench_drift_adaptation.run, # Fig.18 / Fig.19
     "roofline": bench_roofline.run,                 # deliverable (g)
     "server_throughput": bench_server_throughput.run,  # plane vs pytree hot path
+    "client_fleet": bench_client_fleet.run,         # loop vs fleet client plane
 }
 
 

@@ -21,6 +21,14 @@ echo "=== server/clustering on the pytree storage backend (REPRO_PLANE=pytree) =
 REPRO_PLANE=pytree python -m pytest -q -p no:cacheprovider -m "not slow" \
     tests/test_parameter_plane.py tests/test_clustering.py tests/test_server_integration.py
 
+echo "=== batched client plane (REPRO_CLIENT=fleet) ==="
+# Tier-1's simulator-exercising suites with every Simulator defaulting to
+# the vectorized client-fleet engine (the remaining tier-1 files never
+# construct a Simulator, so REPRO_CLIENT cannot affect them; loop-vs-fleet
+# parity is additionally asserted inside test_client_fleet.py itself).
+REPRO_CLIENT=fleet python -m pytest -q -p no:cacheprovider -m "not slow" \
+    tests/test_client_fleet.py tests/test_server_integration.py
+
 echo "=== sharded plane over 8 simulated devices (REPRO_PLANE_MESH=auto) ==="
 # Forced host-platform device count: the plane/kernel parity suites run with
 # every DynamicClustering defaulting to the row-sharded backend (MIN_ROWS=0

@@ -106,6 +106,16 @@ class FlattenSpec:
         ]
         return jax.tree_util.tree_unflatten(self.treedef, out)
 
+    def unflatten_np(self, vec) -> PyTree:
+        """Host-side unflatten: numpy views over one flat row, zero device
+        dispatches — for fanning a batched device result back out into many
+        per-item protocol pytrees (same layout plan as :meth:`unflatten`)."""
+        out = [
+            vec[off : off + n].reshape(shape).astype(dt, copy=False)
+            for off, n, shape, dt in zip(self.offsets, self.sizes, self.shapes, self.dtypes)
+        ]
+        return jax.tree_util.tree_unflatten(self.treedef, out)
+
 
 _SPEC_CACHE: dict = {}
 

@@ -32,7 +32,10 @@ class SimClient:
     cluster_id: int | None = None
     partial_finetune: bool = False
 
-    def local_train(self, params: PyTree | None = None) -> tuple[PyTree, float]:
+    def local_train(self, params: PyTree | None = None) -> tuple[PyTree, Any]:
+        """One local training round. The returned loss is a *device scalar*
+        (no forced host sync); call ``float()`` on it only if you actually
+        need the value on the host."""
         p = params if params is not None else self.model
         x = jnp.asarray(self.data.x_train)
         y = jnp.asarray(self.data.y_train)

@@ -15,8 +15,20 @@ values are device arrays; only the row *bookkeeping* is host-side) and are
 flushed into the buffer with a single scatter right before any batched
 read (``rows``/``matrix``). Single-row reads are served straight from the
 staging map, so ping-pong write/read of one row never touches the big
-buffer. Pytrees are materialized only at protocol boundaries via the
-cached :class:`~repro.common.pytrees.FlattenSpec` adapters.
+buffer. A batched producer of many rows (e.g. the client fleet refreshing
+its evaluation-view rows after a broadcast) stages its whole ``(n, dim)``
+batch with ONE :meth:`write_rows` call — the matrix is never sliced into
+per-row values; flush applies staged matrices and then the per-row map,
+later writes winning. Pytrees are materialized only at protocol
+boundaries via the cached :class:`~repro.common.pytrees.FlattenSpec`
+adapters.
+
+The plane is a *generic* row store: the clustering layer keeps cluster
+centers, broadcast anchors, and per-client last uploads in one plane, and
+the client-fleet engine (:mod:`repro.fl.fleet`) keeps every simulated
+device's model (plus its evaluation-view rows) in a second, independent
+plane — separate instances are separate row namespaces, so fleet rows can
+never collide with cluster rows.
 
 Row-shard layout (fleet scale)
 ------------------------------
@@ -114,6 +126,11 @@ class ParameterPlane:
         self._free: list[int] = list(range(capacity - 1, -1, -1))
         self._used: set[int] = set()
         self._dirty: dict[int, jax.Array] = {}
+        # bulk-staged (row_ids, {row: position}, (n, dim) matrix) groups
+        # from write_rows; applied in order at flush, before the per-row
+        # dirty map. The position dict keeps single-row reads O(1) while a
+        # fleet-sized batch is staged.
+        self._bulk: list[tuple[list[int], dict[int, int], jax.Array]] = []
         # incrementally-patched gather cache: XLA's row gather is slow on
         # CPU, and the hot path (`assign`) requests the same center-row set
         # every upload while only the aggregated row changes — so a cached
@@ -215,8 +232,52 @@ class ParameterPlane:
             if row in key[0]:
                 self._view_stale[key].add(row)
 
+    def write_rows(self, row_ids: Sequence[int], matrix: jax.Array) -> None:
+        """Stage a batched write: ``matrix[i]`` lands in ``row_ids[i]``.
+
+        The matrix is staged *whole* — one host-side bookkeeping entry, no
+        per-row device slicing — which is what keeps a batched producer of
+        n rows (the fleet's eval-view refresh after a broadcast, a
+        fleet-scale reassign sweep) at O(1) staging cost instead of O(n).
+        Later writes to the same rows (either per-row or a later
+        ``write_rows``) win at flush time. Duplicate ids within one call
+        are rejected: the scatter's resolution order for duplicates is
+        unspecified, so the staged read and the flushed buffer could
+        disagree."""
+        ids = [int(r) for r in row_ids]
+        if len(set(ids)) != len(ids):
+            raise ValueError("write_rows: duplicate row ids in one batch")
+        for r in ids:
+            if r not in self._used:
+                raise KeyError(f"row {r} is not allocated")
+        matrix = jnp.asarray(matrix, self.dtype)
+        if matrix.shape != (len(ids), self.dim):
+            raise ValueError(f"expected ({len(ids)}, {self.dim}) matrix, got {matrix.shape}")
+        # per-row staged values for these rows are older than this matrix
+        for r in ids:
+            self._dirty.pop(r, None)
+        if self._bulk:
+            # keep the staging list bounded at one live matrix: cached-view
+            # reads patch in place without flushing, so without this an
+            # eval-tick producer would grow _bulk by one matrix per tick
+            self.flush()
+        self._bulk.append((ids, {r: i for i, r in enumerate(ids)}, self._localize(matrix)))
+        id_set = set(ids)
+        for key in self._views:
+            hit = id_set.intersection(key[0])
+            if hit:
+                self._view_stale[key].update(hit)
+
     def flush(self) -> None:
+        if not self._dirty and not self._bulk:
+            return
+        for ids, _, mat in self._bulk:
+            self._buf = _scatter_rows(
+                self._buf, jnp.asarray(ids, jnp.int32), self._replicate(mat)
+            )
+        self._bulk = []
         if not self._dirty:
+            self._buf = self._place(self._buf)
             return
         order = sorted(self._dirty)
         if len(order) == 1:
@@ -243,7 +304,23 @@ class ParameterPlane:
             return self._dirty[row]
         if row not in self._used:
             raise KeyError(f"row {row} is not allocated")
+        for _, pos, mat in reversed(self._bulk):  # latest staged matrix wins
+            p = pos.get(row)
+            if p is not None:
+                return self._localize(mat[p])
         return self._localize(self._buf[row])
+
+    def _staged_rows(self, rs: list[int]) -> jax.Array:
+        """(len(rs), dim) current values for ``rs``, preferring ONE gather
+        from the live staged bulk matrix over per-row reads — this is what
+        keeps a view patch after a fleet-wide ``write_rows`` at O(1)
+        dispatches instead of one slice per stale row."""
+        if self._bulk and not any(r in self._dirty for r in rs):
+            _, pos, mat = self._bulk[-1]  # bounded: the only live matrix
+            if all(r in pos for r in rs):
+                sel = jnp.asarray([pos[r] for r in rs], jnp.int32)
+                return self._localize(mat[sel])
+        return jnp.stack([self.row(r) for r in rs])
 
     def rows(self, row_ids: Sequence[int], *, on_mesh: bool = False) -> jax.Array:
         """Stacked ``(len(row_ids), dim)`` view of the requested rows.
@@ -274,8 +351,9 @@ class ParameterPlane:
                     (r,) = stale
                     view = _set_row(view, jnp.int32(ids.index(r)), place(self.row(r)))
                 else:
-                    pos = [ids.index(r) for r in stale]
-                    vals = place(jnp.stack([self.row(r) for r in stale]))
+                    stale_list = list(stale)
+                    pos = [ids.index(r) for r in stale_list]
+                    vals = place(self._staged_rows(stale_list))
                     view = _scatter_rows(view, jnp.asarray(pos, jnp.int32), vals)
                 stale.clear()
             self._views[key] = view

@@ -81,6 +81,11 @@ class EchoPFLServer:
         self.top_k = top_k
         self.refine_every = refine_every
         self.feedback_fn = feedback_fn
+        # optional batched probe: called with [(member, center), ...] and
+        # returns pre-stacked (F_pred, F_true, S_soft) — one launch for the
+        # whole pair list. The simulator's fleet engine installs its
+        # ``feedback_many`` here; when unset, pairs probe via feedback_fn.
+        self.feedback_batch_fn: Callable[[list], tuple] | None = None
         self.local_train_fn = local_train_fn
         self.enable_clustering = enable_clustering
         self.enable_broadcast = enable_broadcast
@@ -227,9 +232,18 @@ class EchoPFLServer:
 
     # ---------------------------------------------------------- refinement
     def _feedback_rows(self, pairs: list) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Stack feedback_fn outputs for (client, center) pairs. The model
-        evaluation is inherently per-client (it runs on the client's own
-        data), but the chi2 x Var statistic is then one kernel launch."""
+        """Stack feedback_fn outputs for (client, center) pairs. With a
+        batched probe installed (``feedback_batch_fn``, e.g. the client
+        fleet engine) the whole pair list is ONE model-evaluation launch;
+        otherwise each pair probes via feedback_fn. Either way the chi2 x
+        Var statistic downstream is one kernel launch."""
+        if self.feedback_batch_fn is not None:
+            f_pred, f_true, s_soft = self.feedback_batch_fn(list(pairs))
+            return (
+                np.asarray(f_pred),
+                np.maximum(np.asarray(f_true), 1e-3),
+                np.asarray(s_soft),
+            )
         rows = [self.feedback_fn(m, center) for m, center in pairs]
         f_pred = np.stack([r[0] for r in rows])
         f_true = np.stack([np.maximum(r[1], 1e-3) for r in rows])
@@ -302,9 +316,14 @@ class EchoPFLServer:
             (m, centers[c2]) for m, home, _ in flagged for c2 in others_of[home]
         ]
         f_pred, f_true, s_soft = self._feedback_rows(pairs)
-        scores = np.asarray(K.chi2_feedback(f_pred, f_true, s_soft)).reshape(
-            len(flagged), len(clusters) - 1
-        )
+        # probe rows shard over the plane mesh once the flagged-member count
+        # crosses mesh_min_rows (the single-device launch stays the default)
+        scores = np.asarray(
+            K.chi2_feedback(
+                f_pred, f_true, s_soft,
+                **self.clustering._kernel_mesh_kwargs(len(pairs)),
+            )
+        ).reshape(len(flagged), len(clusters) - 1)
         moves = 0
         for (m, home, g), row in zip(flagged, scores):
             best_i = int(np.argmin(row))
@@ -405,9 +424,12 @@ class EchoPFLServer:
             f_pred, f_true, s_soft = self._feedback_rows(
                 [(m, centers[c]) for m in members for c in rest]
             )
-            scores = np.asarray(K.chi2_feedback(f_pred, f_true, s_soft)).reshape(
-                len(members), len(rest)
-            )
+            scores = np.asarray(
+                K.chi2_feedback(
+                    f_pred, f_true, s_soft,
+                    **clustering._kernel_mesh_kwargs(len(f_pred)),
+                )
+            ).reshape(len(members), len(rest))
             for m, row in zip(members, scores):
                 best_of[m] = rest[int(np.argmin(row))]
         elif members and plane is not None:

@@ -1,4 +1,5 @@
 from repro.fl.devices import DEVICE_CLASSES, DeviceClass, make_device_fleet
+from repro.fl.fleet import ClientFleet
 from repro.fl.network import NetworkModel
 from repro.fl.simulator import SimReport, Simulator
 
@@ -6,6 +7,7 @@ __all__ = [
     "DEVICE_CLASSES",
     "DeviceClass",
     "make_device_fleet",
+    "ClientFleet",
     "NetworkModel",
     "Simulator",
     "SimReport",

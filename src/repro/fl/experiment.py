@@ -127,6 +127,7 @@ def run_experiment(
     samples_per_client: int = 96,
     local_epochs: int = 5,
     base_round_time: float = 30.0,
+    client_backend: str | None = None,
     **strategy_kw,
 ):
     task, clients, init_params = build_clients(
@@ -139,6 +140,7 @@ def run_experiment(
         clients, strategy,
         network=network or NetworkModel(),
         eval_interval=eval_interval, target_acc=target_acc, seed=seed,
+        client_backend=client_backend,
     )
     report = sim.run(max_time=max_time, rounds=rounds)
     report.extra["task"] = task_name

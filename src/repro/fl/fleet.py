@@ -1,0 +1,331 @@
+"""Device-resident client fleet engine: the *client* side of the simulator
+as batched matrix compute.
+
+PRs 1-2 made the server hot path device-resident (the parameter plane);
+this module does the same for the simulated devices. The seed simulator
+dispatched one ``_sgd_epoch`` jit call per client per epoch, one
+``evaluate`` launch per client per eval tick, and one
+``predict_distributions`` probe per (member, center) feedback pair —
+O(clients) Python-loop dispatches for work that is embarrassingly
+batchable. The fleet engine replaces those loops with three fused
+launches:
+
+* :meth:`ClientFleet.train_cohort` / :meth:`ClientFleet.train_client` —
+  ``jax.vmap`` over clients of a ``lax.scan`` over epochs
+  (:func:`repro.models.mlp.fleet_local_train`). Per-client ``lr`` /
+  ``epochs`` / ``head_only`` are vmapped operands, so heterogeneous epoch
+  budgets and partial fine-tuning stay per-row.
+* :meth:`ClientFleet.evaluate_fleet` — one masked-accuracy launch for the
+  whole fleet per eval tick.
+* :meth:`ClientFleet.feedback_many` — batched ``predict_distributions``
+  emitting ``(pairs, num_classes)`` F/S stacks that feed the server's
+  ``chi2_feedback_all`` kernel directly.
+
+State layout mirrors the server plane: every client's current model is a
+row of a second :class:`~repro.core.plane.ParameterPlane` (a non-cluster
+row namespace), and each client additionally owns an *evaluation-view* row
+holding the last parameters it was evaluated with — refreshed only when
+the strategy hands a different object, so the per-tick eval gather is the
+plane's incrementally-patched cached view (O(changed rows), not O(fleet)).
+Per-client train/test data pads into ``(clients, n, dim)`` device tensors
+with validity masks; ragged datasets are handled by masking, which keeps
+padded rows out of losses, accuracies, and histograms. A replaced
+``SimClient.data`` (distribution drift) is detected by identity check at
+every launch and triggers a tensor rebuild, matching the loop backend's
+live-read semantics.
+
+Cohort launches pad to the next power of two (extra rows get a zero epoch
+budget), so the jit cache holds O(log clients) entries instead of one per
+cohort size, and the dispatch count stays flat as the fleet grows.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytrees import FlattenSpec, flatten_spec
+from repro.core.plane import ParameterPlane
+from repro.models import mlp
+
+PyTree = Any
+
+
+def _pow2(n: int) -> int:
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "max_epochs"))
+def _train_launch(mat, x_all, y_all, mask_all, gather, lr, epochs, head, *,
+                  spec: FlattenSpec, max_epochs: int):
+    # the cohort's data-row gather happens inside the launch, fused with the
+    # training compute — no materialized (P, n, dim) copies per round
+    x, y, mask = x_all[gather], y_all[gather], mask_all[gather]
+    params_b = jax.vmap(spec._unflatten)(mat)
+    new_b, losses = mlp.fleet_local_train(
+        params_b, x, y, mask, lr, epochs, head, max_epochs=max_epochs
+    )
+    return jax.vmap(spec._flatten)(new_b), losses
+
+
+@functools.partial(jax.jit, static_argnames=("spec",))
+def _eval_launch(mat, x, y, mask, *, spec: FlattenSpec):
+    return mlp.fleet_evaluate(jax.vmap(spec._unflatten)(mat), x, y, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("spec", "num_classes"))
+def _feedback_launch(mat, x_all, mask_all, gather, *, spec: FlattenSpec, num_classes: int):
+    x, mask = x_all[gather], mask_all[gather]
+    return mlp.fleet_predict_distributions(
+        jax.vmap(spec._unflatten)(mat), x, mask, num_classes
+    )
+
+
+def _pad_rows(arr: np.ndarray, n: int) -> np.ndarray:
+    if len(arr) == n:
+        return arr
+    return np.concatenate([arr, np.zeros((n - len(arr),) + arr.shape[1:], arr.dtype)])
+
+
+class ClientFleet:
+    """Batched state + fused launches for a list of :class:`SimClient`s."""
+
+    def __init__(self, clients: Sequence[Any], template: PyTree):
+        self.clients = list(clients)
+        self.ids = [c.client_id for c in self.clients]
+        self.index = {cid: i for i, cid in enumerate(self.ids)}
+        K = len(self.clients)
+        self.num_classes = self.clients[0].num_classes
+        self.spec = flatten_spec(template)
+        self.plane = ParameterPlane(template, capacity=2 * K)
+        self._model_row = [self.plane.alloc() for _ in range(K)]
+        self._eval_row = [self.plane.alloc() for _ in range(K)]
+        self._has_model = [False] * K
+        # monotonic per-client model-row version (bumped on every write), so
+        # the eval rows can tell whether a mirrored model row went stale
+        self._model_ver = [0] * K
+        # what each eval row currently holds: the exact params object last
+        # written (identity-compared), or a ("model", version) tag when it
+        # mirrors the client's own model row
+        self._eval_src: list[Any] = [object()] * K
+
+        self._build_data()
+        # pytree -> flat-vector memo, keyed by object identity (the held
+        # reference keeps the id stable). Strategies hand the *same* center
+        # object to every member, so a broadcast costs one flatten total.
+        self._flat_cache: dict[int, tuple[Any, jax.Array]] = {}
+        self.launches = 0  # fused launches issued (bench introspection)
+
+    # ----------------------------------------------------------- data plane
+    def _build_data(self) -> None:
+        """(Re)pad every client's train/test split into the batched device
+        tensors + validity masks, and cache the true label histograms."""
+        self._data_ref = [c.data for c in self.clients]
+        n_tr = max(len(c.data.y_train) for c in self.clients)
+        n_te = max(len(c.data.y_test) for c in self.clients)
+        self.x_train = jnp.asarray(
+            np.stack([_pad_rows(np.asarray(c.data.x_train, np.float32), n_tr) for c in self.clients])
+        )
+        self.y_train = jnp.asarray(
+            np.stack([_pad_rows(np.asarray(c.data.y_train, np.int32), n_tr) for c in self.clients])
+        )
+        self.train_mask = jnp.asarray(
+            np.stack([
+                _pad_rows(np.ones(len(c.data.y_train), np.float32), n_tr) for c in self.clients
+            ])
+        )
+        self.x_test = jnp.asarray(
+            np.stack([_pad_rows(np.asarray(c.data.x_test, np.float32), n_te) for c in self.clients])
+        )
+        self.y_test = jnp.asarray(
+            np.stack([_pad_rows(np.asarray(c.data.y_test, np.int32), n_te) for c in self.clients])
+        )
+        self.test_mask = jnp.asarray(
+            np.stack([
+                _pad_rows(np.ones(len(c.data.y_test), np.float32), n_te) for c in self.clients
+            ])
+        )
+        self.f_true = np.stack([
+            c.data.label_histogram(self.num_classes).astype(np.float32) for c in self.clients
+        ])
+
+    def _sync_data(self) -> None:
+        """Match the loop backend's live-read semantics: a replaced
+        ``SimClient.data`` (distribution drift, Fig. 18 style) triggers a
+        rebuild of the batched tensors. The steady-state cost is K identity
+        checks per launch; the rebuild itself only runs on an actual swap."""
+        for c, ref in zip(self.clients, self._data_ref):
+            if c.data is not ref:
+                self._build_data()
+                return
+
+    # ------------------------------------------------------------ adapters
+    def _vec_of(self, params: PyTree) -> jax.Array:
+        if isinstance(params, jax.Array) and params.ndim == 1:
+            return params
+        key = id(params)
+        hit = self._flat_cache.pop(key, None)  # pop + reinsert: LRU on hit
+        if hit is not None and hit[0] is params:
+            self._flat_cache[key] = hit
+            return hit[1]
+        vec = self.spec.flatten(params)
+        if len(self._flat_cache) >= 512:  # evict the LRU entry only — the
+            # hot working set (live centers, the global model) stays cached
+            self._flat_cache.pop(next(iter(self._flat_cache)))
+        self._flat_cache[key] = (params, vec)
+        return vec
+
+    def to_pytree_np(self, vec: np.ndarray) -> PyTree:
+        """Host-side unflatten (numpy views, zero device dispatches) for
+        fanning a batched training result back out into per-client pytrees."""
+        return self.spec.unflatten_np(vec)
+
+    # ------------------------------------------------------------- models
+    def set_model(self, cid, params: PyTree) -> None:
+        i = self.index[cid]
+        self.plane.write(self._model_row[i], self._vec_of(params))
+        self._has_model[i] = True
+        self._model_ver[i] += 1
+
+    def model_vec(self, cid) -> jax.Array:
+        i = self.index[cid]
+        if not self._has_model[i]:
+            # the loop path (SimClient.local_train with model=None) fails
+            # loudly too — never train from the zero-seeded row silently
+            raise ValueError(f"client {cid} has no model set")
+        return self.plane.row(self._model_row[i])
+
+    # ------------------------------------------------------------ training
+    def _train_specs(self, cids: Sequence[Any]):
+        cs = [self.clients[self.index[c]] for c in cids]
+        lr = np.asarray([c.lr for c in cs], np.float32)
+        epochs = np.asarray([c.local_epochs for c in cs], np.int32)
+        head = np.asarray([1.0 if c.partial_finetune else 0.0 for c in cs], np.float32)
+        return lr, epochs, head
+
+    def _train(self, idx: np.ndarray, mat: jax.Array, lr, epochs, head):
+        """Shared padded launch: returns device (S, dim) vecs + (S,) losses."""
+        self._sync_data()
+        S = len(idx)
+        P = _pow2(S)
+        if P != S:
+            idx = np.concatenate([idx, np.full(P - S, idx[0])])
+            mat = jnp.concatenate([mat, jnp.broadcast_to(mat[:1], (P - S, mat.shape[1]))])
+            lr = np.concatenate([lr, np.zeros(P - S, np.float32)])
+            epochs = np.concatenate([epochs, np.zeros(P - S, np.int32)])  # padded rows train 0 epochs
+            head = np.concatenate([head, np.zeros(P - S, np.float32)])
+        max_epochs = int(epochs.max()) if len(epochs) else 0
+        self.launches += 1
+        vecs, losses = _train_launch(
+            mat,
+            self.x_train,
+            self.y_train,
+            self.train_mask,
+            jnp.asarray(idx),
+            jnp.asarray(lr),
+            jnp.asarray(epochs),
+            jnp.asarray(head),
+            spec=self.spec,
+            max_epochs=max_epochs,
+        )
+        return vecs[:S], losses[:S]
+
+    def train_cohort(
+        self, cids: Sequence[Any], params_list: Sequence[PyTree]
+    ) -> tuple[list[PyTree], np.ndarray]:
+        """One fused launch of local training for a selected cohort (the
+        sync-round path). ``params_list[i]`` is what client ``cids[i]``
+        trains from; ``None`` falls back to the client's own model row
+        (the same contract as ``SimClient.local_train(None)``). Returns
+        (per-client trained pytrees, losses)."""
+        idx = np.asarray([self.index[c] for c in cids])
+        mat = jnp.stack([
+            self.model_vec(c) if p is None else self._vec_of(p)
+            for c, p in zip(cids, params_list)
+        ])
+        vecs, losses = self._train(idx, mat, *self._train_specs(cids))
+        vecs_np, losses_np = jax.device_get((vecs, losses))
+        # the per-client leaves are views over this one base matrix: freeze
+        # it so an (unsupported) in-place mutation raises, exactly like the
+        # immutable jax-array leaves the loop path hands out
+        vecs_np = np.asarray(vecs_np)
+        vecs_np.flags.writeable = False
+        return [self.to_pytree_np(v) for v in vecs_np], losses_np
+
+    def train_client(self, cid) -> tuple[PyTree, jax.Array]:
+        """Row-sliced single-client path (the async event loop): trains from
+        this client's model row, writes the new row back, and returns the
+        updated params as a pytree plus the device-scalar loss."""
+        i = self.index[cid]
+        mat = self.model_vec(cid)[None, :]
+        vecs, losses = self._train(np.asarray([i]), mat, *self._train_specs([cid]))
+        vec = vecs[0]
+        self.plane.write(self._model_row[i], vec)
+        self._has_model[i] = True
+        self._model_ver[i] += 1
+        return self.spec.unflatten(vec), losses[0]
+
+    # ---------------------------------------------------------- evaluation
+    def evaluate_fleet(self, params_list: Sequence[PyTree | None]) -> np.ndarray:
+        """(K,) accuracies in fleet order, one launch. ``params_list[i]`` is
+        the pytree client ``i`` evaluates (identity-cached into its eval
+        row); ``None`` falls back to the client's own model row — or 0.0
+        when no model was ever set, matching the per-client loop path."""
+        self._sync_data()
+        plane = self.plane
+        zero = np.zeros(len(self.ids), bool)
+        refresh_rows: list[int] = []
+        refresh_vecs: list[jax.Array] = []
+        for i, obj in enumerate(params_list):
+            if obj is None:
+                if not self._has_model[i]:
+                    zero[i] = True
+                    continue
+                tag = ("model", self._model_ver[i])
+                src = self._eval_src[i]
+                if not (isinstance(src, tuple) and src == tag):  # mirror stale
+                    plane.copy_row(self._model_row[i], self._eval_row[i])
+                    self._eval_src[i] = tag
+            elif self._eval_src[i] is not obj:
+                refresh_rows.append(self._eval_row[i])
+                refresh_vecs.append(self._vec_of(obj))
+                self._eval_src[i] = obj
+        if refresh_rows:
+            # one bulk staging entry for the whole refresh (a broadcast can
+            # change most of the fleet's eval params in one tick)
+            plane.write_rows(refresh_rows, jnp.stack(refresh_vecs))
+        mat = plane.rows(tuple(self._eval_row))  # cached view, patched in place
+        self.launches += 1
+        accs = np.asarray(
+            _eval_launch(mat, self.x_test, self.y_test, self.test_mask, spec=self.spec)
+        )
+        if zero.any():
+            accs = np.where(zero, 0.0, accs)
+        return accs
+
+    # ------------------------------------------------------------ feedback
+    def feedback_many(
+        self, pairs: Sequence[tuple[Any, PyTree]]
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched (member, center) feedback probes: one launch emitting the
+        stacked (F_pred, F_true, S_soft) rows the server's segmented chi2
+        kernel consumes — a drop-in for ``EchoPFLServer.feedback_batch_fn``."""
+        self._sync_data()
+        idx = np.asarray([self.index[m] for m, _ in pairs])
+        mat = jnp.stack([self._vec_of(center) for _, center in pairs])
+        M = len(pairs)
+        P = _pow2(M)
+        gather = idx
+        if P != M:
+            gather = np.concatenate([idx, np.full(P - M, idx[0])])
+            mat = jnp.concatenate([mat, jnp.broadcast_to(mat[:1], (P - M, mat.shape[1]))])
+        self.launches += 1
+        f_pred, s_soft = _feedback_launch(
+            mat, self.x_train, self.train_mask, jnp.asarray(gather),
+            spec=self.spec, num_classes=self.num_classes,
+        )
+        f_pred, s_soft = jax.device_get((f_pred[:M], s_soft[:M]))
+        return np.asarray(f_pred), self.f_true[idx], np.asarray(s_soft)

@@ -16,14 +16,23 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import os
 from typing import Any
 
+import jax
 import numpy as np
 
 from repro.core.client import SimClient
 from repro.fl.network import NetworkModel
 
 PyTree = Any
+
+
+def default_client_backend() -> str:
+    """``REPRO_CLIENT`` knob: ``loop`` (per-client dispatches, the seed
+    path — kept for parity) or ``fleet`` (batched launches via
+    :mod:`repro.fl.fleet`)."""
+    return os.environ.get("REPRO_CLIENT", "loop").lower()
 
 
 @dataclasses.dataclass
@@ -67,17 +76,35 @@ class SimReport:
         }
 
 
+_MODEL_BYTES_CACHE: dict = {}
+
+
 def model_bytes(params: PyTree) -> int:
     """Wire size of one model payload: sum of per-leaf nbytes. Leaf dtype is
     honored — a compressed/quantized payload (int8, fp16) is not 4 bytes per
-    element; non-array leaves (python scalars) count as 4-byte words."""
-    import jax
+    element; non-array leaves (python scalars) count as 4-byte words.
 
-    total = 0
-    for x in jax.tree_util.tree_leaves(params):
-        dtype = getattr(x, "dtype", None)
-        itemsize = dtype.itemsize if dtype is not None else 4
-        total += int(np.prod(getattr(x, "shape", ()))) * itemsize
+    Memoized by (treedef, leaf shapes/dtypes): both simulator loops bill
+    every uplink/downlink event through this function with the same handful
+    of model structures, so repeat events pay one tree walk and a hash
+    lookup instead of the per-leaf arithmetic. Deliberately NOT keyed by
+    object identity — that would pin payload pytrees (and their device
+    buffers) in a module-global for the process lifetime."""
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    key = (
+        treedef,
+        tuple((getattr(x, "shape", None), getattr(x, "dtype", None)) for x in leaves),
+    )
+    total = _MODEL_BYTES_CACHE.get(key)
+    if total is None:
+        total = 0
+        for x in leaves:
+            dtype = getattr(x, "dtype", None)
+            itemsize = dtype.itemsize if dtype is not None else 4
+            total += int(np.prod(getattr(x, "shape", ()))) * itemsize
+        if len(_MODEL_BYTES_CACHE) > 64:
+            _MODEL_BYTES_CACHE.clear()
+        _MODEL_BYTES_CACHE[key] = total
     return total
 
 
@@ -92,6 +119,7 @@ class Simulator:
         target_acc: float = 0.85,
         seed: int = 0,
         churn: dict[Any, list[tuple[float, float]]] | None = None,
+        client_backend: str | None = None,
     ):
         self.clients = {c.client_id: c for c in clients}
         self.strategy = strategy
@@ -101,6 +129,12 @@ class Simulator:
         self.rng = np.random.default_rng(seed)
         self.curve: list[tuple[float, float]] = []
         self._counter = itertools.count()
+        self.client_backend = (client_backend or default_client_backend()).lower()
+        if self.client_backend not in ("loop", "fleet"):
+            raise ValueError(
+                f"REPRO_CLIENT backend must be loop|fleet, got {self.client_backend}"
+            )
+        self._fleet = None  # built lazily from the first initial model
         # elastic membership: {client: [(t_offline, t_back), ...]} — a device
         # that would start local training inside an offline window instead
         # resumes when it returns (dropout/rejoin; the async protocol absorbs
@@ -115,12 +149,62 @@ class Simulator:
                 return t_on
         return t
 
+    # -------------------------------------------------------- fleet engine
+    def _ensure_fleet(self, template: PyTree) -> None:
+        """Build the batched client engine (REPRO_CLIENT=fleet) once the
+        model structure is known, and hand the strategy its batched
+        feedback probe if it accepts one. A hook installed by a *previous*
+        simulator's fleet (strategy objects can be reused across runs) is
+        always replaced — or cleared on the loop backend — so probes never
+        route through a dead fleet's clients/data."""
+        strat = self.strategy
+        current = getattr(strat, "feedback_batch_fn", "missing")
+        fleet_hook = current is not None and current != "missing" and getattr(
+            current, "_fleet_hook", False
+        )
+        if self.client_backend != "fleet":
+            if fleet_hook:
+                strat.feedback_batch_fn = None
+            return
+        if self._fleet is None:
+            from repro.fl.fleet import ClientFleet
+
+            self._fleet = ClientFleet(list(self.clients.values()), template)
+        if current == "missing":
+            return
+        # (re)install OUR fleet's hook — on every run start, not just fleet
+        # construction, since another simulator sharing this strategy may
+        # have rebound or cleared it in between. A caller-supplied batch fn
+        # (no _fleet_hook tag) is always left alone.
+        if current is None or (fleet_hook and getattr(current, "_fleet", None) is not self._fleet):
+            fleet = self._fleet
+
+            def hook(pairs):
+                return fleet.feedback_many(pairs)
+
+            hook._fleet_hook = True
+            hook._fleet = fleet
+            strat.feedback_batch_fn = hook
+
+    def _set_model(self, c: SimClient, params: PyTree) -> None:
+        """Install a downlinked model on a client (mirrored into the fleet's
+        model row so the batched paths see it)."""
+        c.model = params
+        if self._fleet is not None:
+            self._fleet.set_model(c.client_id, params)
+
     # ----------------------------------------------------------- evaluation
     def _evaluate(self, t: float) -> float:
         accs = {}
-        for cid, c in self.clients.items():
-            params = self.strategy.model_for(cid)
-            accs[cid] = c.evaluate(params if params is not None else c.model)
+        if self._fleet is not None:
+            # one masked launch for the whole fleet instead of N dispatches
+            params = [self.strategy.model_for(cid) for cid in self._fleet.ids]
+            fleet_accs = self._fleet.evaluate_fleet(params)
+            accs = {cid: float(a) for cid, a in zip(self._fleet.ids, fleet_accs)}
+        else:
+            for cid, c in self.clients.items():
+                params = self.strategy.model_for(cid)
+                accs[cid] = c.evaluate(params if params is not None else c.model)
         mean = float(np.mean(list(accs.values())))
         self.curve.append((t, mean))
         self._last_accs = accs
@@ -164,10 +248,11 @@ class Simulator:
         # initial broadcast of the seed model
         init = strat.initial_models(sorted(self.clients))
         nbytes = model_bytes(next(iter(init.values())))
+        self._ensure_fleet(next(iter(init.values())))
         for cid, params in init.items():
             dl = self.net.download(nbytes, 0.0)
             c = self.clients[cid]
-            c.model = params
+            self._set_model(c, params)
             c.base_version = 0
             push(dl + c.compute_time(), "upload_start", cid)
         if getattr(strat, "tick_interval", None):
@@ -192,7 +277,12 @@ class Simulator:
                     push(t_on + self.clients[cid].compute_time(), "upload_start", cid)
                     continue
                 c = self.clients[cid]
-                new_params, _ = c.local_train()
+                if self._fleet is not None:
+                    # row-sliced fleet path: trains from (and writes back)
+                    # this client's model row; c.model mirrors the result
+                    new_params, _ = self._fleet.train_client(cid)
+                else:
+                    new_params, _ = c.local_train()
                 c.model = new_params
                 dur = self.net.upload(model_bytes(new_params), t)
                 push(t + dur, "upload_done", (cid, new_params, c.base_version))
@@ -212,7 +302,7 @@ class Simulator:
             elif kind == "downlink":
                 dl = payload
                 c = self.clients[dl.client_id]
-                c.model = dl.params
+                self._set_model(c, dl.params)
                 c.base_version = dl.version
                 c.cluster_id = dl.cluster_id
                 if hasattr(strat, "clustering") and dl.cluster_id in strat.clustering.clusters:
@@ -239,9 +329,10 @@ class Simulator:
         strat = self.strategy
         init = strat.initial_models(sorted(self.clients))
         nbytes = model_bytes(next(iter(init.values())))
+        self._ensure_fleet(next(iter(init.values())))
         t = 0.0
         for cid, params in init.items():
-            self.clients[cid].model = params
+            self._set_model(self.clients[cid], params)
         t += nbytes / self.net.downstream_bps
         self.net.download(nbytes * len(init), 0.0)
 
@@ -257,9 +348,20 @@ class Simulator:
                     continue
                 finish_times = {}
                 uploads = {}
+                if self._fleet is not None:
+                    # the whole cohort's local training is ONE fused launch;
+                    # per-client timing/accounting below stays loop-ordered
+                    # so the RNG draws and byte counts match the loop path
+                    trained, _ = self._fleet.train_cohort(
+                        selected, [strat.model_for(cid) for cid in selected]
+                    )
+                    trained = dict(zip(selected, trained))
                 for cid in selected:
                     c = self.clients[cid]
-                    params, _ = c.local_train(strat.model_for(cid))
+                    if self._fleet is not None:
+                        params = trained[cid]
+                    else:
+                        params, _ = c.local_train(strat.model_for(cid))
                     dur = c.compute_time()
                     up_dur = self.net.upload(model_bytes(params), t0 + dur)
                     finish_times[cid] = t0 + dur + up_dur
@@ -270,7 +372,7 @@ class Simulator:
                 for dl in downlinks:
                     dl_time = max(dl_time, self.net.download(model_bytes(dl.params), barrier))
                     c = self.clients[dl.client_id]
-                    c.model = dl.params
+                    self._set_model(c, dl.params)
                     c.base_version = dl.version
                 groups_time[group_id] = barrier + dl_time
             t = max(groups_time.values())

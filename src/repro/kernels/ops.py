@@ -186,11 +186,37 @@ def merge_attention(v_main, v_aux, v_trained):
     return ref.merge_attention_ref(v_main, v_aux, v_trained)[0]
 
 
-@jax.jit
-def chi2_feedback(f_pred, f_true, s_soft):
+def _chi2_local(f_pred, f_true, s_soft):
     if _use_pallas():
         return _chi2_kernel(f_pred, f_true, s_soft, interpret=not _on_tpu())
     return ref.chi2_feedback_ref(f_pred, f_true, s_soft)
+
+
+@jax.jit
+def _chi2_single(f_pred, f_true, s_soft):
+    return _chi2_local(f_pred, f_true, s_soft)
+
+
+@functools.partial(jax.jit, static_argnames=("mesh", "axis"))
+def _chi2_mesh(f_pred, f_true, s_soft, mesh, axis):
+    return plane_sharded.chi2_rows_sharded(f_pred, f_true, s_soft, mesh, axis, _chi2_local)
+
+
+def chi2_feedback(f_pred, f_true, s_soft, *, mesh=None, axis="plane"):
+    """Per-row Eq. 2/3 feedback statistic, (M, J) -> (M,) in one launch.
+
+    With a plane mesh, the M probe rows shard over ``axis`` and every shard
+    scores only its rows (per-row arithmetic is shard-local, so scores are
+    bitwise-identical to the single-device launch). This is the
+    dissolve/expand probe path: it goes sharded only when the flagged-pair
+    count crosses the plane's ``mesh_min_rows`` threshold."""
+    if _mesh_active(mesh, axis):
+        M = f_pred.shape[0]
+        f_pred = _to_mesh_rows(mesh, axis, jnp.asarray(f_pred))
+        f_true = _to_mesh_rows(mesh, axis, jnp.asarray(f_true), fill=1)
+        s_soft = _to_mesh_rows(mesh, axis, jnp.asarray(s_soft))
+        return _chi2_mesh(f_pred, f_true, s_soft, mesh=mesh, axis=axis)[:M]
+    return _chi2_single(f_pred, f_true, s_soft)
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,8 @@ answer with one collective:
     blend never moves the whole center matrix.
   * ``chi2_all_sharded`` — member rows shard over ``plane``; per-cluster
     segment sums are partial per shard and ``psum`` into the global sums.
+  * ``chi2_rows_sharded`` — the dissolve/expand probe matrix: rows shard
+    over ``plane`` with no reduction (per-row scores reassemble on exit).
 
 Per-row arithmetic (distances, feedback statistics, the blended row) is
 bitwise-identical to the single-device kernels — each row's reduction runs
@@ -109,6 +111,27 @@ def assign_lerp_sharded(
         check_rep=False,
     )(u, cp)
     return d_full[:C], idx, blended
+
+
+def chi2_rows_sharded(
+    f_pred: jax.Array,  # (M_padded, J) probe rows, sharded over ``axis``
+    f_true: jax.Array,  # (M_padded, J)
+    s_soft: jax.Array,  # (M_padded, J)
+    mesh: jax.sharding.Mesh,
+    axis: str,
+    local_fn: Callable[[jax.Array, jax.Array, jax.Array], jax.Array],
+) -> jax.Array:
+    """Sharded per-row feedback scores (the dissolve/expand probe matrix):
+    every shard scores only its own probe rows — no reduction at all, the
+    (M_padded,) output is row-sharded and reassembles on exit; the caller
+    slices the padded rows off."""
+    return shard_map(
+        local_fn,
+        mesh=mesh,
+        in_specs=(P(axis, None),) * 3,
+        out_specs=P(axis),
+        check_rep=False,
+    )(f_pred, f_true, s_soft)
 
 
 def chi2_all_sharded(

@@ -3,6 +3,22 @@
 These are the models the federated *protocol* experiments train on CPU;
 everything is jit-cached per task config so 100+ simulated clients share
 compiled functions.
+
+Two call planes:
+
+* per-client entry points (``local_train``, ``evaluate``,
+  ``predict_distributions``) — one dispatch per client, used by the
+  event-driven simulator's ``loop`` backend and by direct callers.
+* fleet entry points (``fleet_local_train``, ``fleet_evaluate``,
+  ``fleet_predict_distributions``) — ``jax.vmap`` over a ``(clients, ...)``
+  batch with per-sample validity masks, so ragged client datasets pad to a
+  common length and the whole simulated fleet trains/evaluates in ONE
+  launch (see :mod:`repro.fl.fleet`). Per-client ``lr``/``epochs``/
+  ``head_only`` ride along as vmapped operands: heterogeneous epoch counts
+  are realized by masking scan steps past a client's budget, and partial
+  fine-tuning (Sec. 4.3.3) by zero-scaling the non-head gradients — so the
+  per-row arithmetic matches the per-client path exactly (bitwise on CPU
+  for unpadded rows).
 """
 from __future__ import annotations
 
@@ -35,6 +51,17 @@ def mlp_forward(params: PyTree, x: jax.Array) -> jax.Array:
     return x @ params[-1]["w"] + params[-1]["b"]
 
 
+def _masked_nll(params: PyTree, x: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    """Mean NLL over the valid samples. With an all-ones mask this reduces
+    to ``-mean(logp[y])`` exactly (the padded terms are hard zeros), which
+    is what keeps the fleet path numerically aligned with ``_sgd_epoch``."""
+    logits = mlp_forward(params, x)
+    logp = jax.nn.log_softmax(logits)
+    per = jnp.take_along_axis(logp, y[:, None], axis=1)[:, 0]
+    per = jnp.where(mask > 0, per, 0.0)
+    return -(jnp.sum(per) / jnp.maximum(jnp.sum(mask), 1.0))
+
+
 @functools.partial(jax.jit, static_argnames=("head_only",))
 def _sgd_epoch(params, x, y, lr, head_only: bool = False):
     def loss_fn(p):
@@ -58,17 +85,92 @@ def local_train(
     epochs: int = 5,
     lr: float = 0.1,
     head_only: bool = False,
-) -> tuple[PyTree, float]:
+) -> tuple[PyTree, jax.Array]:
+    """Per-client full-batch SGD. Returns (params, loss) with the loss as a
+    *device scalar* — callers that need a python float sync explicitly; the
+    simulator hot path never does, so training no longer blocks the
+    dispatch pipeline on a host readback per client per round."""
     loss = jnp.zeros(())
     for _ in range(epochs):
         params, loss = _sgd_epoch(params, x, y, jnp.asarray(lr), head_only=head_only)
-    return params, float(loss)
+    return params, loss
+
+
+def _scan_train(
+    params: PyTree,
+    x: jax.Array,  # (n, dim) — padded
+    y: jax.Array,  # (n,) — padded entries hold any valid class id
+    mask: jax.Array,  # (n,) float validity
+    lr: jax.Array,  # () per-client learning rate
+    epochs: jax.Array,  # () int32 per-client epoch budget
+    head_frac: jax.Array,  # () 1.0 = head-only fine-tuning, 0.0 = full
+    max_epochs: int,
+) -> tuple[PyTree, jax.Array]:
+    """Scan-based multi-epoch step for ONE client (the vmap operand).
+
+    Runs ``max_epochs`` scan steps; steps at or past this client's
+    ``epochs`` budget are no-ops (params and loss carried through), so a
+    batch of clients with heterogeneous budgets shares one launch. Gradient
+    masking reproduces ``_sgd_epoch(head_only=True)``: non-head layers see
+    their gradient *selected* to an exact zero (``where``, not scaling, so
+    a non-finite gradient can never leak NaN into frozen body params)."""
+
+    def step(carry, e):
+        p, last_loss = carry
+        loss, grads = jax.value_and_grad(_masked_nll)(p, x, y, mask)
+        freeze_body = head_frac > 0
+        grads = [
+            layer if i == len(grads) - 1 else jax.tree_util.tree_map(
+                lambda g: jnp.where(freeze_body, jnp.zeros_like(g), g), layer
+            )
+            for i, layer in enumerate(grads)
+        ]
+        new = jax.tree_util.tree_map(lambda a, g: a - lr * g, p, grads)
+        active = e < epochs
+        p2 = jax.tree_util.tree_map(lambda old, nw: jnp.where(active, nw, old), p, new)
+        return (p2, jnp.where(active, loss, last_loss)), None
+
+    (params, loss), _ = jax.lax.scan(step, (params, jnp.zeros(())), jnp.arange(max_epochs))
+    return params, loss
+
+
+@functools.partial(jax.jit, static_argnames=("max_epochs",))
+def fleet_local_train(
+    params_b: PyTree,  # leaves (K, ...) — one row per client
+    x: jax.Array,  # (K, n, dim)
+    y: jax.Array,  # (K, n)
+    mask: jax.Array,  # (K, n)
+    lr: jax.Array,  # (K,)
+    epochs: jax.Array,  # (K,) int32
+    head_frac: jax.Array,  # (K,) 1.0 where head-only
+    *,
+    max_epochs: int,
+) -> tuple[PyTree, jax.Array]:
+    """One launch of local training for a whole client batch: vmap over
+    clients of a ``lax.scan`` over epochs. Returns (batched params, (K,)
+    final losses)."""
+    return jax.vmap(
+        functools.partial(_scan_train, max_epochs=max_epochs)
+    )(params_b, x, y, mask, lr, epochs, head_frac)
 
 
 @jax.jit
 def evaluate(params: PyTree, x: jax.Array, y: jax.Array) -> jax.Array:
     pred = jnp.argmax(mlp_forward(params, x), axis=-1)
     return jnp.mean((pred == y).astype(jnp.float32))
+
+
+def _masked_accuracy(params: PyTree, x: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    pred = jnp.argmax(mlp_forward(params, x), axis=-1)
+    correct = jnp.where(mask > 0, (pred == y).astype(jnp.float32), 0.0)
+    return jnp.sum(correct) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+@jax.jit
+def fleet_evaluate(params_b: PyTree, x: jax.Array, y: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked accuracy for the whole fleet in one launch: (K,) accuracies
+    replacing K per-client ``evaluate`` dispatches per eval tick."""
+    return jax.vmap(_masked_accuracy)(params_b, x, y, mask)
 
 
 @functools.partial(jax.jit, static_argnames=("num_classes",))
@@ -80,3 +182,23 @@ def predict_distributions(params: PyTree, x: jax.Array, num_classes: int):
     pred = jnp.argmax(logits, axis=-1)
     hist = jnp.bincount(pred, length=num_classes).astype(jnp.float32)
     return hist, jnp.mean(soft, axis=0)
+
+
+def _masked_distributions(params: PyTree, x: jax.Array, mask: jax.Array, num_classes: int):
+    logits = mlp_forward(params, x)
+    soft = jax.nn.softmax(logits, axis=-1)
+    pred = jnp.argmax(logits, axis=-1)
+    valid = (mask > 0)[:, None]
+    onehot = jnp.where(valid, (pred[:, None] == jnp.arange(num_classes)[None, :]).astype(jnp.float32), 0.0)
+    hist = jnp.sum(onehot, axis=0)
+    smean = jnp.sum(jnp.where(valid, soft, 0.0), axis=0) / jnp.maximum(jnp.sum(mask), 1.0)
+    return hist, smean
+
+
+@functools.partial(jax.jit, static_argnames=("num_classes",))
+def fleet_predict_distributions(params_b: PyTree, x: jax.Array, mask: jax.Array, num_classes: int):
+    """Batched feedback probe: (F (K, C), S (K, C)) stacks in one launch,
+    shaped to feed ``kernels.ops.chi2_feedback_all`` directly."""
+    return jax.vmap(
+        functools.partial(_masked_distributions, num_classes=num_classes)
+    )(params_b, x, mask)

@@ -1,0 +1,297 @@
+"""The vectorized client fleet (REPRO_CLIENT=fleet): loop-vs-fleet parity
+of both simulator loops, masked-padding correctness for ragged client
+datasets, head-only/heterogeneous-epoch masking equivalence, and the fleet
+engine's plane-backed state handling."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.paper_tasks import MLPTaskConfig
+from repro.core.client import SimClient
+from repro.data.synthetic import ClientDataset
+from repro.fl.experiment import build_clients, build_strategy, run_experiment
+from repro.fl.fleet import ClientFleet
+from repro.fl.simulator import Simulator
+from repro.models import mlp
+
+CFG = MLPTaskConfig("tiny", input_dim=12, hidden=(10,), num_classes=4)
+
+
+def _ragged_clients(rng, sizes=(7, 12, 5, 12)):
+    """SimClients with deliberately unequal train/test set sizes."""
+    clients = []
+    for i, n in enumerate(sizes):
+        x = rng.normal(size=(n, CFG.input_dim)).astype(np.float32)
+        y = rng.integers(0, CFG.num_classes, size=n).astype(np.int32)
+        nt = max(2, n // 3)
+        xt = rng.normal(size=(nt, CFG.input_dim)).astype(np.float32)
+        yt = rng.integers(0, CFG.num_classes, size=nt).astype(np.int32)
+        data = ClientDataset(x_train=x, y_train=y, x_test=xt, y_test=yt, latent_cluster=0)
+        clients.append(
+            SimClient(
+                client_id=i, data=data, num_classes=CFG.num_classes,
+                device_class="D1", round_time_fn=lambda: 1.0,
+                local_epochs=3 + i % 3, lr=0.05 * (1 + i),
+            )
+        )
+    return clients
+
+
+@pytest.fixture
+def params(rng):
+    return mlp.init_mlp(CFG, jax.random.PRNGKey(11))
+
+
+# -------------------------------------------------- masked batched variants
+class TestMaskedBatchedVariants:
+    def test_ragged_training_matches_per_client_path(self, rng, params):
+        """fleet_local_train on zero-padded rows with validity masks must
+        reproduce each client's unpadded local_train — including per-row
+        lr and heterogeneous epoch budgets."""
+        clients = _ragged_clients(rng)
+        fleet = ClientFleet(clients, params)
+        trained, _ = fleet.train_cohort([c.client_id for c in clients], [params] * len(clients))
+        for c, got in zip(clients, trained):
+            want, _ = mlp.local_train(
+                params, jnp.asarray(c.data.x_train), jnp.asarray(c.data.y_train),
+                epochs=c.local_epochs, lr=c.lr,
+            )
+            for a, b in zip(jax.tree_util.tree_leaves(want), jax.tree_util.tree_leaves(got)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+    def test_head_only_masking_equivalence(self, rng, params):
+        """A head_only row in the batch must match _sgd_epoch(head_only=True):
+        body layers frozen bit-exactly, head layer trained."""
+        clients = _ragged_clients(rng)
+        clients[1].partial_finetune = True
+        fleet = ClientFleet(clients, params)
+        trained, _ = fleet.train_cohort([c.client_id for c in clients], [params] * len(clients))
+        c = clients[1]
+        want, _ = mlp.local_train(
+            params, jnp.asarray(c.data.x_train), jnp.asarray(c.data.y_train),
+            epochs=c.local_epochs, lr=c.lr, head_only=True,
+        )
+        got = trained[1]
+        for a, b in zip(jax.tree_util.tree_leaves(want), jax.tree_util.tree_leaves(got)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+        # body layers untouched (exact zero gradient selection)
+        for a, b in zip(jax.tree_util.tree_leaves(params[:-1]), jax.tree_util.tree_leaves(got[:-1])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_head_only_body_stays_frozen_under_nonfinite_grads(self, rng, params):
+        """Gradient masking is a select, not a multiply: even when training
+        diverges (inf/nan gradients), frozen body params must stay bit-equal
+        — g * 0.0 would leak NaN."""
+        clients = _ragged_clients(rng)
+        c = clients[1]
+        c.partial_finetune = True
+        c.lr = 1e30  # diverges within an epoch or two
+        fleet = ClientFleet(clients, params)
+        trained, _ = fleet.train_cohort([c.client_id], [params])
+        for a, b in zip(jax.tree_util.tree_leaves(params[:-1]),
+                        jax.tree_util.tree_leaves(trained[0][:-1])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_fleet_evaluate_masks_padding(self, rng, params):
+        clients = _ragged_clients(rng)
+        fleet = ClientFleet(clients, params)
+        accs = fleet.evaluate_fleet([params] * len(clients))
+        for c, got in zip(clients, accs):
+            want = float(mlp.evaluate(params, jnp.asarray(c.data.x_test), jnp.asarray(c.data.y_test)))
+            np.testing.assert_allclose(got, want, atol=1e-6)
+
+    def test_fleet_feedback_matches_per_client_probe(self, rng, params):
+        clients = _ragged_clients(rng)
+        fleet = ClientFleet(clients, params)
+        pairs = [(c.client_id, params) for c in clients] + [(clients[0].client_id, params)]
+        f_pred, f_true, s_soft = fleet.feedback_many(pairs)
+        assert f_pred.shape == (len(pairs), CFG.num_classes)
+        for k, (cid, center) in enumerate(pairs):
+            c = clients[cid]
+            fp, ft, ss = c.feedback_inputs(center)
+            np.testing.assert_array_equal(f_pred[k], fp)  # integer histograms: exact
+            np.testing.assert_array_equal(f_true[k], ft)
+            np.testing.assert_allclose(s_soft[k], ss, rtol=1e-6, atol=1e-7)
+
+    def test_zero_epoch_rows_are_noops(self, rng, params):
+        clients = _ragged_clients(rng)
+        clients[2].local_epochs = 0
+        fleet = ClientFleet(clients, params)
+        trained, losses = fleet.train_cohort([c.client_id for c in clients], [params] * len(clients))
+        for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(trained[2])):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert losses[2] == 0.0  # matches local_train's epochs=0 loss
+
+
+# --------------------------------------------------------- fleet engine state
+class TestFleetEngine:
+    def test_train_client_row_sliced_path_matches_cohort(self, rng, params):
+        clients = _ragged_clients(rng)
+        fleet = ClientFleet(clients, params)
+        for c in clients:
+            fleet.set_model(c.client_id, params)
+        tree, loss = fleet.train_client(clients[0].client_id)
+        want, want_loss = mlp.local_train(
+            params, jnp.asarray(clients[0].data.x_train), jnp.asarray(clients[0].data.y_train),
+            epochs=clients[0].local_epochs, lr=clients[0].lr,
+        )
+        for a, b in zip(jax.tree_util.tree_leaves(want), jax.tree_util.tree_leaves(tree)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(float(loss), float(want_loss), rtol=1e-5)
+        # the model row advanced: training again continues from the new row
+        np.testing.assert_allclose(
+            np.asarray(fleet.model_vec(clients[0].client_id)),
+            np.asarray(fleet.spec.flatten(tree)), rtol=1e-6,
+        )
+
+    def test_train_cohort_none_params_fall_back_to_model_row(self, rng, params):
+        """model_for -> None means 'train from the client's own model', the
+        same contract SimClient.local_train(None) honors."""
+        clients = _ragged_clients(rng)
+        fleet = ClientFleet(clients, params)
+        c = clients[0]
+        start, _ = mlp.local_train(
+            params, jnp.asarray(c.data.x_train), jnp.asarray(c.data.y_train),
+            epochs=c.local_epochs, lr=c.lr,
+        )
+        fleet.set_model(c.client_id, start)
+        trained, _ = fleet.train_cohort([c.client_id], [None])
+        want, _ = mlp.local_train(
+            start, jnp.asarray(c.data.x_train), jnp.asarray(c.data.y_train),
+            epochs=c.local_epochs, lr=c.lr,
+        )
+        for a, b in zip(jax.tree_util.tree_leaves(want), jax.tree_util.tree_leaves(trained[0])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+    def test_train_from_unset_model_raises(self, rng, params):
+        clients = _ragged_clients(rng)
+        fleet = ClientFleet(clients, params)
+        with pytest.raises(ValueError):
+            fleet.train_client(clients[0].client_id)
+        with pytest.raises(ValueError):
+            fleet.train_cohort([clients[0].client_id], [None])
+
+    def test_dataset_replacement_is_picked_up(self, rng, params):
+        """Distribution drift (Fig. 18): replacing a SimClient's dataset
+        mid-run must be reflected by the next fleet launch, like the loop
+        backend's live reads."""
+        clients = _ragged_clients(rng)
+        fleet = ClientFleet(clients, params)
+        fleet.evaluate_fleet([params] * len(clients))
+        c = clients[0]
+        n = len(c.data.y_test) + 3  # also changes the padded width
+        rng2 = np.random.default_rng(99)
+        c.data = ClientDataset(
+            x_train=c.data.x_train, y_train=c.data.y_train,
+            x_test=rng2.normal(size=(n, CFG.input_dim)).astype(np.float32),
+            y_test=rng2.integers(0, CFG.num_classes, size=n).astype(np.int32),
+            latent_cluster=0,
+        )
+        accs = fleet.evaluate_fleet([params] * len(clients))
+        want = float(mlp.evaluate(params, jnp.asarray(c.data.x_test), jnp.asarray(c.data.y_test)))
+        np.testing.assert_allclose(accs[0], want, atol=1e-6)
+
+    def test_eval_rows_identity_cached(self, rng, params):
+        """Re-evaluating with the same center object must not rewrite eval
+        rows (the per-tick gather is the plane's patched cached view)."""
+        clients = _ragged_clients(rng)
+        fleet = ClientFleet(clients, params)
+        fleet.evaluate_fleet([params] * len(clients))
+        staged_before = len(fleet.plane._dirty) + len(fleet.plane._bulk)
+        fleet.evaluate_fleet([params] * len(clients))
+        assert len(fleet.plane._dirty) + len(fleet.plane._bulk) == staged_before == 0
+
+    def test_unset_model_and_none_params_evaluates_to_zero(self, rng, params):
+        clients = _ragged_clients(rng)
+        fleet = ClientFleet(clients, params)
+        fleet.set_model(clients[0].client_id, params)
+        accs = fleet.evaluate_fleet([None] * len(clients))
+        assert accs[1] == 0.0 and accs[2] == 0.0  # no model ever set
+        want = float(mlp.evaluate(params, jnp.asarray(clients[0].data.x_test),
+                                  jnp.asarray(clients[0].data.y_test)))
+        np.testing.assert_allclose(accs[0], want, atol=1e-6)
+        # a second tick with an unchanged model row stages no copies (the
+        # model-row mirror is version-tagged), and a model write re-stages
+        fleet.evaluate_fleet([None] * len(clients))
+        assert not fleet.plane._dirty and not fleet.plane._bulk
+        fleet.set_model(clients[0].client_id, params)
+        fleet.evaluate_fleet([None] * len(clients))
+        accs2 = fleet.evaluate_fleet([None] * len(clients))
+        np.testing.assert_allclose(accs2[0], want, atol=1e-6)
+
+
+# ------------------------------------------------------ simulator-level parity
+def _match_reports(r1, r2, atol=5e-6):
+    # virtual-time trajectory and byte accounting must be *exact*
+    assert (r1.up_bytes, r1.down_bytes, r1.up_events, r1.down_events) == (
+        r2.up_bytes, r2.down_bytes, r2.up_events, r2.down_events
+    )
+    assert [t for t, _ in r1.curve] == [t for t, _ in r2.curve]
+    np.testing.assert_allclose(
+        [a for _, a in r1.curve], [a for _, a in r2.curve], atol=atol
+    )
+    assert set(r1.per_client_acc) == set(r2.per_client_acc)
+    for cid in r1.per_client_acc:
+        np.testing.assert_allclose(r1.per_client_acc[cid], r2.per_client_acc[cid], atol=atol)
+    assert r1.duration == r2.duration
+
+
+class TestLoopFleetParity:
+    def test_run_sync_parity(self):
+        reports = {
+            backend: run_experiment(
+                "har", "fedavg", num_clients=6, seed=3, rounds=3,
+                client_backend=backend, samples_per_client=48,
+            )[3]
+            for backend in ("loop", "fleet")
+        }
+        _match_reports(reports["loop"], reports["fleet"])
+        assert reports["loop"].extra["rounds"] == reports["fleet"].extra["rounds"] == 3
+
+    def test_run_async_parity_echopfl(self):
+        """The event-driven trajectory — upload ordering, cluster decisions,
+        broadcasts, refinement — must be unchanged when single-client
+        training routes through the fleet's row-sliced path and eval ticks
+        and feedback probes batch."""
+        reports = {}
+        extras = {}
+        for backend in ("loop", "fleet"):
+            r = run_experiment(
+                "har", "echopfl", num_clients=6, seed=3, max_time=420,
+                client_backend=backend, samples_per_client=48,
+            )[3]
+            reports[backend] = r
+            extras[backend] = r.extra
+        _match_reports(reports["loop"], reports["fleet"])
+        for key in ("uploads", "clusters", "merges", "expansions", "broadcasts"):
+            assert extras["loop"][key] == extras["fleet"][key], key
+
+    def test_stale_fleet_hook_replaced_or_cleared_on_strategy_reuse(self):
+        """A strategy reused across simulators must never keep probing a
+        previous simulator's dead fleet: a new fleet rebinds the hook, a
+        loop-backend run clears it (falling back to feedback_fn)."""
+        task, clients, init = build_clients("har", 4, seed=0, samples_per_client=16)
+        strat = build_strategy("echopfl", init, clients, seed=0)
+        sim_a = Simulator(clients, strat, client_backend="fleet", seed=0)
+        sim_a._ensure_fleet(init)
+        hook_a = strat.feedback_batch_fn
+        assert getattr(hook_a, "_fleet_hook", False)
+        sim_b = Simulator(clients, strat, client_backend="fleet", seed=0)
+        sim_b._ensure_fleet(init)
+        assert strat.feedback_batch_fn is not hook_a  # rebound to B's fleet
+        sim_c = Simulator(clients, strat, client_backend="loop", seed=0)
+        sim_c._ensure_fleet(init)
+        assert strat.feedback_batch_fn is None
+        # re-running an existing fleet simulator reclaims the hook for its
+        # OWN fleet (after another simulator cleared or rebound it)
+        sim_a._ensure_fleet(init)
+        assert strat.feedback_batch_fn._fleet is sim_a._fleet
+        sim_b._ensure_fleet(init)
+        assert strat.feedback_batch_fn._fleet is sim_b._fleet
+
+    def test_invalid_backend_rejected(self):
+        task, clients, init = build_clients("har", 2, seed=0, samples_per_client=16)
+        strat = build_strategy("fedavg", init, clients, seed=0)
+        with pytest.raises(ValueError):
+            Simulator(clients, strat, client_backend="warp")

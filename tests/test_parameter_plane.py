@@ -140,6 +140,82 @@ class TestViewCache:
 
 
 # -------------------------------------------------------------------- parity
+# --------------------------------------------------------------- bulk writes
+class TestBulkWrites:
+    def test_write_rows_staged_read_and_flush(self, tiny_params):
+        plane = ParameterPlane(tiny_params, capacity=8)
+        rows = [plane.alloc() for _ in range(4)]
+        mat = jnp.arange(4 * plane.dim, dtype=jnp.float32).reshape(4, plane.dim)
+        plane.write_rows(rows, mat)
+        # single-row read serves the staged matrix slice, pre-flush
+        np.testing.assert_array_equal(np.asarray(plane.row(rows[2])), np.asarray(mat[2]))
+        # batched read flushes the staged matrix in one scatter
+        np.testing.assert_array_equal(np.asarray(plane.rows(tuple(rows))), np.asarray(mat))
+        assert not plane._bulk and not plane._dirty
+
+    def test_later_writes_win_regardless_of_staging_kind(self, tiny_params):
+        plane = ParameterPlane(tiny_params, capacity=8)
+        rows = [plane.alloc() for _ in range(3)]
+        mat = jnp.ones((3, plane.dim), jnp.float32)
+        # per-row write then bulk: bulk wins
+        plane.write(rows[0], jnp.full((plane.dim,), 7.0))
+        plane.write_rows(rows, mat)
+        # bulk then per-row: per-row wins
+        plane.write(rows[1], jnp.full((plane.dim,), 9.0))
+        # bulk then later bulk: the later matrix wins
+        plane.write_rows([rows[2]], jnp.full((1, plane.dim), 5.0))
+        got = np.asarray(plane.rows(tuple(rows)))
+        np.testing.assert_array_equal(got[0], np.ones(plane.dim))
+        np.testing.assert_array_equal(got[1], np.full(plane.dim, 9.0))
+        np.testing.assert_array_equal(got[2], np.full(plane.dim, 5.0))
+
+    def test_write_rows_patches_cached_views(self, tiny_params):
+        plane = ParameterPlane(tiny_params, capacity=8)
+        rows = [plane.alloc() for _ in range(3)]
+        ids = tuple(rows)
+        before = np.asarray(plane.rows(ids))
+        np.testing.assert_array_equal(before, np.zeros((3, plane.dim)))
+        mat = jnp.full((2, plane.dim), 3.0)
+        plane.write_rows(rows[:2], mat)
+        after = np.asarray(plane.rows(ids))  # cached view, patched in place
+        np.testing.assert_array_equal(after[:2], np.asarray(mat))
+        np.testing.assert_array_equal(after[2], np.zeros(plane.dim))
+
+    def test_write_rows_validates(self, tiny_params):
+        plane = ParameterPlane(tiny_params, capacity=4)
+        row = plane.alloc()
+        with pytest.raises(KeyError):
+            plane.write_rows([row, row + 1], jnp.zeros((2, plane.dim)))
+        with pytest.raises(ValueError):
+            plane.write_rows([row], jnp.zeros((2, plane.dim)))
+
+    def test_bulk_staging_stays_bounded_on_cached_view_reads(self, tiny_params):
+        """Regression: cached-view reads patch in place without flushing, so
+        a per-tick write_rows producer (the fleet eval refresh) must not
+        grow _bulk by one matrix per tick — it is capped at one live
+        matrix, and values stay correct across the internal flushes."""
+        plane = ParameterPlane(tiny_params, capacity=8)
+        rows = [plane.alloc() for _ in range(3)]
+        ids = tuple(rows)
+        plane.rows(ids)  # establish the cached view
+        for tick in range(5):
+            mat = jnp.full((3, plane.dim), float(tick + 1))
+            plane.write_rows(rows, mat)
+            assert len(plane._bulk) <= 1
+            np.testing.assert_array_equal(np.asarray(plane.rows(ids)), np.asarray(mat))
+        np.testing.assert_array_equal(
+            np.asarray(plane.row(rows[1])), np.full(plane.dim, 5.0)
+        )
+
+    def test_write_rows_rejects_duplicate_ids(self, tiny_params):
+        """Duplicate ids in one scatter resolve in unspecified order, so the
+        staged read and the flushed buffer could disagree — rejected."""
+        plane = ParameterPlane(tiny_params, capacity=4)
+        row = plane.alloc()
+        with pytest.raises(ValueError):
+            plane.write_rows([row, row], jnp.zeros((2, plane.dim)))
+
+
 def _tree(x, shift=0.0):
     return {
         "a": {"w": jnp.full((6, 4), float(x), jnp.float32)},
