@@ -1,0 +1,180 @@
+"""Event-coalesced async pipeline benchmark (REPRO_ASYNC_COALESCE).
+
+Measures async EchoPFL uploads/sec through three server paths:
+
+  * ``loop / per-event`` — the seed async path (REPRO_CLIENT=loop, window
+    off): one jit dispatch per local-training epoch per upload event, one
+    per-upload server ingest, one heap event per downlink.
+  * ``fleet / per-event`` — coalescing OFF under the (now default) batched
+    client engine: row-sliced single-client training launches, still one
+    Python/jit dispatch cycle per event.
+  * ``fleet / coalesced`` — coalescing ON: each virtual-time window is one
+    superstep — one fused row-sliced training launch for every round that
+    finished in the window, one ``handle_uploads`` ingest scan for every
+    arrival, one staged write + one batch event per broadcast fan-out.
+
+The headline speedup is coalesced vs the seed per-event loop — the
+user-visible gain of this round of work (client-plane default flip + event
+coalescing). The on-vs-off ratio *within* the fleet backend is reported
+alongside: it isolates the coalescing layer itself and is Amdahl-bounded
+by work both paths share per upload (the broadcast predictor's serial RNN
+learn/decide, periodic refinement sweeps, evaluation ticks).
+
+Refinement probes every member of every cluster, so its period is scaled
+with fleet size (``refine_every = clients // 4, floor 20``) to keep the
+per-upload refinement share constant across the sweep — the same fraction
+in every column, so ratios are unaffected.
+
+``--json`` writes BENCH_async_coalesce.json at the repo root so the perf
+trajectory is tracked across PRs.
+
+Usage:
+    python benchmarks/bench_async_coalesce.py [--clients 128,256] [--uploads 800] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import statistics
+import sys
+import time
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+for p in (os.path.join(REPO_ROOT, "src"), REPO_ROOT):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.common import save_result, table  # noqa: E402
+from repro.fl.experiment import build_clients, build_strategy  # noqa: E402
+from repro.fl.network import NetworkModel  # noqa: E402
+from repro.fl.simulator import Simulator  # noqa: E402
+
+
+def _run(n, backend, window, max_uploads, refine_every, seed=0):
+    task, clients, init = build_clients("har", n, seed=seed)
+    strat = build_strategy("echopfl", init, clients, seed=seed)
+    strat.refine_every = refine_every
+    sim = Simulator(clients, strat, network=NetworkModel(), seed=seed,
+                    client_backend=backend, coalesce_window=window)
+    t0 = time.perf_counter()
+    rep = sim.run_async(max_time=1e9, max_uploads=max_uploads)
+    dt = time.perf_counter() - t0
+    groups = sim.coalesced_groups.get("upload_done", [])
+    return {
+        "uploads_per_s": rep.extra["uploads"] / dt,
+        "wall_s": dt,
+        "final_acc": rep.final_acc,
+        "curve": [a for _, a in rep.curve],
+        "mean_arrival_batch": (sum(groups) / len(groups)) if groups else 1.0,
+    }
+
+
+def _arm(n, backend, window, max_uploads, refine_every, reps):
+    _run(n, backend, window, max_uploads, refine_every)  # full-length warmup (jit cache)
+    runs = [_run(n, backend, window, max_uploads, refine_every) for _ in range(reps)]
+    best = max(runs, key=lambda r: r["uploads_per_s"])
+    best["uploads_per_s_median"] = statistics.median(r["uploads_per_s"] for r in runs)
+    return best
+
+
+def run(quick: bool = False, clients=(128, 256), uploads: int = 800, window: float = 45.0,
+        reps: int = 2, json_out: bool = False) -> dict:
+    if quick:
+        clients, uploads, reps = (64,), 300, 1
+    rows, per_size = [], {}
+    for n in clients:
+        refine_every = max(20, n // 4)
+        loop = _arm(n, "loop", 0.0, uploads, refine_every, reps)
+        off = _arm(n, "fleet", 0.0, uploads, refine_every, reps)
+        on = _arm(n, "fleet", window, uploads, refine_every, reps)
+        # transient curves time-shift under the superstep semantics (the
+        # pointwise max lands in the steep climb); the converged tail is
+        # the accuracy claim, so report both
+        acc_dev = max(
+            abs(a - b) for a, b in zip(off["curve"], on["curve"])
+        ) if off["curve"] and len(off["curve"]) == len(on["curve"]) else None
+        k = max(1, len(off["curve"]) // 5)
+        tail_dev = max(
+            abs(a - b) for a, b in zip(off["curve"][-k:], on["curve"][-k:])
+        ) if acc_dev is not None else None
+        per_size[n] = {
+            "refine_every": refine_every,
+            "window_s": window,
+            "loop_per_event_uploads_per_s": loop["uploads_per_s"],
+            "fleet_per_event_uploads_per_s": off["uploads_per_s"],
+            "fleet_coalesced_uploads_per_s": on["uploads_per_s"],
+            "speedup_vs_seed_per_event": on["uploads_per_s"] / loop["uploads_per_s"],
+            "speedup_on_vs_off": on["uploads_per_s"] / off["uploads_per_s"],
+            "mean_arrival_batch": on["mean_arrival_batch"],
+            "max_acc_curve_deviation_on_vs_off": acc_dev,
+            "tail_acc_deviation_on_vs_off": tail_dev,
+            "final_acc": {"off": off["final_acc"], "on": on["final_acc"]},
+            "final_acc_diff": abs(on["final_acc"] - off["final_acc"]),
+        }
+        rows.append({
+            "clients": n,
+            "loop/per-event": loop["uploads_per_s"],
+            "fleet/per-event": off["uploads_per_s"],
+            "fleet/coalesced": on["uploads_per_s"],
+            "vs seed": per_size[n]["speedup_vs_seed_per_event"],
+            "on vs off": per_size[n]["speedup_on_vs_off"],
+            "batch": on["mean_arrival_batch"],
+        })
+
+    print(table(
+        rows,
+        ["clients", "loop/per-event", "fleet/per-event", "fleet/coalesced",
+         "vs seed", "on vs off", "batch"],
+        title=f"async uploads/sec (echopfl, har, window={window}s, {uploads} uploads)",
+    ))
+
+    payload = {
+        "task": "har",
+        "uploads": uploads,
+        "window_s": window,
+        "by_clients": per_size,
+        "headline": {
+            "metric": "async uploads/sec, coalesced (REPRO_ASYNC_COALESCE="
+                      f"{window}) vs the seed per-event loop (REPRO_CLIENT=loop, window off)",
+            "speedups_vs_seed_per_event": {
+                str(n): per_size[n]["speedup_vs_seed_per_event"] for n in per_size
+            },
+            "speedups_on_vs_off_fleet": {
+                str(n): per_size[n]["speedup_on_vs_off"] for n in per_size
+            },
+            "note": "on-vs-off within the fleet backend is Amdahl-bounded by "
+                    "per-upload work both arms share (serial RNN broadcast "
+                    "predictor, refinement sweeps, eval ticks). The parity "
+                    "suite (tests/test_async_coalesce.py) proves bitwise "
+                    "trajectories at degenerate windows on both kernel "
+                    "backends; at real windows the virtual-time trajectory "
+                    "and uplink billing stay exact while accuracy curves "
+                    "time-shift through the transient climb and converge to "
+                    "the same tail (see tail_acc_deviation / final_acc).",
+        },
+    }
+    save_result("async_coalesce", payload)
+    if json_out:
+        path = os.path.join(REPO_ROOT, "BENCH_async_coalesce.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+        print(f"wrote {path}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--clients", default="128,256")
+    ap.add_argument("--uploads", type=int, default=800)
+    ap.add_argument("--window", type=float, default=45.0)
+    ap.add_argument("--reps", type=int, default=2)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", action="store_true", help="write BENCH_async_coalesce.json")
+    args = ap.parse_args()
+    run(quick=args.quick, clients=tuple(int(c) for c in args.clients.split(",")),
+        uploads=args.uploads, window=args.window, reps=args.reps, json_out=args.json)
+
+
+if __name__ == "__main__":
+    main()

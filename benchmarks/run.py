@@ -13,6 +13,7 @@ import traceback
 from benchmarks import (
     bench_ablations,
     bench_accuracy_time,
+    bench_async_coalesce,
     bench_client_fleet,
     bench_clustering_quality,
     bench_comm_cost,
@@ -38,6 +39,7 @@ BENCHES = {
     "roofline": bench_roofline.run,                 # deliverable (g)
     "server_throughput": bench_server_throughput.run,  # plane vs pytree hot path
     "client_fleet": bench_client_fleet.run,         # loop vs fleet client plane
+    "async_coalesce": bench_async_coalesce.run,     # event-coalesced async pipeline
 }
 
 

@@ -9,7 +9,7 @@ export PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH}
 echo "=== tier-1 (default backends: REPRO_KERNELS=auto, REPRO_PLANE=plane) ==="
 python -m pytest -q -p no:cacheprovider -m "not slow"
 
-PARITY_TESTS=(tests/test_batched_kernels.py tests/test_kernels.py tests/test_parameter_plane.py)
+PARITY_TESTS=(tests/test_batched_kernels.py tests/test_kernels.py tests/test_parameter_plane.py tests/test_async_coalesce.py)
 
 echo "=== kernel parity under REPRO_KERNELS=ref ==="
 REPRO_KERNELS=ref python -m pytest -q -p no:cacheprovider "${PARITY_TESTS[@]}"
@@ -21,13 +21,13 @@ echo "=== server/clustering on the pytree storage backend (REPRO_PLANE=pytree) =
 REPRO_PLANE=pytree python -m pytest -q -p no:cacheprovider -m "not slow" \
     tests/test_parameter_plane.py tests/test_clustering.py tests/test_server_integration.py
 
-echo "=== batched client plane (REPRO_CLIENT=fleet) ==="
-# Tier-1's simulator-exercising suites with every Simulator defaulting to
-# the vectorized client-fleet engine (the remaining tier-1 files never
-# construct a Simulator, so REPRO_CLIENT cannot affect them; loop-vs-fleet
+echo "=== loop client backend parity (REPRO_CLIENT=loop) ==="
+# The fleet engine is the default since this CI soaked it; the seed
+# per-client loop stays as the parity leg: tier-1's simulator-exercising
+# suites with every Simulator on per-client dispatches (loop-vs-fleet
 # parity is additionally asserted inside test_client_fleet.py itself).
-REPRO_CLIENT=fleet python -m pytest -q -p no:cacheprovider -m "not slow" \
-    tests/test_client_fleet.py tests/test_server_integration.py
+REPRO_CLIENT=loop python -m pytest -q -p no:cacheprovider -m "not slow" \
+    tests/test_client_fleet.py tests/test_server_integration.py tests/test_async_coalesce.py
 
 echo "=== sharded plane over 8 simulated devices (REPRO_PLANE_MESH=auto) ==="
 # Forced host-platform device count: the plane/kernel parity suites run with
@@ -39,5 +39,18 @@ REPRO_PLANE_MESH=auto REPRO_PLANE_MESH_MIN_ROWS=0 \
 python -m pytest -q -p no:cacheprovider -m "not slow" \
     tests/test_sharded_plane.py tests/test_parameter_plane.py \
     tests/test_batched_kernels.py tests/test_clustering.py
+
+echo "=== coalesced async + fleet mesh over 8 simulated devices ==="
+# Event-coalesced loop as the ambient default (REPRO_ASYNC_COALESCE=45)
+# with BOTH planes mesh-backed: the server plane row-sharded and the
+# client fleet's model plane + data tensors sharded over the same 8
+# virtual devices (REPRO_FLEET_MESH engages where the fleet size divides
+# the shards). The parity suites assert the coalesced trajectories and
+# loop/fleet agreement under this stack.
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+REPRO_PLANE_MESH=auto REPRO_PLANE_MESH_MIN_ROWS=0 \
+REPRO_FLEET_MESH=auto REPRO_ASYNC_COALESCE=45 \
+python -m pytest -q -p no:cacheprovider -m "not slow" \
+    tests/test_async_coalesce.py tests/test_client_fleet.py
 
 echo "ci.sh: all green"

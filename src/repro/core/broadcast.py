@@ -68,6 +68,15 @@ def _rnn_sgd(params: PyTree, seq: jax.Array, label: jax.Array, lr: jax.Array) ->
     return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads), loss
 
 
+@jax.jit
+def _rnn_want(params: PyTree, seq: jax.Array) -> jax.Array:
+    """Fused forward + argmax decision: one dispatch per broadcast decision
+    instead of a logits launch plus two eager argmax/compare dispatches.
+    Same logits, same first-index argmax tie-breaking — bitwise-identical
+    decisions to the unfused form."""
+    return jnp.argmax(rnn_logits(params, seq)) == 1
+
+
 # ------------------------------------------------------------- per-cluster
 @dataclasses.dataclass
 class BroadcastPredictor:
@@ -86,11 +95,20 @@ class BroadcastPredictor:
         self.records = self.records[-max(self.k, 1):]
         self.scale = 0.9 * self.scale + 0.1 * max(abs(change), 1e-12)
 
-    def _seq(self) -> jax.Array:
+    def _seq(self) -> np.ndarray:
+        """Normalized (k, 1) change-record window, built host-side in numpy.
+
+        This runs on every online learn AND every RNN decision — per upload
+        on the server hot path — so it must not cost device dispatches. The
+        previous jnp version paid three (asarray, reshape, divide) before
+        the RNN launch even started. The numpy form is bitwise-identical:
+        float32 array ops with a weak python-float norm divide the same way
+        under NumPy 2 promotion as under jax, and the jit boundary uploads
+        the 10-float array in the same dispatch as the RNN itself."""
         rec = self.records[-self.k:]
         rec = [0.0] * (self.k - len(rec)) + rec  # zero-pad (expansion reset rule)
         norm = max(max((abs(r) for r in rec), default=0.0), 1e-12)  # match pretraining
-        return jnp.asarray(rec, jnp.float32)[:, None] / norm
+        return np.asarray(rec, np.float32)[:, None] / norm
 
     def decide(self, accumulated_gap: float, fallback_threshold: float = 1.0) -> bool:
         """RNN decision; when inactive (fresh expansion) never broadcast."""
@@ -101,16 +119,18 @@ class BroadcastPredictor:
         if len(self.records) < 2:  # cold start: rule-based fallback
             want = accumulated_gap > fallback_threshold * self.scale
         else:
-            logits = rnn_logits(self.params, self._seq())
-            want = bool(jnp.argmax(logits) == 1)
+            want = bool(_rnn_want(self.params, self._seq()))
         if want:
             self.broadcasts += 1
         return want
 
-    def learn(self, label: int, lr: float = 1e-2) -> float:
-        """Online fine-tune on the realized ground truth (Eq. 4)."""
+    def learn(self, label: int, lr: float = 1e-2):
+        """Online fine-tune on the realized ground truth (Eq. 4). Returns
+        the loss as a *device scalar* — this runs once per upload on the
+        server hot path, and forcing a host readback here would stall the
+        dispatch pipeline; call ``float()`` on it if you need the value."""
         self.params, loss = _rnn_sgd(self.params, self._seq(), jnp.asarray(label), jnp.asarray(lr))
-        return float(loss)
+        return loss
 
 
 # ------------------------------------------------------------ maintenance

@@ -462,7 +462,7 @@ class DynamicClustering:
         moves = 0
         if self.backend == "plane":
             kw = self._kernel_mesh_kwargs(len(flagged))
-            U = self._upload_matrix(uploads, [m for m, _ in flagged])
+            U = self._upload_matrix(uploads, [m for m, _ in flagged], on_mesh="shard" if kw else False)
             centers = self.plane.rows(
                 [self.clusters[c]._row for c in cids], on_mesh=bool(kw)
             )
@@ -554,13 +554,18 @@ class DynamicClustering:
         return new.cluster_id
 
     # ------------------------------------------------------------- helpers
-    def _upload_matrix(self, uploads: dict, keys: list) -> Any:
+    def _upload_matrix(self, uploads: dict, keys: list, on_mesh: bool | str = False) -> Any:
         """Stack clients' last uploads into (len(keys), dim). Values may be
         plane row indices (the server's plane-mode store), flat vectors, or
-        pytrees (direct API use / tests) — rows take the one-gather path."""
+        pytrees (direct API use / tests) — rows take the one-gather path.
+        ``on_mesh="shard"`` serves a fleet-scale sweep (reassign/dissolve
+        over many upload rows) sharded over the plane mesh's row axis, so a
+        mesh-committed plane never funnels the batch through one device."""
         vals = [uploads[m] for m in keys]
         if vals and all(isinstance(v, (int, np.integer)) for v in vals):
-            return self.plane.rows(vals)
+            # one-shot row set (flagged members change every sweep): the
+            # uncached gather, so the hot cached views survive refinement
+            return self.plane.take(vals, on_mesh=on_mesh)
         return jnp.stack([self.plane.as_vec(v) for v in vals])
 
     def membership_matrix(self, client_ids: list) -> np.ndarray:

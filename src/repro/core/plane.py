@@ -61,16 +61,28 @@ from repro.common.pytrees import flatten_spec
 
 PyTree = Any
 
-# jitted vector helpers shared by the plane and the server hot path
-lerp_vec = jax.jit(lambda a, b, t: (1.0 - t) * a + t * b)
+# jitted vector helpers shared by the plane and the server hot path. The
+# lerp is the canonical mixed-rate blend: ``t`` is static (folded exactly
+# like the fused assign kernel folds its beta) and the two products are
+# fenced apart (optimization_barrier) so XLA can never contract the
+# mul-add into an FMA. Every path that blends a center — the assign
+# kernel, this row lerp, the event-coalesced ingest scan — therefore emits
+# the SAME two-op f32 expression regardless of surrounding fusion, which
+# is what keeps batched and per-event server trajectories bitwise-equal.
+import functools as _functools
+
+
+@_functools.partial(jax.jit, static_argnames=("t",))
+def lerp_vec(a, b, t):
+    m1, m2 = jax.lax.optimization_barrier(((1.0 - t) * a, t * b))
+    return m1 + m2
+
+
 l1_vec = jax.jit(lambda a, b: jnp.sum(jnp.abs(a - b)))
 
 # The flush scatter donates the buffer: without donation every row write-back
 # would copy the whole (capacity, dim) plane, which scales with fleet size —
 # exactly the O(capacity)-per-upload behavior the plane exists to avoid.
-import functools as _functools
-
-
 @_functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_rows(buf, rows, vals):
     return buf.at[rows].set(vals)
@@ -322,7 +334,33 @@ class ParameterPlane:
                 return self._localize(mat[sel])
         return jnp.stack([self.row(r) for r in rs])
 
-    def rows(self, row_ids: Sequence[int], *, on_mesh: bool = False) -> jax.Array:
+    def _shard_rows(self, x: jax.Array) -> jax.Array:
+        """Pin an ``(n, dim)`` row batch *sharded* over the plane's row axis
+        (the operand form ``ops._to_mesh_rows`` passes through untouched)."""
+        want = NamedSharding(self.mesh, PartitionSpec(self.row_axis, None))
+        sharding = getattr(x, "sharding", None)
+        if sharding is not None and sharding.is_equivalent_to(want, x.ndim):
+            return x
+        return jax.device_put(x, want)
+
+    def take(self, row_ids: Sequence[int], *, on_mesh: bool | str = False) -> jax.Array:
+        """Uncached ``(len(row_ids), dim)`` gather of the requested rows.
+
+        Same placement semantics as :meth:`rows` (including the
+        ``"shard"`` row-sharded form), but never touches the view cache: a
+        caller gathering a *different* row set every call (a refine sweep's
+        flagged members, a dissolve's victim uploads) must not evict the
+        hot cached sets (the per-upload center matrix, the model-row bank,
+        the eval-row bank)."""
+        if len(row_ids) == 0:
+            return jnp.zeros((0, self.dim), self.dtype)
+        self.flush()
+        view = self._buf[jnp.asarray(list(row_ids), jnp.int32)]
+        if on_mesh == "shard" and self._sharding is not None:
+            return self._shard_rows(view)
+        return self._replicate(view) if on_mesh and self._sharding is not None else self._localize(view)
+
+    def rows(self, row_ids: Sequence[int], *, on_mesh: bool | str = False) -> jax.Array:
         """Stacked ``(len(row_ids), dim)`` view of the requested rows.
 
         Repeat requests for the same row set (the per-upload center matrix)
@@ -331,18 +369,31 @@ class ParameterPlane:
         returned array is a snapshot: valid until the same row set is
         requested again after a write.
 
-        ``on_mesh`` asks for the view replicated across the plane mesh —
-        the operand form a *sharded* kernel launch consumes. It is cached
-        and patched exactly like the local view, so sharded launches do not
-        re-broadcast the whole matrix across devices on every call. Ignored
-        (plain local view) when the plane is unsharded.
+        ``on_mesh`` asks for a mesh placement instead of the single local
+        device — the operand forms the *sharded* kernel launches consume:
+        ``True`` (or ``"replicate"``) replicates the view across the plane
+        mesh (small operands: the center matrix every query row scores
+        against); ``"shard"`` lands it sharded over the row axis (the
+        fleet-scale row batch — a reassign/dissolve sweep over thousands of
+        upload rows — which must never round-trip through one local device
+        on exactly the path sharding exists to relieve). Either form is
+        cached and patched exactly like the local view. Ignored (plain
+        local view) when the plane is unsharded.
         """
         if len(row_ids) == 0:
             return jnp.zeros((0, self.dim), self.dtype)
-        on_mesh = bool(on_mesh) and self._sharding is not None
+        if self._sharding is None:
+            on_mesh = False
         ids = tuple(row_ids)
-        key = (ids, "mesh" if on_mesh else "local")
-        place = self._replicate if on_mesh else (lambda v: v)
+        if on_mesh == "shard":
+            key = (ids, "shard")
+            place = self._replicate  # patch values enter like flush scatters
+        elif on_mesh:
+            key = (ids, "mesh")
+            place = self._replicate
+        else:
+            key = (ids, "local")
+            place = lambda v: v
         view = self._views.pop(key, None)  # pop + reinsert: move-to-end on hit
         if view is not None:
             stale = self._view_stale[key]
@@ -355,12 +406,17 @@ class ParameterPlane:
                     pos = [ids.index(r) for r in stale_list]
                     vals = place(self._staged_rows(stale_list))
                     view = _scatter_rows(view, jnp.asarray(pos, jnp.int32), vals)
+                if on_mesh == "shard":  # guard: the donated patch scatter
+                    view = self._shard_rows(view)  # must not drop the placement
                 stale.clear()
             self._views[key] = view
             return view
         self.flush()
         view = self._buf[jnp.asarray(list(ids), jnp.int32)]
-        view = self._replicate(view) if on_mesh else self._localize(view)
+        if on_mesh == "shard":
+            view = self._shard_rows(view)
+        else:
+            view = self._replicate(view) if on_mesh else self._localize(view)
         if len(self._views) >= 4:  # tiny LRU cache: hot sets only. Insertion
             # order is recency order (hits reinsert), so the head is the
             # true LRU victim — a burst of cold reads can no longer evict

@@ -19,6 +19,7 @@ import dataclasses
 from typing import Any, Callable
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.common.pytrees import tree_flat_vector, tree_l1
@@ -218,6 +219,188 @@ class EchoPFLServer:
         # 8. periodic refinement
         if self._uploads % self.refine_every == 0:
             out.extend(self._refine())
+        return out
+
+    # ------------------------------------------------------- batched ingest
+    def handle_uploads(self, batch: list[tuple]) -> list[list[Downlink]]:
+        """Batched ingest of concurrently-arrived uploads (the event-coalesced
+        async path): ``batch`` is a list of ``handle_upload`` argument tuples
+        ``(client_id, params, base_version, n_samples, t)`` in event order.
+        Returns one downlink list per upload, exactly what N sequential
+        ``handle_upload`` calls would return.
+
+        Uploads are processed in *segments* of consecutive distinct clients
+        that stay inside one refinement period: each segment's cluster
+        assignment + mixed-rate blends run as ONE fused scan launch
+        (``kernels.ops.ingest_chain`` — sequential-equivalent: step j scores
+        against the centers already blended by steps < j), and the host
+        replays only the per-upload protocol bookkeeping (staleness, CI
+        branch pushes, predictor learn/decide, downlink construction) from
+        the precomputed statistics. Segment boundaries — a refine falling
+        due, a repeated client, the seeding phase, the pytree backend —
+        fall back to the per-upload path, so trajectories are identical to
+        the unbatched loop by construction."""
+        out: list[list[Downlink]] = []
+        i, n = 0, len(batch)
+        while i < n:
+            cl = self.clustering
+            if (
+                cl.plane is None
+                or not self.enable_clustering
+                or len(cl.clusters) < cl.num_initial
+            ):
+                out.append(self.handle_upload(*batch[i]))
+                i += 1
+                continue
+            # segment: consecutive distinct clients, ending at (and
+            # including) the upload whose ordinal triggers refinement
+            until_refine = self.refine_every - (self._uploads % self.refine_every)
+            seg_end = min(n, i + until_refine)
+            seen: set = set()
+            j = i
+            while j < seg_end and batch[j][0] not in seen:
+                seen.add(batch[j][0])
+                j += 1
+            if j - i < 2:
+                out.append(self.handle_upload(*batch[i]))
+                i += 1
+                continue
+            out.extend(self._handle_upload_segment(batch[i:j]))
+            i = j
+        return out
+
+    def _handle_upload_segment(self, seg: list[tuple]) -> list[list[Downlink]]:
+        """One fused-launch segment of :meth:`handle_uploads` (plane mode)."""
+        cl = self.clustering
+        plane = cl.plane
+        cid_order = sorted(cl.clusters)
+        pos = {c: k for k, c in enumerate(cid_order)}
+        S = len(seg)
+
+        # one flatten per upload, one stacked write into the upload rows
+        # (the same vectors the per-event path writes one at a time)
+        U = jnp.stack([plane.from_pytree(item[1]) for item in seg])
+        upload_rows = []
+        for item in seg:
+            row = self._upload_rows.get(item[0])
+            if row is None:
+                row = self._upload_rows[item[0]] = plane.alloc()
+            upload_rows.append(row)
+        plane.write_rows(upload_rows, U)
+
+        prev_idx, forced_idx = [], []
+        for item in seg:
+            prev = cl.assignment.get(item[0])
+            alive = prev is not None and prev in cl.clusters
+            pf = alive and item[0] in cl.clusters[prev].partial_finetune
+            prev_idx.append(pos[prev] if alive else -1)
+            forced_idx.append(pos[prev] if pf else -1)
+
+        P = 1 << (S - 1).bit_length()  # pad the scan length: O(log window) jit cache
+        valid = [True] * S + [False] * (P - S)
+        if P != S:
+            U = jnp.concatenate([U, jnp.broadcast_to(U[:1], (P - S, U.shape[1]))])
+            prev_idx += [-1] * (P - S)
+            forced_idx += [-1] * (P - S)
+
+        C0 = plane.rows([cl.clusters[c]._row for c in cid_order])
+        B0 = plane.rows([cl.clusters[c]._bcast_row for c in cid_order])
+        Cn = len(cid_order)
+        Cp = 1 << (Cn - 1).bit_length()  # pow2-padded: O(log clusters) jit cache
+        if Cp != Cn:
+            zpad = jnp.zeros((Cp - Cn, C0.shape[1]), C0.dtype)
+            C0 = jnp.concatenate([C0, zpad])
+            B0 = jnp.concatenate([B0, zpad])
+        cids_d, blended_d, change_d, gb_d, ga_d = K.ingest_chain(
+            U, C0, B0, prev_idx, forced_idx, valid,
+            beta=cl.mix_rate, num_centers=Cn,
+        )
+        # ONE host sync for the whole segment (stats + blended rows: the
+        # per-upload center writes re-enter the plane as staged host rows)
+        cids_np, change_np, gb_np, ga_np, blended = jax.device_get(
+            (cids_d[:S], change_d[:S], gb_d[:S], ga_d[:S], blended_d[:S])
+        )
+        blended = np.asarray(blended)
+        blended.flags.writeable = False  # unicast payloads are views of this
+
+        out: list[list[Downlink]] = []
+        last_vec: dict[int, Any] = {}  # cid -> live center row (host, np)
+        bcast_np: dict[int, Any] = {}  # cid -> anchor moved mid-segment (np)
+        for j in range(S):
+            client_id, params, base_version, n_samples, t = seg[j]
+            self._uploads += 1
+            msgs: list[Downlink] = []
+            cid = cid_order[int(cids_np[j])]
+            cluster = cl.clusters[cid]
+            if forced_idx[j] < 0:  # partial-finetune members stay put, no move
+                cl._move(client_id, cid)
+            try:
+                branch = self.repo.branch(f"cluster/{cid}")
+            except KeyError:
+                branch = self.repo.branch(f"cluster/{cid}", cluster.center_vec)
+
+            # staleness bookkeeping — identical to handle_upload
+            base_cluster, base_ver = self.client_versions.get(client_id, (cid, 0))
+            if base_cluster == cid:
+                staleness = max(0, cluster.version - base_ver)
+            elif base_cluster in cl.clusters:
+                staleness = max(0, cl.clusters[base_cluster].version - base_ver)
+            else:
+                staleness = max(0, cluster.version - cluster.last_broadcast_version)
+            self.staleness.record(staleness)
+
+            pred = self._predictor(cid) if self.enable_broadcast else None
+            new_vec = blended[j]
+
+            def merge_fn(head, cluster=cluster, vec=new_vec):
+                cluster.set_center_vec(vec)
+                cluster.version += 1
+                return cluster.center_vec
+
+            branch.push(client_id, merge_fn, f"upload from {client_id} (staleness {staleness})")
+
+            if pred is not None:
+                change = float(change_np[j])
+                b_moved = bcast_np.get(cid)
+                if b_moved is not None:
+                    # an intra-window broadcast moved this cluster's anchor:
+                    # the precomputed gap is stale. The anchor AND the
+                    # pre-blend center are both host rows we already hold
+                    # (the broadcast step's blended row), so the recompute
+                    # is pure numpy — no device round-trip per upload.
+                    gap_before = float(np.abs(last_vec[cid] - b_moved).sum(dtype=np.float32))
+                else:
+                    gap_before = float(gb_np[j])
+                label = 1 if change > gap_before else 0
+                if pred.records:
+                    pred.learn(label)
+                pred.observe(change)
+
+            # unicast payload: host-side numpy views of the blended row we
+            # already synced — bitwise the center the per-event path would
+            # materialize, with zero device dispatches
+            msgs.append(
+                Downlink(client_id, plane.spec.unflatten_np(new_vec), cluster.version, cid, "unicast")
+            )
+            self.client_versions[client_id] = (cid, cluster.version)
+
+            if pred is not None and cluster.size > 1:
+                b_moved = bcast_np.get(cid)
+                if b_moved is not None:
+                    gap = float(np.abs(new_vec - b_moved).sum(dtype=np.float32))
+                else:
+                    gap = float(ga_np[j])
+                self._decisions += 1
+                if pred.decide(gap):
+                    self._rnn_broadcasts += 1
+                    msgs.extend(self._broadcast(cluster, exclude={client_id}))
+                    bcast_np[cid] = new_vec  # snapshot_broadcast just copied it
+            last_vec[cid] = new_vec
+
+            if self._uploads % self.refine_every == 0:  # segment-final by construction
+                msgs.extend(self._refine())
+            out.append(msgs)
+        cl._pending = None  # the fused path never uses the assign-time cache
         return out
 
     def _broadcast(self, cluster, exclude: set = frozenset()) -> list[Downlink]:
@@ -436,14 +619,15 @@ class EchoPFLServer:
             have = [m for m in members if m in self._upload_rows]
             if have:
                 kw = clustering._kernel_mesh_kwargs(len(have))
-                U = plane.rows([self._upload_rows[m] for m in have])
+                # query rows go shard-local under a mesh (no one-device hop)
+                # and uncached (one-shot set); the small center matrix stays
+                # replicated
+                U = plane.take([self._upload_rows[m] for m in have], on_mesh="shard" if kw else False)
                 centers = plane.rows([clusters[c]._row for c in rest], on_mesh=bool(kw))
                 D = np.asarray(K.l1_distance_pairwise(U, centers, **kw))
                 for m, d in zip(have, D):
                     best_of[m] = rest[int(np.argmin(d))]
         elif members:
-            import jax.numpy as jnp
-
             with_uploads = [m for m in members if m in self.last_uploads]
             if with_uploads:
                 centers = jnp.stack([tree_flat_vector(clusters[c].center) for c in rest])

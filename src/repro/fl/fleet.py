@@ -71,13 +71,30 @@ def _train_launch(mat, x_all, y_all, mask_all, gather, lr, epochs, head, *,
     return jax.vmap(spec._flatten)(new_b), losses
 
 
+@functools.partial(jax.jit, static_argnames=("spec", "max_epochs"))
+def _train_launch_bank(bank, sel, x_all, y_all, mask_all, gather, lr, epochs, head, *,
+                       spec: FlattenSpec, max_epochs: int):
+    # row-sliced variant: the model matrix is gathered from the fleet's
+    # model-row bank INSIDE the launch. An eager per-call gather of dozens
+    # of scattered plane rows is the slow path on CPU (that is why the
+    # plane caches views); in-jit it compiles once and fuses with training.
+    return _train_launch.__wrapped__(
+        bank[sel], x_all, y_all, mask_all, gather, lr, epochs, head,
+        spec=spec, max_epochs=max_epochs,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("spec",))
 def _eval_launch(mat, x, y, mask, *, spec: FlattenSpec):
     return mlp.fleet_evaluate(jax.vmap(spec._unflatten)(mat), x, y, mask)
 
 
 @functools.partial(jax.jit, static_argnames=("spec", "num_classes"))
-def _feedback_launch(mat, x_all, mask_all, gather, *, spec: FlattenSpec, num_classes: int):
+def _feedback_launch(bank, sel, x_all, mask_all, gather, *, spec: FlattenSpec, num_classes: int):
+    # a probe sweep pairs hundreds of members against a handful of DISTINCT
+    # centers: the (pairs, dim) probe matrix is expanded from the small
+    # center bank inside the launch, never materialized eagerly
+    mat = bank[sel]
     x, mask = x_all[gather], mask_all[gather]
     return mlp.fleet_predict_distributions(
         jax.vmap(spec._unflatten)(mat), x, mask, num_classes
@@ -91,16 +108,44 @@ def _pad_rows(arr: np.ndarray, n: int) -> np.ndarray:
 
 
 class ClientFleet:
-    """Batched state + fused launches for a list of :class:`SimClient`s."""
+    """Batched state + fused launches for a list of :class:`SimClient`s.
 
-    def __init__(self, clients: Sequence[Any], template: PyTree):
+    With ``mesh`` (or the ``REPRO_FLEET_MESH`` env knob), the fleet's
+    client-model plane AND its ``(clients, n, dim)`` data tensors place
+    over the mesh's ``plane`` (row) axis — batched training/eval launches
+    then shard over simulated devices the same way the server plane's
+    kernels already do, instead of pinning the whole fleet's models and
+    datasets to one accelerator. Per-client arithmetic is unchanged (the
+    launches are client-wise vmaps), so trajectories do not depend on the
+    mesh."""
+
+    def __init__(self, clients: Sequence[Any], template: PyTree, *, mesh: Any | None = None):
         self.clients = list(clients)
         self.ids = [c.client_id for c in self.clients]
         self.index = {cid: i for i, cid in enumerate(self.ids)}
         K = len(self.clients)
         self.num_classes = self.clients[0].num_classes
         self.spec = flatten_spec(template)
-        self.plane = ParameterPlane(template, capacity=2 * K)
+        if mesh is None:
+            from repro.launch.mesh import fleet_mesh_from_env
+
+            mesh = fleet_mesh_from_env()
+        elif mesh is False:
+            mesh = None
+        if mesh is not None and K % mesh.shape["plane"] != 0:
+            # the (clients, n, dim) tensors place with an eager device_put,
+            # which (unlike jit outputs) cannot pad a non-divisible leading
+            # dim — a fleet that does not divide the row shards runs
+            # single-device, like the un-meshed default
+            mesh = None
+        self.mesh = mesh
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+
+            self._row_sharding = NamedSharding(mesh, PartitionSpec("plane", *(None,) * 2))
+            self._vec_sharding = NamedSharding(mesh, PartitionSpec("plane", None))
+            self._replicated = NamedSharding(mesh, PartitionSpec())
+        self.plane = ParameterPlane(template, capacity=2 * K, mesh=mesh)
         self._model_row = [self.plane.alloc() for _ in range(K)]
         self._eval_row = [self.plane.alloc() for _ in range(K)]
         self._has_model = [False] * K
@@ -120,34 +165,50 @@ class ClientFleet:
         self.launches = 0  # fused launches issued (bench introspection)
 
     # ----------------------------------------------------------- data plane
+    def _shard_clients(self, x: jax.Array) -> jax.Array:
+        """Place a (clients, ...) tensor sharded over the fleet mesh's row
+        axis (no-op without a mesh)."""
+        if self.mesh is None:
+            return x
+        sh = self._row_sharding if x.ndim == 3 else self._vec_sharding
+        return jax.device_put(x, sh)
+
+    def _rep(self, x) -> jax.Array:
+        """Replicate a small launch operand (a stacked model matrix, gather
+        indices, per-row hyperparams) over the fleet mesh so it can share a
+        jit with the client-sharded data tensors (no-op without a mesh)."""
+        if self.mesh is None:
+            return jnp.asarray(x)
+        return jax.device_put(jnp.asarray(x), self._replicated)
+
     def _build_data(self) -> None:
         """(Re)pad every client's train/test split into the batched device
         tensors + validity masks, and cache the true label histograms."""
         self._data_ref = [c.data for c in self.clients]
         n_tr = max(len(c.data.y_train) for c in self.clients)
         n_te = max(len(c.data.y_test) for c in self.clients)
-        self.x_train = jnp.asarray(
+        self.x_train = self._shard_clients(jnp.asarray(
             np.stack([_pad_rows(np.asarray(c.data.x_train, np.float32), n_tr) for c in self.clients])
-        )
-        self.y_train = jnp.asarray(
+        ))
+        self.y_train = self._shard_clients(jnp.asarray(
             np.stack([_pad_rows(np.asarray(c.data.y_train, np.int32), n_tr) for c in self.clients])
-        )
-        self.train_mask = jnp.asarray(
+        ))
+        self.train_mask = self._shard_clients(jnp.asarray(
             np.stack([
                 _pad_rows(np.ones(len(c.data.y_train), np.float32), n_tr) for c in self.clients
             ])
-        )
-        self.x_test = jnp.asarray(
+        ))
+        self.x_test = self._shard_clients(jnp.asarray(
             np.stack([_pad_rows(np.asarray(c.data.x_test, np.float32), n_te) for c in self.clients])
-        )
-        self.y_test = jnp.asarray(
+        ))
+        self.y_test = self._shard_clients(jnp.asarray(
             np.stack([_pad_rows(np.asarray(c.data.y_test, np.int32), n_te) for c in self.clients])
-        )
-        self.test_mask = jnp.asarray(
+        ))
+        self.test_mask = self._shard_clients(jnp.asarray(
             np.stack([
                 _pad_rows(np.ones(len(c.data.y_test), np.float32), n_te) for c in self.clients
             ])
-        )
+        ))
         self.f_true = np.stack([
             c.data.label_histogram(self.num_classes).astype(np.float32) for c in self.clients
         ])
@@ -190,6 +251,24 @@ class ClientFleet:
         self._has_model[i] = True
         self._model_ver[i] += 1
 
+    def set_models(self, cids: Sequence[Any], params_list: Sequence[PyTree]) -> None:
+        """Install a batch of downlinked models in one staged write: a
+        broadcast's fan-out (N downlinks of the SAME center object landing
+        at the same virtual time) costs one cached flatten and one
+        ``write_rows`` staging entry instead of N row stagings. Duplicate
+        clients keep the LAST entry, matching sequential ``set_model``
+        overwrite order."""
+        latest: dict[int, PyTree] = {}
+        for cid, p in zip(cids, params_list):
+            latest[self.index[cid]] = p
+        rows, vecs = [], []
+        for i, p in latest.items():
+            rows.append(self._model_row[i])
+            vecs.append(self._vec_of(p))
+            self._has_model[i] = True
+            self._model_ver[i] += 1
+        self.plane.write_rows(rows, jnp.stack(vecs))
+
     def model_vec(self, cid) -> jax.Array:
         i = self.index[cid]
         if not self._has_model[i]:
@@ -206,31 +285,41 @@ class ClientFleet:
         head = np.asarray([1.0 if c.partial_finetune else 0.0 for c in cs], np.float32)
         return lr, epochs, head
 
-    def _train(self, idx: np.ndarray, mat: jax.Array, lr, epochs, head):
-        """Shared padded launch: returns device (S, dim) vecs + (S,) losses."""
+    def _train(self, idx: np.ndarray, mat: jax.Array | None, lr, epochs, head, *,
+               bank: jax.Array | None = None):
+        """Shared padded launch: returns device (S, dim) vecs + (S,) losses.
+        ``mat`` is an explicit (S, dim) model matrix; alternatively pass
+        ``bank`` (the full model-row view) and the rows ``idx`` select are
+        gathered inside the launch."""
         self._sync_data()
         S = len(idx)
         P = _pow2(S)
         if P != S:
             idx = np.concatenate([idx, np.full(P - S, idx[0])])
-            mat = jnp.concatenate([mat, jnp.broadcast_to(mat[:1], (P - S, mat.shape[1]))])
+            if mat is not None:
+                mat = jnp.concatenate([mat, jnp.broadcast_to(mat[:1], (P - S, mat.shape[1]))])
             lr = np.concatenate([lr, np.zeros(P - S, np.float32)])
             epochs = np.concatenate([epochs, np.zeros(P - S, np.int32)])  # padded rows train 0 epochs
             head = np.concatenate([head, np.zeros(P - S, np.float32)])
         max_epochs = int(epochs.max()) if len(epochs) else 0
         self.launches += 1
-        vecs, losses = _train_launch(
-            mat,
+        args = (
             self.x_train,
             self.y_train,
             self.train_mask,
-            jnp.asarray(idx),
-            jnp.asarray(lr),
-            jnp.asarray(epochs),
-            jnp.asarray(head),
-            spec=self.spec,
-            max_epochs=max_epochs,
+            self._rep(idx),
+            self._rep(lr),
+            self._rep(epochs),
+            self._rep(head),
         )
+        if bank is not None:
+            vecs, losses = _train_launch_bank(
+                self._rep(bank), self._rep(idx), *args, spec=self.spec, max_epochs=max_epochs
+            )
+        else:
+            vecs, losses = _train_launch(
+                self._rep(mat), *args, spec=self.spec, max_epochs=max_epochs
+            )
         return vecs[:S], losses[:S]
 
     def train_cohort(
@@ -268,6 +357,33 @@ class ClientFleet:
         self._model_ver[i] += 1
         return self.spec.unflatten(vec), losses[0]
 
+    def train_rows(self, cids: Sequence[Any]) -> tuple[list[PyTree], np.ndarray]:
+        """Row-sliced BATCH of the async path: N concurrent ``upload_start``
+        events become one fused launch. Every client trains from (and
+        writes back) its own model row — exactly N :meth:`train_client`
+        calls' arithmetic, since the rows are mutually independent — and
+        the trained models come back as host-side numpy-view pytrees plus
+        the (N,) losses. ``cids`` must be distinct (one in-flight local
+        round per client, which the event loop guarantees)."""
+        idx = np.asarray([self.index[c] for c in cids])
+        for c in cids:
+            if not self._has_model[self.index[c]]:
+                raise ValueError(f"client {c} has no model set")
+        # the model-row bank is a hot cached view (downlink writes patch it
+        # incrementally); the batch's rows are gathered from it inside the
+        # launch — an eager scattered-row gather per window is the slow
+        # path on CPU
+        bank = self.plane.rows(tuple(self._model_row))
+        vecs, losses = self._train(idx, None, *self._train_specs(cids), bank=bank)
+        self.plane.write_rows([self._model_row[i] for i in idx], vecs)
+        for i in idx:
+            self._has_model[i] = True
+            self._model_ver[i] += 1
+        vecs_np, losses_np = jax.device_get((vecs, losses))
+        vecs_np = np.asarray(vecs_np)
+        vecs_np.flags.writeable = False  # leaves are views: freeze like train_cohort
+        return [self.to_pytree_np(v) for v in vecs_np], losses_np
+
     # ---------------------------------------------------------- evaluation
     def evaluate_fleet(self, params_list: Sequence[PyTree | None]) -> np.ndarray:
         """(K,) accuracies in fleet order, one launch. ``params_list[i]`` is
@@ -297,7 +413,9 @@ class ClientFleet:
             # one bulk staging entry for the whole refresh (a broadcast can
             # change most of the fleet's eval params in one tick)
             plane.write_rows(refresh_rows, jnp.stack(refresh_vecs))
-        mat = plane.rows(tuple(self._eval_row))  # cached view, patched in place
+        # cached view, patched in place (mesh-replicated under a fleet mesh
+        # so it can share the launch with the client-sharded data tensors)
+        mat = plane.rows(tuple(self._eval_row), on_mesh=self.mesh is not None)
         self.launches += 1
         accs = np.asarray(
             _eval_launch(mat, self.x_test, self.y_test, self.test_mask, spec=self.spec)
@@ -315,16 +433,30 @@ class ClientFleet:
         kernel consumes — a drop-in for ``EchoPFLServer.feedback_batch_fn``."""
         self._sync_data()
         idx = np.asarray([self.index[m] for m, _ in pairs])
-        mat = jnp.stack([self._vec_of(center) for _, center in pairs])
+        # distinct centers only (a sweep probes every member against the
+        # same few cluster centers): stack the small bank, expand in-launch
+        bank_ids: dict[int, int] = {}
+        bank_vecs: list[jax.Array] = []
+        sel = np.empty(len(pairs), np.int32)
+        for k, (_, center) in enumerate(pairs):
+            key = id(center)
+            slot = bank_ids.get(key)
+            if slot is None:
+                slot = bank_ids[key] = len(bank_vecs)
+                bank_vecs.append(self._vec_of(center))
+            sel[k] = slot
+        B = _pow2(len(bank_vecs))  # pow2-padded bank: O(log centers) jit cache
+        bank_vecs += [bank_vecs[0]] * (B - len(bank_vecs))
+        bank = jnp.stack(bank_vecs)
         M = len(pairs)
         P = _pow2(M)
         gather = idx
         if P != M:
             gather = np.concatenate([idx, np.full(P - M, idx[0])])
-            mat = jnp.concatenate([mat, jnp.broadcast_to(mat[:1], (P - M, mat.shape[1]))])
+            sel = np.concatenate([sel, np.full(P - M, sel[0], np.int32)])
         self.launches += 1
         f_pred, s_soft = _feedback_launch(
-            mat, self.x_train, self.train_mask, jnp.asarray(gather),
+            self._rep(bank), self._rep(sel), self.x_train, self.train_mask, self._rep(gather),
             spec=self.spec, num_classes=self.num_classes,
         )
         f_pred, s_soft = jax.device_get((f_pred[:M], s_soft[:M]))

@@ -38,6 +38,17 @@ class NetworkModel:
         self._down_series[int(t // self.bin_seconds)] += nbytes
         return nbytes / self.downstream_bps
 
+    def download_bulk(self, nbytes: int, count: int, t: float) -> float:
+        """Bill ``count`` equal-size downloads starting at ``t`` in one call
+        (a broadcast's whole fan-out): byte totals, event counts, and the
+        per-bin series land exactly as ``count`` ``download`` calls would
+        (the per-bin sum adds integer byte counts, exact in float64), and
+        the shared transfer duration is returned once."""
+        self.down_bytes += nbytes * count
+        self.down_events += count
+        self._down_series[int(t // self.bin_seconds)] += nbytes * count
+        return nbytes / self.downstream_bps
+
     def peak(self, direction: str = "down") -> float:
         series = self._down_series if direction == "down" else self._up_series
         return max(series.values(), default=0.0)

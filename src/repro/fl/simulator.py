@@ -29,10 +29,20 @@ PyTree = Any
 
 
 def default_client_backend() -> str:
-    """``REPRO_CLIENT`` knob: ``loop`` (per-client dispatches, the seed
-    path — kept for parity) or ``fleet`` (batched launches via
-    :mod:`repro.fl.fleet`)."""
-    return os.environ.get("REPRO_CLIENT", "loop").lower()
+    """``REPRO_CLIENT`` knob: ``fleet`` (batched launches via
+    :mod:`repro.fl.fleet` — the default since the CI soak) or ``loop``
+    (per-client dispatches, the seed path — kept as the parity leg)."""
+    return os.environ.get("REPRO_CLIENT", "fleet").lower()
+
+
+def default_async_coalesce() -> float:
+    """``REPRO_ASYNC_COALESCE`` knob: virtual-time window (seconds) for
+    coalescing concurrent async events into batched launches. ``off`` /
+    ``0`` / unset keeps the per-event loop (the parity default)."""
+    spec = os.environ.get("REPRO_ASYNC_COALESCE", "off").strip().lower()
+    if spec in ("", "0", "off", "none", "no"):
+        return 0.0
+    return float(spec)
 
 
 @dataclasses.dataclass
@@ -120,6 +130,7 @@ class Simulator:
         seed: int = 0,
         churn: dict[Any, list[tuple[float, float]]] | None = None,
         client_backend: str | None = None,
+        coalesce_window: float | None = None,
     ):
         self.clients = {c.client_id: c for c in clients}
         self.strategy = strategy
@@ -134,6 +145,10 @@ class Simulator:
             raise ValueError(
                 f"REPRO_CLIENT backend must be loop|fleet, got {self.client_backend}"
             )
+        self.coalesce_window = (
+            float(coalesce_window) if coalesce_window is not None else default_async_coalesce()
+        )
+        self.coalesced_groups: dict[str, list[int]] = {}  # kind -> group sizes (bench introspection)
         self._fleet = None  # built lazily from the first initial model
         # elastic membership: {client: [(t_offline, t_back), ...]} — a device
         # that would start local training inside an offline window instead
@@ -237,15 +252,11 @@ class Simulator:
         )
 
     # ------------------------------------------------------------ async run
-    def run_async(self, *, max_time: float = 3600.0, max_uploads: int | None = None) -> SimReport:
-        """Event loop for asynchronous strategies (EchoPFL, FedAsyn, FedSEA)."""
+    def _init_async_events(self, push) -> None:
+        """Initial broadcast of the seed model + first tick — shared by the
+        per-event and coalesced loops so their event streams start
+        identically (the degenerate-window bitwise parity depends on it)."""
         strat = self.strategy
-        events: list = []  # (time, seq, kind, payload)
-
-        def push(t, kind, payload):
-            heapq.heappush(events, (t, next(self._counter), kind, payload))
-
-        # initial broadcast of the seed model
         init = strat.initial_models(sorted(self.clients))
         nbytes = model_bytes(next(iter(init.values())))
         self._ensure_fleet(next(iter(init.values())))
@@ -258,6 +269,26 @@ class Simulator:
         if getattr(strat, "tick_interval", None):
             push(strat.tick_interval, "tick", None)
 
+    def run_async(self, *, max_time: float = 3600.0, max_uploads: int | None = None) -> SimReport:
+        """Event loop for asynchronous strategies (EchoPFL, FedAsyn, FedSEA).
+
+        With a coalescing window (``REPRO_ASYNC_COALESCE`` / the
+        ``coalesce_window`` constructor argument), all events inside one
+        virtual-time window are popped together and processed as
+        kind-batched launches (:meth:`_run_async_coalesced`); the default
+        (window 0) is this per-event loop, byte-for-byte the parity
+        baseline."""
+        if self.coalesce_window > 0:
+            return self._run_async_coalesced(
+                self.coalesce_window, max_time=max_time, max_uploads=max_uploads
+            )
+        strat = self.strategy
+        events: list = []  # (time, seq, kind, payload)
+
+        def push(t, kind, payload):
+            heapq.heappush(events, (t, next(self._counter), kind, payload))
+
+        self._init_async_events(push)
         next_eval = self.eval_interval
         uploads = 0
         t = 0.0
@@ -321,6 +352,213 @@ class Simulator:
         if self.churn:
             extra["churn_delays"] = self.churn_delays
         return self._report(t, extra)
+
+    # ------------------------------------------------- coalesced async run
+    def _run_async_coalesced(
+        self, window: float, *, max_time: float, max_uploads: int | None
+    ) -> SimReport:
+        """Event-coalesced async loop: the paper's "aggregate as updates
+        arrive" server, without paying one Python/jit dispatch cycle per
+        arrival. All events whose virtual times fall in one ``window`` are
+        popped together and bucketed by kind, and each bucket is ONE
+        batched operation: N ``downlink`` events one staged model write, N
+        ``upload_start`` events one row-sliced fleet training launch, N
+        ``upload_done`` events one :meth:`EchoPFLServer.handle_uploads`
+        ingest (phase order downlink -> train -> ingest, the causal order
+        of one server tick). Every event keeps its own timestamp for
+        billing and follow-up scheduling, events inside a bucket process in
+        event order, and a window never crosses an eval tick, a strategy
+        tick, the horizon, or the upload cap.
+
+        Semantics: a window is one superstep of concurrently-arriving
+        events — messages *generated* inside it (an ingest's downlinks, a
+        training's arrival) deliver when their own timestamps pop, i.e. at
+        the next window. The per-event loop is the ``window -> 0`` limit:
+        with one event per window the phases are trivially the per-event
+        order and the trajectories are bitwise-identical (the parity suite
+        asserts exactly this, on both kernel backends); at real windows the
+        virtual-time trajectory and per-upload billing are unchanged while
+        model values stay allclose — concurrent devices simply no longer
+        see downlinks that landed mid-window retroactively rebasing the
+        training round they had already finished. Compute times draw from
+        the shared device RNG at collection time, in global event order,
+        so the draw stream matches the per-event loop's except where churn
+        interleaves a resume with an arrival that was *generated* in the
+        same window (delivered next superstep): only then can virtual
+        times shift."""
+        strat = self.strategy
+        events: list = []  # (time, seq, kind, payload)
+
+        def push(t, kind, payload):
+            heapq.heappush(events, (t, next(self._counter), kind, payload))
+
+        self._init_async_events(push)
+        self.coalesced_groups = {}  # fresh introspection per run
+
+        def stash(tn, kn, pn):
+            """Draw from the shared device RNG at COLLECTION time, in global
+            event order: churn resumes (upload_start) and next-round
+            schedules (upload_done) both call ``compute_time`` on the one
+            generator every client's ``round_time_fn`` closes over, and the
+            phase processing below reorders events by kind — drawing there
+            would permute the stream relative to the per-event loop. The
+            pre-drawn values ride the bucket entries."""
+            if kn == "upload_start":
+                t_on = self._next_online(pn, tn)
+                if t_on > tn:  # device offline: resume when it rejoins
+                    return t_on + self.clients[pn].compute_time()
+                return None
+            if kn == "upload_done":
+                return self.clients[pn[0]].compute_time()
+            return None
+
+        next_eval = self.eval_interval
+        uploads = 0
+        t = 0.0
+        while events:
+            t0, _, kind, payload = heapq.heappop(events)
+            if t0 > max_time:
+                t = max_time
+                break
+            t = t0
+            while t >= next_eval:
+                self._evaluate(next_eval)
+                next_eval += self.eval_interval
+
+            if kind == "tick":  # strategy-driven periodic hook (FedSEA sync points)
+                for dl in strat.on_tick(t):
+                    dur = self.net.download(model_bytes(dl.params), t)
+                    push(t + dur, "downlink", dl)
+                if strat.tick_interval:
+                    push(t + strat.tick_interval, "tick", None)
+                continue
+
+            # collect the window and bucket by kind (time order within each)
+            buckets: dict[str, list] = {"downlink": [], "upload_start": [], "upload_done": []}
+            buckets[kind].append((t0, payload, stash(t0, kind, payload)))
+            limit = t0 + window
+            cap = max_uploads - uploads if max_uploads else None
+            ud_seen = 1 if kind == "upload_done" else 0
+            while events and (cap is None or ud_seen < cap):
+                tn, _, kn, pn = events[0]
+                if kn == "tick" or tn >= limit or tn >= next_eval or tn > max_time:
+                    break
+                heapq.heappop(events)
+                buckets[kn].append((tn, pn, stash(tn, kn, pn)))
+                t = tn
+                ud_seen += kn == "upload_done"
+            for kn, group in buckets.items():
+                if group:
+                    self.coalesced_groups.setdefault(kn, []).append(len(group))
+
+            if buckets["downlink"]:
+                self._coalesced_downlinks(buckets["downlink"])
+            if buckets["upload_start"]:
+                self._coalesced_upload_starts(buckets["upload_start"], push)
+            if buckets["upload_done"]:
+                uploads += self._coalesced_upload_dones(buckets["upload_done"], push)
+                if max_uploads and uploads >= max_uploads:
+                    break
+
+        extra = strat.stats() if hasattr(strat, "stats") else {}
+        extra["uploads"] = uploads
+        extra["coalesce_window"] = window
+        if self.churn:
+            extra["churn_delays"] = self.churn_delays
+        return self._report(t, extra)
+
+    def _coalesced_upload_starts(self, group, push) -> None:
+        """One fused training launch for a window of concurrently finishing
+        local rounds (churn settled — and its RNG drawn — at collection
+        time); billing and scheduling run per event in order, so heap
+        tie-breaking sequence numbers match the per-event loop push for
+        push."""
+        ready = [cid for _, cid, resume in group if resume is None]
+        trained: dict[Any, Any] = {}
+        if self._fleet is not None and len(ready) > 1:
+            outs, _ = self._fleet.train_rows(ready)
+            trained = dict(zip(ready, outs))
+        for ti, cid, resume in group:
+            if resume is not None:  # device was offline: resumes when back
+                push(resume, "upload_start", cid)
+                continue
+            c = self.clients[cid]
+            if cid in trained:
+                new_params = trained[cid]
+            elif self._fleet is not None:
+                new_params, _ = self._fleet.train_client(cid)
+            else:
+                new_params, _ = c.local_train()
+            c.model = new_params
+            dur = self.net.upload(model_bytes(new_params), ti)
+            push(ti + dur, "upload_done", (cid, new_params, c.base_version))
+
+    def _coalesced_upload_dones(self, group, push) -> int:
+        """One batched server ingest for a window of arrivals; downlinks
+        and the next local rounds are billed/scheduled per event, in order."""
+        strat = self.strategy
+        batch = [
+            (cid, params, bv, self.clients[cid].data.n, ti)
+            for ti, (cid, params, bv), _ in group
+        ]
+        if len(batch) > 1 and hasattr(strat, "handle_uploads"):
+            downlinks_per = strat.handle_uploads(batch)
+        else:
+            downlinks_per = [strat.handle_upload(*b) for b in batch]
+        for (ti, (cid, _params, _bv), next_compute), dls in zip(group, downlinks_per):
+            # every downlink of one ingest carries a whole model (unicast
+            # and echo broadcast alike), so the fan-out shares one wire
+            # size and one transfer duration: bill it in one call and ship
+            # it as ONE batch event instead of len(fan-out) heap entries —
+            # the per-downlink Python (push/pop/billing) is what dominates
+            # the echo at fleet scale
+            run: list = []
+            run_obj, run_nb = None, 0
+            for dl in dls:
+                if run and dl.params is not run_obj:  # a broadcast fans one object
+                    nb = model_bytes(dl.params)
+                    if nb != run_nb:
+                        dur = self.net.download_bulk(run_nb, len(run), ti)
+                        push(ti + dur, "downlink", run)
+                        run = []
+                    run_obj, run_nb = dl.params, nb
+                elif not run:
+                    run_obj, run_nb = dl.params, model_bytes(dl.params)
+                run.append(dl)
+            if run:
+                dur = self.net.download_bulk(run_nb, len(run), ti)
+                push(ti + dur, "downlink", run)
+            # next local round: duration pre-drawn at collection time
+            push(ti + next_compute, "upload_start", cid)
+        return len(batch)
+
+    def _coalesced_downlinks(self, group) -> None:
+        """Apply a window of downlinks (payloads may be single
+        :class:`Downlink` objects or whole fan-out batches): the fleet's
+        model rows take one staged batch write, client protocol state
+        updates per downlink in delivery order."""
+        strat = self.strategy
+        flat: list = []
+        for _ti, payload, _ in group:
+            flat.extend(payload) if isinstance(payload, list) else flat.append(payload)
+        batched_rows = self._fleet is not None and len(flat) > 1
+        if batched_rows:
+            self._fleet.set_models(
+                [dl.client_id for dl in flat], [dl.params for dl in flat]
+            )
+        has_clustering = hasattr(strat, "clustering")
+        for dl in flat:
+            c = self.clients[dl.client_id]
+            if batched_rows:
+                c.model = dl.params  # row already staged by set_models
+            else:
+                self._set_model(c, dl.params)
+            c.base_version = dl.version
+            c.cluster_id = dl.cluster_id
+            if has_clustering and dl.cluster_id in strat.clustering.clusters:
+                c.partial_finetune = (
+                    dl.client_id in strat.clustering.clusters[dl.cluster_id].partial_finetune
+                )
 
     # ------------------------------------------------------------- sync run
     def run_sync(self, *, rounds: int = 50, max_time: float | None = None) -> SimReport:

@@ -30,7 +30,11 @@ def _select_lerp_kernel(idx_ref, c_ref, u_ref, o_ref, *, beta: float):
     del idx_ref  # consumed by the index maps
     c = c_ref[...].astype(jnp.float32)
     u = u_ref[...].astype(jnp.float32)
-    o_ref[...] = (1.0 - beta) * c + beta * u
+    # two-op form pinned (no FMA contraction): the blend must emit the same
+    # bits as plane.lerp_vec and the coalesced ingest scan, whatever fusion
+    # context this kernel lowers in (see assign_and_lerp_ref's rationale)
+    m1, m2 = jax.lax.optimization_barrier(((1.0 - beta) * c, beta * u))
+    o_ref[...] = m1 + m2
 
 
 def _select_lerp(

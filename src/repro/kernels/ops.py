@@ -347,6 +347,91 @@ def assign_and_lerp(u, centers, beta, *, mesh=None, axis="plane"):
     return _assign_lerp_single(u, centers, beta)
 
 
+@functools.partial(jax.jit, static_argnames=("beta", "switch_margin"))
+def _ingest_chain_jit(U, centers, bcast, num_centers, prev_idx, forced_idx, valid, beta, switch_margin):
+    C = centers.shape[0]
+    # padded center rows (C is pow2-padded so the jit cache does not grow a
+    # new entry every time a cluster expands or merges) can never win: the
+    # per-row distances are computed as usual, then masked to +inf. The
+    # real rows' distances are untouched, so decisions stay bitwise.
+    row_valid = jnp.arange(C) < num_centers
+
+    def step(cmat, inp):
+        u, prev, forced, ok = inp
+        # Optimization barriers fence each sub-expression into the same
+        # isolated form the per-event path lowers as its own jit (the
+        # assign kernel, plane.lerp_vec, plane.l1_vec): without them XLA
+        # fuses/contracts across the scan body and the blends and L1 stats
+        # drift from the sequential trajectory by an ulp — enough to flip a
+        # downstream RNN broadcast decision. Bitwise parity is the contract.
+        # _l1_local: the exact Eq. 1 arithmetic of the active backend, the
+        # same dispatch rule assign_and_lerp feeds its argmin
+        u, cmat_in = jax.lax.optimization_barrier((u, cmat))
+        dists = jax.lax.optimization_barrier(_l1_local(u, cmat_in))
+        dists = jnp.where(row_valid, dists, jnp.float32(jnp.inf))
+        amin = jnp.argmin(dists).astype(jnp.int32)  # first-index ties, like np.argmin
+        has_prev = prev >= 0
+        d_prev = jnp.where(has_prev, dists[jnp.clip(prev, 0, C - 1)], jnp.float32(jnp.inf))
+        veto = has_prev & (prev != amin) & (dists[amin] > (1.0 - switch_margin) * d_prev)
+        cid = jnp.where(forced >= 0, forced, jnp.where(veto, prev, amin)).astype(jnp.int32)
+        c_old = jax.lax.optimization_barrier(cmat_in[cid])
+        # the canonical blend: every per-event flavor (the fused assign
+        # kernel's winner blend, plane.lerp_row's veto/forced lerp) emits
+        # this exact folded-beta, fenced two-op expression, so ONE form here
+        # covers them all — no select, whose operands XLA is free to
+        # re-derive with contracted arithmetic when it sinks the pick into
+        # the surrounding fusion
+        m1, m2 = jax.lax.optimization_barrier(
+            ((1.0 - beta) * c_old, beta * u.astype(jnp.float32))
+        )
+        c_new = jax.lax.optimization_barrier(m1 + m2)
+        b_row = jax.lax.optimization_barrier(bcast[cid])
+        change = jnp.sum(jnp.abs(c_new - c_old))
+        gap_before = jnp.sum(jnp.abs(c_old - b_row))
+        gap_after = jnp.sum(jnp.abs(c_new - b_row))
+        cmat = jnp.where(ok, cmat.at[cid].set(c_new), cmat)
+        return cmat, (cid, c_new, change, gap_before, gap_after)
+
+    _, outs = jax.lax.scan(step, centers.astype(jnp.float32), (U, prev_idx, forced_idx, valid))
+    return outs
+
+
+def ingest_chain(U, centers, bcast, prev_idx, forced_idx, valid, *, beta,
+                 switch_margin=0.1, num_centers=None):
+    """Sequential-equivalent batched server ingest: one launch scanning the
+    fused assign+lerp over a window of concurrently-arrived uploads.
+
+    Per step ``j`` (in event order) against the LIVE center matrix — each
+    step sees every earlier step's blend, exactly like N sequential
+    ``handle_upload`` calls:
+
+      * Eq. 1 distances + argmin via the backend assign kernel,
+      * host-identical hysteresis (``switch_margin``) with per-upload
+        ``prev_idx`` (-1 = first upload) and ``forced_idx`` (>= 0 pins a
+        partial-finetune member to its cluster, skipping the argmin),
+      * the mixed-rate blend written into the carried center matrix,
+      * the predictor statistics the per-event path reads back per upload:
+        L1 change of the blended center and its gap to the broadcast
+        anchor before/after (``bcast`` is the window-start anchor matrix;
+        the caller recomputes the gaps of uploads that land after an
+        intra-window broadcast, which moves the anchor).
+
+    Returns per-step ``(cid (S,), blended (S, dim), change (S,),
+    gap_before (S,), gap_after (S,))``; rows where ``valid`` is False leave
+    the carried centers untouched and their outputs are ignored. ``U`` must
+    be pre-padded by the caller (pad rows invalid), and ``centers``/
+    ``bcast`` may carry zero-padding rows above ``num_centers`` (a traced
+    count, masked to +inf distance) — so the jit cache stays O(log window)
+    x O(log clusters)."""
+    C = centers.shape[0]
+    return _ingest_chain_jit(
+        jnp.asarray(U), centers, bcast,
+        jnp.int32(C if num_centers is None else num_centers),
+        jnp.asarray(prev_idx, jnp.int32), jnp.asarray(forced_idx, jnp.int32),
+        jnp.asarray(valid, jnp.bool_), beta, switch_margin,
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("num_segments",))
 def _chi2_all_single(f_pred, f_true, s_soft, seg_ids, num_segments):
     onehot = (seg_ids[:, None] == jnp.arange(num_segments)[None, :]).astype(jnp.float32)

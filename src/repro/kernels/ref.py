@@ -72,12 +72,22 @@ def l1_distance_pairwise_ref(xs: jax.Array, centers: jax.Array) -> jax.Array:
 def assign_and_lerp_ref(
     u: jax.Array, centers: jax.Array, beta: float
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """u: (N,), centers: (C, N) -> (dists (C,), argmin idx, blended row)."""
+    """u: (N,), centers: (C, N) -> (dists (C,), argmin idx, blended row).
+
+    The blend's two products are fenced apart so XLA can never contract
+    the mul-add into an FMA: the same expression inlines into contexts of
+    very different sizes (a standalone per-upload jit, the event-coalesced
+    ingest scan), and contraction decisions vary with the surrounding
+    fusion — which would make the blended center's last ulp depend on HOW
+    the upload was dispatched. Batched and per-event server trajectories
+    must be bitwise-identical, so the two-op form is pinned here."""
     dists = l1_distance_ref(u, centers)
     idx = jnp.argmin(dists).astype(jnp.int32)
     best = centers[idx].astype(jnp.float32)
-    blended = (1.0 - beta) * best + beta * u.astype(jnp.float32)
-    return dists, idx, blended
+    m1, m2 = jax.lax.optimization_barrier(
+        ((1.0 - beta) * best, beta * u.astype(jnp.float32))
+    )
+    return dists, idx, m1 + m2
 
 
 def chi2_feedback_segmented_ref(

@@ -55,12 +55,12 @@ def make_plane_mesh(row_shards: int | None = None, *, dim_shards: int = 1) -> ja
     return jax.make_mesh((row_shards, dim_shards), ("plane", "model"))
 
 
-def plane_mesh_from_env() -> jax.sharding.Mesh | None:
-    """Parse ``REPRO_PLANE_MESH``: unset/""/"0"/"off" -> None (single-device
-    plane, the default); "auto" -> all local devices on the "plane" axis;
-    "R" -> exactly R row shards (so "1" is a 1-device mesh, not auto);
-    "RxM" -> R row shards x M dim shards."""
-    spec = os.environ.get("REPRO_PLANE_MESH", "").strip().lower()
+def _mesh_from_spec(spec: str) -> jax.sharding.Mesh | None:
+    """Shared mesh-spec grammar: ""/"0"/"off"/"none" -> None (single-device,
+    the default); "auto" -> all local devices on the "plane" axis; "R" ->
+    exactly R row shards (so "1" is a 1-device mesh, not auto); "RxM" -> R
+    row shards x M dim shards."""
+    spec = spec.strip().lower()
     if spec in ("", "0", "off", "none"):
         return None
     if spec == "auto":
@@ -70,6 +70,19 @@ def plane_mesh_from_env() -> jax.sharding.Mesh | None:
         rows, dims = (int(p) for p in spec.split("x", 1))
         return make_plane_mesh(rows, dim_shards=dims)
     return make_plane_mesh(int(spec))
+
+
+def plane_mesh_from_env() -> jax.sharding.Mesh | None:
+    """Mesh for the *server* parameter plane, from ``REPRO_PLANE_MESH``."""
+    return _mesh_from_spec(os.environ.get("REPRO_PLANE_MESH", ""))
+
+
+def fleet_mesh_from_env() -> jax.sharding.Mesh | None:
+    """Mesh for the *client fleet* engine (its model plane and the batched
+    ``(clients, n, dim)`` data tensors), from ``REPRO_FLEET_MESH``. Same
+    grammar as ``REPRO_PLANE_MESH``; kept separate so server-plane sharding
+    experiments do not silently reshard the simulated devices too."""
+    return _mesh_from_spec(os.environ.get("REPRO_FLEET_MESH", ""))
 
 
 def batch_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

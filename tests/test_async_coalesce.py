@@ -1,0 +1,355 @@
+"""Event-coalesced async pipeline (REPRO_ASYNC_COALESCE): parity of the
+coalesced loop against the per-event loop, sequential-equivalence of the
+batched server ingest (``EchoPFLServer.handle_uploads``), the fused
+ingest-chain kernel, and knob parsing.
+
+This file is part of ci.sh's PARITY_TESTS, so every assertion here runs
+under both kernel backends (REPRO_KERNELS=ref and =pallas): the coalesced
+trajectory claims must not depend on which kernel implementation computes
+the distances and blends.
+"""
+import numpy as np
+import pytest
+
+from repro.core.server import EchoPFLServer
+from repro.fl.experiment import build_clients, build_strategy
+from repro.fl.network import NetworkModel
+from repro.fl.simulator import Simulator, default_async_coalesce
+
+
+def _run(window, *, backend="fleet", strategy="echopfl", seed=3, max_time=420.0,
+         num_clients=6, max_uploads=None, churn=None, **strategy_kw):
+    task, clients, init = build_clients("har", num_clients, seed=seed, samples_per_client=48)
+    strat = build_strategy(strategy, init, clients, seed=seed, **strategy_kw)
+    sim = Simulator(
+        clients, strat, network=NetworkModel(), seed=seed,
+        client_backend=backend, coalesce_window=window, churn=churn,
+    )
+    kw = {"max_time": max_time}
+    if max_uploads:
+        kw["max_uploads"] = max_uploads
+    return sim.run_async(**kw), sim
+
+
+def _assert_bitwise(a, b):
+    """Full report identity: curves, bytes, events, duration, counters."""
+    assert [t for t, _ in a.curve] == [t for t, _ in b.curve]
+    assert [x for _, x in a.curve] == [x for _, x in b.curve]
+    assert (a.up_bytes, a.down_bytes, a.up_events, a.down_events) == (
+        b.up_bytes, b.down_bytes, b.up_events, b.down_events
+    )
+    assert a.duration == b.duration
+    assert a.per_client_acc == b.per_client_acc
+    for key in ("uploads", "clusters", "merges", "expansions", "broadcasts",
+                "rnn_broadcasts", "decisions", "staleness"):
+        if key in a.extra or key in b.extra:
+            assert a.extra.get(key) == b.extra.get(key), key
+
+
+def _assert_window_parity(a, b, acc_atol=0.05):
+    """The window > 0 contract: the virtual-time trajectory, upload counts
+    and uplink billing are exact; model values (hence accuracies and the
+    RNN's broadcast decisions) are allclose, not bitwise — a window is one
+    superstep, and mid-window downlinks no longer retroactively rebase the
+    training rounds that already finished inside it."""
+    assert [t for t, _ in a.curve] == [t for t, _ in b.curve]
+    assert a.duration == b.duration
+    assert a.extra["uploads"] == b.extra["uploads"]
+    assert (a.up_bytes, a.up_events) == (b.up_bytes, b.up_events)
+    assert a.extra["staleness"] == b.extra["staleness"]
+    np.testing.assert_allclose(
+        [x for _, x in a.curve], [x for _, x in b.curve], atol=acc_atol
+    )
+    for cid in a.per_client_acc:
+        np.testing.assert_allclose(a.per_client_acc[cid], b.per_client_acc[cid], atol=acc_atol)
+
+
+# --------------------------------------------------------- simulator parity
+class TestCoalescedLoopParity:
+    def test_degenerate_window_is_bitwise_identical(self):
+        """One event per window: the coalesced loop must replay the
+        per-event loop exactly — times, accuracies, bytes, counters."""
+        r0, _ = _run(0.0)
+        r1, _ = _run(1e-9)
+        _assert_bitwise(r0, r1)
+
+    def test_benchmark_window_trajectory_parity(self):
+        r0, _ = _run(0.0)
+        r2, sim = _run(45.0)
+        _assert_window_parity(r0, r2)
+        # the window actually coalesced: batched arrival groups formed
+        groups = sim.coalesced_groups.get("upload_done", [])
+        assert groups and max(groups) > 1
+
+    def test_loop_and_fleet_backends_agree_under_coalescing(self):
+        """PR 3's loop-vs-fleet parity must survive coalescing: both client
+        backends share the superstep semantics, so their coalesced
+        trajectories match each other exactly in time/bytes and closely in
+        values."""
+        rf, _ = _run(45.0, backend="fleet")
+        rl, _ = _run(45.0, backend="loop")
+        assert [t for t, _ in rf.curve] == [t for t, _ in rl.curve]
+        assert (rf.up_bytes, rf.down_bytes, rf.up_events, rf.down_events) == (
+            rl.up_bytes, rl.down_bytes, rl.up_events, rl.down_events
+        )
+        np.testing.assert_allclose(
+            [x for _, x in rf.curve], [x for _, x in rl.curve], atol=5e-6
+        )
+
+    def test_max_uploads_cap_matches_per_event(self):
+        # degenerate window: the cap cuts at the identical event, bitwise
+        r0, _ = _run(0.0, max_uploads=40, max_time=1e9)
+        r1, _ = _run(1e-9, max_uploads=40, max_time=1e9)
+        _assert_bitwise(r0, r1)
+        assert r0.extra["uploads"] == 40
+        # real window: the ingest cap still lands exactly, at the same
+        # virtual time (in-window generated arrivals deliver next superstep,
+        # so the cap may cut before a couple of in-flight uplinks — billed,
+        # not ingested — that the per-event loop would have ingested)
+        r2, _ = _run(45.0, max_uploads=40, max_time=1e9)
+        assert r2.extra["uploads"] == 40
+        assert r2.duration == r0.duration
+        assert r2.up_events >= r2.extra["uploads"]
+
+    def test_churn_parity_degenerate(self):
+        """Offline windows re-push upload_starts through the coalesced path
+        too; the degenerate window must stay bitwise, churn delays equal."""
+        churn = {0: [(50.0, 260.0)], 3: [(10.0, 500.0)]}
+        r0, _ = _run(0.0, churn=churn)
+        r1, _ = _run(1e-9, churn=churn)
+        _assert_bitwise(r0, r1)
+        assert r0.extra["churn_delays"] == r1.extra["churn_delays"] > 0
+
+    def test_churn_parity_real_window(self):
+        """Churn resumes and next-round schedules draw from ONE shared
+        device RNG. Compute times are pre-drawn at collection time in
+        global event order, so the stream matches the per-event loop's
+        except where a resume interleaves with an arrival GENERATED inside
+        the same window (delivered next superstep) — under churn the
+        virtual-time grid therefore stays on the same eval schedule and
+        the protocol completes equivalently, but upload times may shift by
+        up to a window."""
+        churn = {0: [(50.0, 120.0)], 3: [(10.0, 200.0)]}
+        r0, _ = _run(0.0, churn=churn)
+        r2, _ = _run(45.0, churn=churn)
+        assert [t for t, _ in r0.curve] == [t for t, _ in r2.curve]  # eval grid
+        assert r0.duration == r2.duration
+        assert abs(r0.extra["uploads"] - r2.extra["uploads"]) <= 2
+        assert r2.extra["churn_delays"] > 0
+        # 6 clients x 16 test samples: one shifted broadcast moves a
+        # personalized accuracy by whole 1/16 steps — coarse tolerance
+        np.testing.assert_allclose(
+            [x for _, x in r0.curve], [x for _, x in r2.curve], atol=0.25
+        )
+
+    def test_strategy_without_batched_ingest_falls_back(self):
+        """FedAsyn has no handle_uploads: arrivals in a window ingest
+        per-upload, everything else still coalesces."""
+        r0, _ = _run(0.0, strategy="fedasyn")
+        r1, _ = _run(1e-9, strategy="fedasyn")
+        _assert_bitwise(r0, r1)
+        r2, _ = _run(60.0, strategy="fedasyn")
+        assert [t for t, _ in r0.curve] == [t for t, _ in r2.curve]
+        assert r0.extra["uploads"] == r2.extra["uploads"]
+
+    def test_env_knob_parsing(self, monkeypatch):
+        for spec, want in (("off", 0.0), ("0", 0.0), ("", 0.0), ("none", 0.0),
+                           ("30", 30.0), ("2.5", 2.5)):
+            monkeypatch.setenv("REPRO_ASYNC_COALESCE", spec)
+            assert default_async_coalesce() == want
+        monkeypatch.delenv("REPRO_ASYNC_COALESCE")
+        assert default_async_coalesce() == 0.0
+
+
+# ------------------------------------------------------ batched server ingest
+def _noisy_stream(clients, init, rounds=12, seed=0):
+    rng = np.random.default_rng(seed)
+    stream = []
+    for r in range(rounds):
+        for c in clients:
+            upload = [
+                {k: np.asarray(v) + np.float32(0.05 + 0.01 * r)
+                     * rng.standard_normal(np.shape(v)).astype(np.float32)
+                 for k, v in layer.items()}
+                for layer in init
+            ]
+            stream.append((c.client_id, upload, 0, 48, float(r)))
+    return stream
+
+
+def _build_server(seed=3, **kw):
+    task, clients, init = build_clients("har", 6, seed=seed, samples_per_client=48)
+    strat = build_strategy("echopfl", init, clients, seed=seed, **kw)
+    return clients, init, strat
+
+
+def _payload_vec(params):
+    return np.concatenate([np.ravel(np.asarray(x)) for l in params for x in l.values()])
+
+
+class TestHandleUploadsSequentialEquivalence:
+    def _assert_servers_equal(self, sA, sB, outA, outB):
+        assert sA.clustering.assignment == sB.clustering.assignment
+        for cid in sA.clustering.clusters:
+            ca, cb = sA.clustering.clusters[cid], sB.clustering.clusters[cid]
+            assert ca.version == cb.version
+            if sA.clustering.plane is not None:
+                va = np.asarray(ca._plane.row(ca._row))
+                vb = np.asarray(cb._plane.row(cb._row))
+                assert np.array_equal(va, vb), f"cluster {cid} center diverged"
+        for cid in sA.predictors:
+            assert sA.predictors[cid].records == sB.predictors[cid].records
+            assert sA.predictors[cid].decisions == sB.predictors[cid].decisions
+            assert sA.predictors[cid].broadcasts == sB.predictors[cid].broadcasts
+        assert sA.events == sB.events
+        assert sA.staleness.snapshot() == sB.staleness.snapshot()
+        assert sA.client_versions == sB.client_versions
+        assert len(outA) == len(outB)
+        for a, b in zip(outA, outB):
+            assert [(d.client_id, d.version, d.cluster_id, d.reason) for d in a] == [
+                (d.client_id, d.version, d.cluster_id, d.reason) for d in b
+            ]
+            for da, db in zip(a, b):
+                assert np.array_equal(_payload_vec(da.params), _payload_vec(db.params))
+
+    def test_batched_ingest_is_bitwise_sequential(self):
+        """handle_uploads = N handle_upload calls, exactly: identical
+        centers (bitwise), staleness, predictor records/decisions, events,
+        and downlink payloads — across seeding fallback, intra-batch
+        broadcasts, and refine boundaries (refine_every=20 with batches of
+        6 puts the boundary mid-batch)."""
+        clients, init, sA = _build_server()
+        _, _, sB = _build_server()
+        stream = _noisy_stream(clients, init)
+        outA = [sA.handle_upload(*u) for u in stream]
+        outB = []
+        for i in range(0, len(stream), 6):
+            outB.extend(sB.handle_uploads(stream[i : i + 6]))
+        assert sA._uploads == sB._uploads == len(stream)
+        self._assert_servers_equal(sA, sB, outA, outB)
+
+    def test_duplicate_client_in_batch_splits_segment(self):
+        clients, init, sA = _build_server()
+        _, _, sB = _build_server()
+        stream = _noisy_stream(clients, init, rounds=3)
+        # a batch where client 0 appears twice, with state between
+        dup = stream[:6] + [stream[6]] + stream[7:12]
+        outA = [sA.handle_upload(*u) for u in dup]
+        outB = sB.handle_uploads(dup)
+        self._assert_servers_equal(sA, sB, outA, outB)
+
+    def test_partial_finetune_members_stay_pinned(self):
+        """A pf member's upload must aggregate into its own cluster without
+        an argmin move, batched exactly like sequential."""
+        clients, init, sA = _build_server()
+        _, _, sB = _build_server()
+        stream = _noisy_stream(clients, init, rounds=4)
+        warm = stream[:12]
+        for u in warm:
+            sA.handle_upload(*u)
+        sB.handle_uploads(warm)
+        for s in (sA, sB):  # impose pf mode on two members of cluster 0
+            cl = s.clustering.clusters[0]
+            pinned = sorted(cl.members)[:2]
+            cl.partial_finetune.update(pinned)
+            cl.pf_round = s._refine_round + 10  # not lifted during the test
+        rest = stream[12:30]
+        outA = [sA.handle_upload(*u) for u in rest]
+        outB = sB.handle_uploads(rest)
+        self._assert_servers_equal(sA, sB, outA, outB)
+
+    def test_pytree_backend_falls_back_per_upload(self):
+        clients, init, sA = _build_server(plane_backend="pytree")
+        _, _, sB = _build_server(plane_backend="pytree")
+        stream = _noisy_stream(clients, init, rounds=4)
+        outA = [sA.handle_upload(*u) for u in stream]
+        outB = sB.handle_uploads(stream)
+        self._assert_servers_equal(sA, sB, outA, outB)
+
+    def test_broadcast_disabled(self):
+        clients, init, sA = _build_server(enable_broadcast=False)
+        _, _, sB = _build_server(enable_broadcast=False)
+        stream = _noisy_stream(clients, init, rounds=6)
+        outA = [sA.handle_upload(*u) for u in stream]
+        outB = []
+        for i in range(0, len(stream), 9):
+            outB.extend(sB.handle_uploads(stream[i : i + 9]))
+        self._assert_servers_equal(sA, sB, outA, outB)
+
+
+# ----------------------------------------------------------- ingest chain
+class TestIngestChainKernel:
+    def test_chain_matches_sequential_assign_and_lerp(self, rng):
+        """The fused scan replays N sequential assign+blend steps bitwise:
+        distances against the live (already-blended) centers, argmin with
+        hysteresis, the canonical two-op blend."""
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as K
+
+        dim, C, S, beta, margin = 256, 4, 8, 0.25, 0.1
+        centers = jnp.asarray(rng.standard_normal((C, dim)), jnp.float32)
+        U = jnp.asarray(rng.standard_normal((S, dim)), jnp.float32)
+        prev = [-1, 0, 2, -1, 1, 3, 0, 2]
+        forced = [-1, -1, 1, -1, -1, -1, -1, 3]
+        cids, blended, change, gb, ga = K.ingest_chain(
+            U, centers, centers * 0.9, prev, forced, [True] * S,
+            beta=beta, switch_margin=margin,
+        )
+        cmat = np.asarray(centers, np.float32).copy()
+        bmat = np.asarray(centers * 0.9, np.float32)
+        for j in range(S):
+            dists, _, kern_blend = K.assign_and_lerp(U[j], jnp.asarray(cmat), beta)
+            dists = np.asarray(dists)
+            cid = int(np.argmin(dists))
+            if forced[j] >= 0:
+                cid = forced[j]
+            elif prev[j] >= 0 and prev[j] != cid:
+                if dists[cid] > (1.0 - margin) * dists[prev[j]]:
+                    cid = prev[j]
+            assert int(cids[j]) == cid, j
+            new = np.asarray(kern_blend) if cid == int(np.argmin(dists)) and forced[j] < 0 else None
+            got = np.asarray(blended[j])
+            if new is not None:
+                assert np.array_equal(got, new), j  # winner: the kernel blend
+            np.testing.assert_allclose(
+                float(change[j]), np.abs(got - cmat[cid]).sum(), rtol=1e-6
+            )
+            np.testing.assert_allclose(
+                float(gb[j]), np.abs(cmat[cid] - bmat[cid]).sum(), rtol=1e-6
+            )
+            np.testing.assert_allclose(
+                float(ga[j]), np.abs(got - bmat[cid]).sum(), rtol=1e-6
+            )
+            cmat[cid] = got
+
+    def test_padded_rows_are_inert(self, rng):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as K
+
+        dim, C = 64, 3
+        centers = jnp.asarray(rng.standard_normal((C, dim)), jnp.float32)
+        U = jnp.asarray(rng.standard_normal((4, dim)), jnp.float32)
+        # rows 2..3 invalid: identical outputs for rows 0..1, centers only
+        # advanced by the valid rows
+        full = K.ingest_chain(U[:2], centers, centers, [-1, -1], [-1, -1], [True, True], beta=0.5)
+        padded = K.ingest_chain(U, centers, centers, [-1] * 4, [-1] * 4,
+                                [True, True, False, False], beta=0.5)
+        for a, b in zip(full, padded):
+            assert np.array_equal(np.asarray(a[:2]), np.asarray(b[:2]))
+
+    def test_padded_centers_never_win(self, rng):
+        import jax.numpy as jnp
+
+        from repro.kernels import ops as K
+
+        dim = 64
+        centers = jnp.asarray(rng.standard_normal((2, dim)), jnp.float32)
+        zpad = jnp.zeros((2, dim), jnp.float32)  # pad rows are all-zero
+        u = jnp.zeros((1, dim), jnp.float32)  # nearest to a zero row by construction
+        cids, *_ = K.ingest_chain(
+            u, jnp.concatenate([centers, zpad]), jnp.concatenate([centers, zpad]),
+            [-1], [-1], [True], beta=0.5, num_centers=2,
+        )
+        assert int(cids[0]) < 2

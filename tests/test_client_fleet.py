@@ -171,6 +171,54 @@ class TestFleetEngine:
             fleet.train_client(clients[0].client_id)
         with pytest.raises(ValueError):
             fleet.train_cohort([clients[0].client_id], [None])
+        with pytest.raises(ValueError):
+            fleet.train_rows([clients[0].client_id])
+
+    def test_train_rows_matches_sequential_train_client(self, rng, params):
+        """The coalesced async path's batched row-sliced launch: N clients
+        training from their own model rows in one launch must equal N
+        train_client calls — results, row write-back, version bumps."""
+        clients = _ragged_clients(rng)
+        ids = [c.client_id for c in clients]
+        batched = ClientFleet(clients, params)
+        seq = ClientFleet(clients, params)
+        for f in (batched, seq):
+            for c in clients:
+                f.set_model(c.client_id, params)
+        trees_b, losses_b = batched.train_rows(ids)
+        for cid, tree_b, loss_b in zip(ids, trees_b, losses_b):
+            tree_s, loss_s = seq.train_client(cid)
+            for a, b in zip(jax.tree_util.tree_leaves(tree_s), jax.tree_util.tree_leaves(tree_b)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+            np.testing.assert_allclose(float(loss_b), float(loss_s), rtol=1e-5)
+            np.testing.assert_allclose(
+                np.asarray(batched.model_vec(cid)), np.asarray(seq.model_vec(cid)),
+                rtol=1e-6, atol=1e-7,
+            )
+        # rows advanced: a second batch continues from the trained rows
+        trees_b2, _ = batched.train_rows(ids[:2])
+        tree_s2, _ = seq.train_client(ids[0])
+        for a, b in zip(jax.tree_util.tree_leaves(tree_s2), jax.tree_util.tree_leaves(trees_b2[0])):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+
+    def test_set_models_batches_with_last_write_wins(self, rng, params):
+        clients = _ragged_clients(rng)
+        fleet = ClientFleet(clients, params)
+        other = jax.tree_util.tree_map(lambda x: x + 1.0, params)
+        third = jax.tree_util.tree_map(lambda x: x * 0.5, params)
+        # duplicate client 0: the LAST write must win, like sequential sets
+        fleet.set_models(
+            [clients[0].client_id, clients[1].client_id, clients[0].client_id],
+            [params, other, third],
+        )
+        np.testing.assert_allclose(
+            np.asarray(fleet.model_vec(clients[0].client_id)),
+            np.asarray(fleet.spec.flatten(third)), rtol=1e-7,
+        )
+        np.testing.assert_allclose(
+            np.asarray(fleet.model_vec(clients[1].client_id)),
+            np.asarray(fleet.spec.flatten(other)), rtol=1e-7,
+        )
 
     def test_dataset_replacement_is_picked_up(self, rng, params):
         """Distribution drift (Fig. 18): replacing a SimClient's dataset
@@ -219,6 +267,61 @@ class TestFleetEngine:
         fleet.evaluate_fleet([None] * len(clients))
         accs2 = fleet.evaluate_fleet([None] * len(clients))
         np.testing.assert_allclose(accs2[0], want, atol=1e-6)
+
+
+# -------------------------------------------------------------- fleet mesh
+class TestFleetMesh:
+    def test_env_knob_parsing(self, monkeypatch):
+        from repro.launch.mesh import fleet_mesh_from_env
+
+        monkeypatch.setenv("REPRO_FLEET_MESH", "off")
+        assert fleet_mesh_from_env() is None
+        monkeypatch.delenv("REPRO_FLEET_MESH")
+        assert fleet_mesh_from_env() is None
+        monkeypatch.setenv("REPRO_FLEET_MESH", "1")
+        m = fleet_mesh_from_env()
+        assert m is not None and m.shape["plane"] == 1
+
+    def test_meshed_fleet_matches_single_device(self, rng, params):
+        """With a fleet mesh, the client-model plane and the (clients, n,
+        dim) data tensors shard over the 'plane' axis; every launch's
+        per-client arithmetic is unchanged, so training, eval, and feedback
+        match the single-device fleet."""
+        if len(jax.devices()) < 2:
+            pytest.skip("needs >= 2 devices (ci.sh multi-device leg)")
+        from repro.launch.mesh import make_plane_mesh
+
+        clients = _ragged_clients(rng)  # 4 clients: 2 row shards divide them
+        ids = [c.client_id for c in clients]
+        single = ClientFleet(clients, params, mesh=False)
+        meshed = ClientFleet(clients, params, mesh=make_plane_mesh(2))
+        assert meshed.x_train.sharding.spec[0] == "plane"
+        # a fleet that does not divide the row shards falls back unsharded
+        if len(jax.devices()) >= 8:
+            assert ClientFleet(clients, params, mesh=make_plane_mesh(8)).mesh is None
+        ta, la = single.train_cohort(ids, [params] * len(ids))
+        tb, lb = meshed.train_cohort(ids, [params] * len(ids))
+        for a, b in zip(ta, tb):
+            for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(la, lb, rtol=1e-5, atol=1e-6)
+        for f in (single, meshed):
+            for c in clients:
+                f.set_model(c.client_id, params)
+        np.testing.assert_allclose(
+            single.evaluate_fleet([None] * len(ids)), meshed.evaluate_fleet([None] * len(ids)),
+            atol=1e-6,
+        )
+        pairs = [(cid, params) for cid in ids]
+        fa = single.feedback_many(pairs)
+        fb = meshed.feedback_many(pairs)
+        for x, y in zip(fa, fb):
+            np.testing.assert_allclose(x, y, rtol=1e-5, atol=1e-6)
+        ra, _ = single.train_rows(ids[:3])
+        rb, _ = meshed.train_rows(ids[:3])
+        for a, b in zip(ra, rb):
+            for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+                np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-6)
 
 
 # ------------------------------------------------------ simulator-level parity

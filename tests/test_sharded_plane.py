@@ -196,6 +196,44 @@ class TestShardedPlane:
         np.testing.assert_array_equal(np.asarray(vl), np.asarray(v2))
         assert (tuple(r), "local") in plane._views
 
+    def test_rows_shard_domain_is_row_sharded_and_patched(self, mesh, tiny_params):
+        """The shard-local gather (on_mesh="shard"): a fleet-scale row set
+        read off a mesh-committed plane must land SHARDED over the row axis
+        — never funneled through one local device — and patch incrementally
+        under its own cache key like the other domains."""
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        plane = ParameterPlane(tiny_params, capacity=16, mesh=mesh)
+        r = [plane.alloc(jnp.full((plane.dim,), float(i))) for i in range(8)]
+        want = NamedSharding(mesh, PartitionSpec("plane", None))
+        v1 = plane.rows(tuple(r), on_mesh="shard")
+        assert v1.sharding.is_equivalent_to(want, v1.ndim)
+        assert (tuple(r), "shard") in plane._views
+        plane.write(r[2], jnp.full((plane.dim,), 7.0))
+        v2 = plane.rows(tuple(r), on_mesh="shard")  # patched, still sharded
+        np.testing.assert_array_equal(np.asarray(v2[2]), 7.0)
+        np.testing.assert_array_equal(np.asarray(v2[0]), 0.0)
+        assert v2.sharding.is_equivalent_to(want, v2.ndim)
+        # values equal the local-domain view; uncached take() agrees too
+        np.testing.assert_array_equal(np.asarray(plane.rows(tuple(r))), np.asarray(v2))
+        t = plane.take(tuple(r), on_mesh="shard")
+        assert t.sharding.is_equivalent_to(want, t.ndim)
+        np.testing.assert_array_equal(np.asarray(t), np.asarray(v2))
+        assert (tuple(r), "shard") in plane._views  # take never touches the cache
+
+    def test_sharded_rows_feed_pairwise_kernel_without_localizing(self, mesh, tiny_params):
+        """End to end: a shard-gathered row batch passes straight into the
+        sharded pairwise kernel (ops._to_mesh_rows passes it through) and
+        scores bitwise-identically to the single-device launch."""
+        plane = ParameterPlane(tiny_params, capacity=16, mesh=mesh)
+        rows = [plane.alloc(jnp.asarray(np.random.default_rng(i).standard_normal(plane.dim),
+                                        jnp.float32)) for i in range(8)]
+        centers = jnp.asarray(np.random.default_rng(99).standard_normal((3, plane.dim)), jnp.float32)
+        U_shard = plane.rows(tuple(rows), on_mesh="shard")
+        got = np.asarray(ops.l1_distance_pairwise(U_shard, centers, mesh=mesh, axis="plane"))
+        want = np.asarray(ops.l1_distance_pairwise(plane.rows(tuple(rows)), centers))
+        np.testing.assert_array_equal(got, want)
+
     def test_dim_axis_falls_back_when_not_divisible(self, tiny_params):
         # tiny_params has 187 params: prime-ish, never divisible by a model
         # axis of 2+ — the plane must fall back to row-only sharding
