@@ -16,9 +16,21 @@ Measures async EchoPFL uploads/sec through three server paths:
 The headline speedup is coalesced vs the seed per-event loop — the
 user-visible gain of this round of work (client-plane default flip + event
 coalescing). The on-vs-off ratio *within* the fleet backend is reported
-alongside: it isolates the coalescing layer itself and is Amdahl-bounded
-by work both paths share per upload (the broadcast predictor's serial RNN
-learn/decide, periodic refinement sweeps, evaluation ticks).
+alongside: it isolates the coalescing layer itself. With the batched
+predictor chain (REPRO_PREDICTOR_BATCH, default on) the per-upload RNN
+learn/decide dispatches that used to Amdahl-bound this ratio are fused
+into one launch per window, and segments no longer cut at refinement
+boundaries, so the remaining shared work is refinement sweeps and eval
+ticks only.
+
+The sweep also runs an equal-virtual-time ("fixed horizon") divergence
+probe: both arms share the exact per-upload virtual-time trajectory (the
+event schedule is model-independent), so an N-upload cap is already an
+equal-time comparison — the probe demonstrates this by running both arms
+to the same max_time over a several-times-longer horizon and reporting
+per-arm upload counts and tail accuracy. Any final_acc gap at short caps
+is the superstep time-shift through the transient climb, not a
+divergence: the tails re-converge once past the climb.
 
 Refinement probes every member of every cluster, so its period is scaled
 with fleet size (``refine_every = clients // 4, floor 20``) to keep the
@@ -29,7 +41,7 @@ in every column, so ratios are unaffected.
 trajectory is tracked across PRs.
 
 Usage:
-    python benchmarks/bench_async_coalesce.py [--clients 128,256] [--uploads 800] [--json]
+    python benchmarks/bench_async_coalesce.py [--clients 128,256,512] [--uploads 800] [--json]
 """
 from __future__ import annotations
 
@@ -51,21 +63,24 @@ from repro.fl.network import NetworkModel  # noqa: E402
 from repro.fl.simulator import Simulator  # noqa: E402
 
 
-def _run(n, backend, window, max_uploads, refine_every, seed=0):
+def _run(n, backend, window, max_uploads, refine_every, seed=0, max_time=None):
     task, clients, init = build_clients("har", n, seed=seed)
     strat = build_strategy("echopfl", init, clients, seed=seed)
     strat.refine_every = refine_every
     sim = Simulator(clients, strat, network=NetworkModel(), seed=seed,
                     client_backend=backend, coalesce_window=window)
     t0 = time.perf_counter()
-    rep = sim.run_async(max_time=1e9, max_uploads=max_uploads)
+    rep = sim.run_async(max_time=max_time if max_time is not None else 1e9,
+                        max_uploads=max_uploads)
     dt = time.perf_counter() - t0
     groups = sim.coalesced_groups.get("upload_done", [])
     return {
         "uploads_per_s": rep.extra["uploads"] / dt,
+        "uploads": rep.extra["uploads"],
         "wall_s": dt,
         "final_acc": rep.final_acc,
         "curve": [a for _, a in rep.curve],
+        "end_t": rep.curve[-1][0] if rep.curve else 0.0,
         "mean_arrival_batch": (sum(groups) / len(groups)) if groups else 1.0,
     }
 
@@ -78,10 +93,38 @@ def _arm(n, backend, window, max_uploads, refine_every, reps):
     return best
 
 
-def run(quick: bool = False, clients=(128, 256), uploads: int = 800, window: float = 45.0,
-        reps: int = 2, json_out: bool = False) -> dict:
+def _fixed_horizon_probe(n, window, uploads, refine_every, mult):
+    """Equal-virtual-time divergence probe (accuracy evidence, not perf).
+
+    The coalesced arm runs ``mult``-times longer than the headline cap and
+    its end time becomes the shared horizon H; the per-event arm then runs
+    to ``max_time=H``. Both arms cover the same virtual time span by
+    construction, and because the event schedule is model-independent they
+    land near-identical upload counts — reported so the equal-time claim is
+    checkable from the JSON. The longer horizon puts the transient climb
+    behind the tail, where the superstep time-shift has washed out.
+    """
+    cap = uploads * mult
+    on = _run(n, "fleet", window, cap, refine_every)
+    horizon = on["end_t"]
+    off = _run(n, "fleet", 0.0, cap * 4, refine_every, max_time=horizon)
+    k = max(1, min(len(on["curve"]), len(off["curve"])) // 5)
+    tail_on = sum(on["curve"][-k:]) / k
+    tail_off = sum(off["curve"][-k:]) / k
+    return {
+        "horizon_s": horizon,
+        "uploads": {"off": off["uploads"], "on": on["uploads"]},
+        "final_acc": {"off": off["final_acc"], "on": on["final_acc"]},
+        "final_acc_diff": abs(on["final_acc"] - off["final_acc"]),
+        "tail_mean_acc": {"off": tail_off, "on": tail_on},
+        "tail_mean_acc_diff": abs(tail_on - tail_off),
+    }
+
+
+def run(quick: bool = False, clients=(128, 256, 512), uploads: int = 800, window: float = 45.0,
+        reps: int = 2, json_out: bool = False, fixed_horizon_mult: int = 4) -> dict:
     if quick:
-        clients, uploads, reps = (64,), 300, 1
+        clients, uploads, reps, fixed_horizon_mult = (64,), 300, 1, 0
     rows, per_size = [], {}
     for n in clients:
         refine_every = max(20, n // 4)
@@ -112,6 +155,12 @@ def run(quick: bool = False, clients=(128, 256), uploads: int = 800, window: flo
             "final_acc": {"off": off["final_acc"], "on": on["final_acc"]},
             "final_acc_diff": abs(on["final_acc"] - off["final_acc"]),
         }
+        # Equal-virtual-time divergence evidence at the size where the
+        # short-cap snapshot lands mid-climb (the smallest fleet sees the
+        # fewest rounds per client at a fixed upload cap).
+        if fixed_horizon_mult and n == min(clients):
+            per_size[n]["fixed_horizon"] = _fixed_horizon_probe(
+                n, window, uploads, refine_every, fixed_horizon_mult)
         rows.append({
             "clients": n,
             "loop/per-event": loop["uploads_per_s"],
@@ -143,15 +192,21 @@ def run(quick: bool = False, clients=(128, 256), uploads: int = 800, window: flo
             "speedups_on_vs_off_fleet": {
                 str(n): per_size[n]["speedup_on_vs_off"] for n in per_size
             },
-            "note": "on-vs-off within the fleet backend is Amdahl-bounded by "
-                    "per-upload work both arms share (serial RNN broadcast "
-                    "predictor, refinement sweeps, eval ticks). The parity "
-                    "suite (tests/test_async_coalesce.py) proves bitwise "
+            "note": "REPRO_PREDICTOR_BATCH (default on) fuses the broadcast "
+                    "predictor's per-upload RNN learn/decide into one batched "
+                    "chain launch per window and lets segments stream through "
+                    "refinement boundaries, removing the serial-RNN Amdahl "
+                    "bound on on-vs-off. The parity suite "
+                    "(tests/test_async_coalesce.py) proves bitwise "
                     "trajectories at degenerate windows on both kernel "
                     "backends; at real windows the virtual-time trajectory "
                     "and uplink billing stay exact while accuracy curves "
-                    "time-shift through the transient climb and converge to "
-                    "the same tail (see tail_acc_deviation / final_acc).",
+                    "time-shift through the transient climb. Short-cap "
+                    "final_acc gaps (e.g. 128 clients at 800 uploads ~ 6 "
+                    "rounds/client, mid-climb) are that time-shift, not "
+                    "divergence: the fixed_horizon probe runs both arms to "
+                    "the same virtual time over a longer horizon and their "
+                    "tails re-converge (see by_clients.<n>.fixed_horizon).",
         },
     }
     save_result("async_coalesce", payload)
@@ -165,15 +220,18 @@ def run(quick: bool = False, clients=(128, 256), uploads: int = 800, window: flo
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--clients", default="128,256")
+    ap.add_argument("--clients", default="128,256,512")
     ap.add_argument("--uploads", type=int, default=800)
     ap.add_argument("--window", type=float, default=45.0)
     ap.add_argument("--reps", type=int, default=2)
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--fixed-horizon-mult", type=int, default=4,
+                    help="horizon multiplier for the equal-virtual-time probe (0 disables)")
     ap.add_argument("--json", action="store_true", help="write BENCH_async_coalesce.json")
     args = ap.parse_args()
     run(quick=args.quick, clients=tuple(int(c) for c in args.clients.split(",")),
-        uploads=args.uploads, window=args.window, reps=args.reps, json_out=args.json)
+        uploads=args.uploads, window=args.window, reps=args.reps, json_out=args.json,
+        fixed_horizon_mult=args.fixed_horizon_mult)
 
 
 if __name__ == "__main__":

@@ -29,6 +29,13 @@ echo "=== loop client backend parity (REPRO_CLIENT=loop) ==="
 REPRO_CLIENT=loop python -m pytest -q -p no:cacheprovider -m "not slow" \
     tests/test_client_fleet.py tests/test_server_integration.py tests/test_async_coalesce.py
 
+echo "=== coalesced suite with predictor batching off (REPRO_PREDICTOR_BATCH=0) ==="
+# Serial parity arm: the per-upload RNN learn/decide dispatches stay the
+# reference trajectory the fused predictor-chain launch must match bitwise
+# (the batching-on arm runs in tier-1 and the parity sweeps above).
+REPRO_PREDICTOR_BATCH=0 python -m pytest -q -p no:cacheprovider \
+    tests/test_async_coalesce.py tests/test_broadcast.py
+
 echo "=== sharded plane over 8 simulated devices (REPRO_PLANE_MESH=auto) ==="
 # Forced host-platform device count: the plane/kernel parity suites run with
 # every DynamicClustering defaulting to the row-sharded backend (MIN_ROWS=0

@@ -16,6 +16,7 @@ rules of Sec. 5.2.2 under cluster expansion/merging.
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Any
 
 import jax
@@ -25,6 +26,15 @@ import numpy as np
 PyTree = Any
 HIDDEN = 128
 NUM_LAYERS = 2
+
+
+def predictor_batch_enabled() -> bool:
+    """``REPRO_PREDICTOR_BATCH`` knob: batch the per-cluster predictor
+    learn/decide chains of a coalesced window into one fused launch
+    (default on). ``0`` / ``off`` keeps the per-upload serial dispatches —
+    the parity arm ci.sh exercises."""
+    spec = os.environ.get("REPRO_PREDICTOR_BATCH", "1").strip().lower()
+    return spec not in ("", "0", "off", "none", "no")
 
 
 # ---------------------------------------------------------------- RNN model
@@ -77,6 +87,86 @@ def _rnn_want(params: PyTree, seq: jax.Array) -> jax.Array:
     return jnp.argmax(rnn_logits(params, seq)) == 1
 
 
+# ----------------------------------------------------- batched chain bodies
+# Predictors carry different Top-K window lengths (k = max(top_k, size at
+# creation)), so a batched launch front-pads every sequence to one common
+# length and tells the RNN where the real window starts. Holding h at zero
+# for t < start makes step `start` see exactly the serial initial state, so
+# every arithmetic op on valid steps consumes the same values as the
+# exact-k form — the trajectory stays bitwise-identical (the padded steps
+# contribute exact zeros to the scan-transposed gradient accumulation).
+def _rnn_logits_masked(params: PyTree, seq: jax.Array, start: jax.Array) -> jax.Array:
+    """seq: (T, 1) front-padded records; rows with t < start are padding."""
+    tpos = jnp.arange(seq.shape[0])
+    x = seq
+    for layer in range(NUM_LAYERS):
+        h0 = jnp.zeros((params[f"wh{layer}"].shape[0],))
+
+        def step(h, inp, l=layer):
+            x_t, t = inp
+            h_new = jnp.tanh(x_t @ params[f"wx{l}"] + h @ params[f"wh{l}"] + params[f"b{l}"])
+            h_new = jnp.where(t >= start, h_new, jnp.zeros_like(h_new))
+            return h_new, h_new
+
+        # NOTE: no scan unroll here — unrolling refuses the serial op
+        # schedule (XLA fuses the unrolled bodies differently) and breaks
+        # the bitwise match with rnn_logits that predictor_chain guarantees
+        _, hs = jax.lax.scan(step, h0, (x, tpos))
+        x = hs
+    return hs[-1] @ params["w_out"] + params["b_out"]
+
+
+def _rnn_sgd_masked(
+    params: PyTree, seq: jax.Array, label: jax.Array, lr: jax.Array, start: jax.Array
+) -> PyTree:
+    def loss_fn(p):
+        return -jax.nn.log_softmax(_rnn_logits_masked(p, seq, start))[label]
+
+    _, grads = jax.value_and_grad(loss_fn)(params)
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+
+
+def rnn_chain_step(params: PyTree, pre: jax.Array, post: jax.Array, label: jax.Array,
+                   learn_gate: jax.Array, decide_gate: jax.Array, lr: jax.Array,
+                   start: jax.Array) -> tuple[PyTree, jax.Array]:
+    """One upload's predictor work: gated SGD step on the pre-observe window,
+    then the gated broadcast decision on the post-observe window. The scan
+    body of :func:`repro.kernels.ops.predictor_chain`.
+
+    The gates are ``lax.cond``s, not post-hoc selects: inside a (non-vmapped)
+    scan a cond stays a real conditional, so learn-only steps skip the
+    decision forward, decide-only steps skip the whole SGD, and the pad
+    steps the caller appends for shape bucketing cost one branch dispatch
+    instead of a full RNN forward+backward. With a post-hoc ``where`` the
+    packed chain paid ~2.5x the serial path's arithmetic and lost the
+    batching win on CPU."""
+    params = jax.lax.cond(
+        learn_gate,
+        lambda p: _rnn_sgd_masked(p, pre, label, lr, start),
+        lambda p: p,
+        params,
+    )
+    want = jax.lax.cond(
+        decide_gate,
+        lambda p: jnp.argmax(_rnn_logits_masked(p, post, start)) == 1,
+        lambda p: jnp.asarray(False),
+        params,
+    )
+    return params, want
+
+
+def build_seq(records: list, k: int) -> np.ndarray:
+    """Normalized (k, 1) change-record window from a records list — the
+    single source of truth for both the per-predictor serial path
+    (:meth:`BroadcastPredictor._seq`) and the batched window planner, which
+    replays record evolution host-side and must produce bit-identical
+    operands."""
+    rec = records[-k:]
+    rec = [0.0] * (k - len(rec)) + rec  # zero-pad (expansion reset rule)
+    norm = max(max((abs(r) for r in rec), default=0.0), 1e-12)  # match pretraining
+    return np.asarray(rec, np.float32)[:, None] / norm
+
+
 # ------------------------------------------------------------- per-cluster
 @dataclasses.dataclass
 class BroadcastPredictor:
@@ -105,10 +195,7 @@ class BroadcastPredictor:
         float32 array ops with a weak python-float norm divide the same way
         under NumPy 2 promotion as under jax, and the jit boundary uploads
         the 10-float array in the same dispatch as the RNN itself."""
-        rec = self.records[-self.k:]
-        rec = [0.0] * (self.k - len(rec)) + rec  # zero-pad (expansion reset rule)
-        norm = max(max((abs(r) for r in rec), default=0.0), 1e-12)  # match pretraining
-        return np.asarray(rec, np.float32)[:, None] / norm
+        return build_seq(self.records, self.k)
 
     def decide(self, accumulated_gap: float, fallback_threshold: float = 1.0) -> bool:
         """RNN decision; when inactive (fresh expansion) never broadcast."""

@@ -5,12 +5,12 @@ Per arriving update:
   1. assign/confirm cluster (on-arrival L1 clustering, Eq. 1),
   2. record staleness (never decay/drop — Challenge #2),
   3. aggregate into the cluster branch (CI push, RW-locked),
-  4. update the cluster's Top-K change records,
+  4. update the cluster's Top-K change records and online fine-tune the
+     predictor on the realized ground truth (Eq. 4),
   5. unicast the fresh center back to the uploader (prompt CI feedback),
   6. RNN broadcast decision: maybe broadcast to the *other* in-cluster
      members (the "echo" — rides the fat downstream link),
-  7. online fine-tune the predictor on the realized ground truth (Eq. 4),
-  8. periodically: feedback-aware refinement (expand bad fits, merge when
+  7. periodically: feedback-aware refinement (expand bad fits, merge when
      cluster count reaches hm x C via Algorithm 1).
 """
 from __future__ import annotations
@@ -25,6 +25,8 @@ import numpy as np
 from repro.common.pytrees import tree_flat_vector, tree_l1
 from repro.core.broadcast import (
     BroadcastPredictor,
+    build_seq,
+    predictor_batch_enabled,
     predictor_for_expansion,
     predictor_for_merge,
     pretrain_rnn,
@@ -36,6 +38,16 @@ from repro.core.versioning import ModelRepo
 from repro.kernels import ops as K
 
 PyTree = Any
+
+
+@dataclasses.dataclass
+class _PredictorPlan:
+    """Resolved predictor work for one refinement sub-window: per-step
+    broadcast outcomes and the chain launch's final RNN weights, written
+    back at window end (before any refine can inherit them)."""
+
+    wants: dict  # step index -> planned decide() outcome
+    new_params: dict  # cid -> batched-chain final RNN params (device)
 
 
 @dataclasses.dataclass
@@ -182,7 +194,8 @@ class EchoPFLServer:
             return c.center if plane is None else c.center_vec
         branch.push(client_id, merge_fn, f"upload from {client_id} (staleness {staleness})")
 
-        # 4. Top-K change record + ground-truth label for the previous decision
+        # 4. Top-K change record + online fine-tune on the ground-truth
+        #    label for the previous decision (Eq. 4)
         if pred is not None:
             if plane is None:
                 change = float(tree_l1(cluster.center, prev_center))
@@ -216,7 +229,7 @@ class EchoPFLServer:
                 self._rnn_broadcasts += 1
                 out.extend(self._broadcast(cluster, exclude={client_id}))
 
-        # 8. periodic refinement
+        # 7. periodic refinement
         if self._uploads % self.refine_every == 0:
             out.extend(self._refine())
         return out
@@ -229,17 +242,26 @@ class EchoPFLServer:
         Returns one downlink list per upload, exactly what N sequential
         ``handle_upload`` calls would return.
 
-        Uploads are processed in *segments* of consecutive distinct clients
-        that stay inside one refinement period: each segment's cluster
-        assignment + mixed-rate blends run as ONE fused scan launch
-        (``kernels.ops.ingest_chain`` — sequential-equivalent: step j scores
-        against the centers already blended by steps < j), and the host
-        replays only the per-upload protocol bookkeeping (staleness, CI
-        branch pushes, predictor learn/decide, downlink construction) from
-        the precomputed statistics. Segment boundaries — a refine falling
-        due, a repeated client, the seeding phase, the pytree backend —
-        fall back to the per-upload path, so trajectories are identical to
-        the unbatched loop by construction."""
+        Uploads are processed in *segments* of consecutive distinct clients:
+        each segment's cluster assignment + mixed-rate blends run as ONE
+        fused scan launch (``kernels.ops.ingest_chain`` —
+        sequential-equivalent: step j scores against the centers already
+        blended by steps < j), and the host replays only the per-upload
+        protocol bookkeeping (staleness, CI branch pushes, predictor
+        bookkeeping, downlink construction) from the precomputed
+        statistics. Predictor learn/decide work is itself batched into one
+        fused RNN chain launch per refinement sub-window
+        (``REPRO_PREDICTOR_BATCH``; see :meth:`_plan_predictor_window`).
+
+        Refinement no longer cuts segments: the chain launch speculatively
+        spans refine boundaries, and after each mid-segment refine the
+        replay revalidates the launch's assumptions (cluster set unchanged,
+        per-upload prev/forced indices still correct). A refine that moved
+        clients, lifted partial-finetune pins, or changed the cluster set
+        invalidates the remainder, which simply relaunches from live state.
+        Remaining segment boundaries — a repeated client, the seeding
+        phase, the pytree backend — fall back to the per-upload path, so
+        trajectories are identical to the unbatched loop by construction."""
         out: list[list[Downlink]] = []
         i, n = 0, len(batch)
         while i < n:
@@ -252,25 +274,28 @@ class EchoPFLServer:
                 out.append(self.handle_upload(*batch[i]))
                 i += 1
                 continue
-            # segment: consecutive distinct clients, ending at (and
-            # including) the upload whose ordinal triggers refinement
-            until_refine = self.refine_every - (self._uploads % self.refine_every)
-            seg_end = min(n, i + until_refine)
+            # segment: consecutive distinct clients
             seen: set = set()
             j = i
-            while j < seg_end and batch[j][0] not in seen:
+            while j < n and batch[j][0] not in seen:
                 seen.add(batch[j][0])
                 j += 1
             if j - i < 2:
                 out.append(self.handle_upload(*batch[i]))
                 i += 1
                 continue
-            out.extend(self._handle_upload_segment(batch[i:j]))
-            i = j
+            seg_out, consumed = self._handle_upload_segment(batch[i:j])
+            out.extend(seg_out)
+            i += consumed
         return out
 
-    def _handle_upload_segment(self, seg: list[tuple]) -> list[list[Downlink]]:
-        """One fused-launch segment of :meth:`handle_uploads` (plane mode)."""
+    def _handle_upload_segment(self, seg: list[tuple]) -> tuple[list[list[Downlink]], int]:
+        """One fused-launch segment of :meth:`handle_uploads` (plane mode).
+
+        Returns ``(downlink lists, uploads consumed)``: a mid-segment
+        refinement that invalidates the speculative launch (moved clients,
+        lifted pins, changed cluster set) stops the replay right after the
+        refine; the caller relaunches the remainder from live state."""
         cl = self.clustering
         plane = cl.plane
         cid_order = sorted(cl.clusters)
@@ -323,85 +348,385 @@ class EchoPFLServer:
         blended = np.asarray(blended)
         blended.flags.writeable = False  # unicast payloads are views of this
 
+        step_cids = [cid_order[int(cids_np[j])] for j in range(S)]
         out: list[list[Downlink]] = []
         last_vec: dict[int, Any] = {}  # cid -> live center row (host, np)
         bcast_np: dict[int, Any] = {}  # cid -> anchor moved mid-segment (np)
-        for j in range(S):
-            client_id, params, base_version, n_samples, t = seg[j]
-            self._uploads += 1
-            msgs: list[Downlink] = []
-            cid = cid_order[int(cids_np[j])]
-            cluster = cl.clusters[cid]
-            if forced_idx[j] < 0:  # partial-finetune members stay put, no move
-                cl._move(client_id, cid)
-            try:
-                branch = self.repo.branch(f"cluster/{cid}")
-            except KeyError:
-                branch = self.repo.branch(f"cluster/{cid}", cluster.center_vec)
+        batch_pred = self.enable_broadcast and predictor_batch_enabled()
+        j0 = 0
+        while j0 < S:
+            # predictor sub-window: up to and including the next refine
+            # boundary — a refine's predictor maintenance (expansion/merge
+            # inheritance) must see RNN weights as of refine time, so the
+            # fused chain launch never crosses it
+            until_refine = self.refine_every - (self._uploads % self.refine_every)
+            j1 = min(S, j0 + until_refine)
+            plan = (
+                self._plan_predictor_window(
+                    seg, j0, j1, step_cids, forced_idx,
+                    change_np, gb_np, ga_np, blended, bcast_np, last_vec,
+                )
+                if batch_pred
+                else None
+            )
+            for j in range(j0, j1):
+                client_id, params, base_version, n_samples, t = seg[j]
+                self._uploads += 1
+                msgs: list[Downlink] = []
+                cid = step_cids[j]
+                cluster = cl.clusters[cid]
+                if forced_idx[j] < 0:  # partial-finetune members stay put, no move
+                    cl._move(client_id, cid)
+                try:
+                    branch = self.repo.branch(f"cluster/{cid}")
+                except KeyError:
+                    branch = self.repo.branch(f"cluster/{cid}", cluster.center_vec)
 
-            # staleness bookkeeping — identical to handle_upload
-            base_cluster, base_ver = self.client_versions.get(client_id, (cid, 0))
-            if base_cluster == cid:
-                staleness = max(0, cluster.version - base_ver)
-            elif base_cluster in cl.clusters:
-                staleness = max(0, cl.clusters[base_cluster].version - base_ver)
-            else:
-                staleness = max(0, cluster.version - cluster.last_broadcast_version)
-            self.staleness.record(staleness)
+                # staleness bookkeeping — identical to handle_upload
+                base_cluster, base_ver = self.client_versions.get(client_id, (cid, 0))
+                if base_cluster == cid:
+                    staleness = max(0, cluster.version - base_ver)
+                elif base_cluster in cl.clusters:
+                    staleness = max(0, cl.clusters[base_cluster].version - base_ver)
+                else:
+                    staleness = max(0, cluster.version - cluster.last_broadcast_version)
+                self.staleness.record(staleness)
 
-            pred = self._predictor(cid) if self.enable_broadcast else None
-            new_vec = blended[j]
+                pred = self._predictor(cid) if self.enable_broadcast else None
+                new_vec = blended[j]
 
-            def merge_fn(head, cluster=cluster, vec=new_vec):
-                cluster.set_center_vec(vec)
-                cluster.version += 1
-                return cluster.center_vec
+                def merge_fn(head, cluster=cluster, vec=new_vec):
+                    cluster.set_center_vec(vec)
+                    cluster.version += 1
+                    return cluster.center_vec
 
-            branch.push(client_id, merge_fn, f"upload from {client_id} (staleness {staleness})")
+                branch.push(client_id, merge_fn, f"upload from {client_id} (staleness {staleness})")
 
-            if pred is not None:
-                change = float(change_np[j])
-                b_moved = bcast_np.get(cid)
-                if b_moved is not None:
-                    # an intra-window broadcast moved this cluster's anchor:
-                    # the precomputed gap is stale. The anchor AND the
-                    # pre-blend center are both host rows we already hold
-                    # (the broadcast step's blended row), so the recompute
-                    # is pure numpy — no device round-trip per upload.
-                    gap_before = float(np.abs(last_vec[cid] - b_moved).sum(dtype=np.float32))
+                if pred is not None:
+                    change = float(change_np[j])
+                    if plan is None:
+                        b_moved = bcast_np.get(cid)
+                        if b_moved is not None:
+                            # an intra-window broadcast moved this cluster's
+                            # anchor: the precomputed gap is stale. The anchor
+                            # AND the pre-blend center are both host rows we
+                            # already hold (the broadcast step's blended row),
+                            # so the recompute is pure numpy — no device
+                            # round-trip per upload.
+                            gap_before = float(np.abs(last_vec[cid] - b_moved).sum(dtype=np.float32))
+                        else:
+                            gap_before = float(gb_np[j])
+                        label = 1 if change > gap_before else 0
+                        if pred.records:
+                            pred.learn(label)
+                    # with a plan, the fused chain launch already applied the
+                    # SGD steps on host-exact labels; only the record window
+                    # bookkeeping happens per upload
+                    pred.observe(change)
+
+                # unicast payload: host-side numpy views of the blended row we
+                # already synced — bitwise the center the per-event path would
+                # materialize, with zero device dispatches
+                msgs.append(
+                    Downlink(client_id, plane.spec.unflatten_np(new_vec), cluster.version, cid, "unicast")
+                )
+                self.client_versions[client_id] = (cid, cluster.version)
+
+                if pred is not None and cluster.size > 1:
+                    self._decisions += 1
+                    if plan is None:
+                        b_moved = bcast_np.get(cid)
+                        if b_moved is not None:
+                            gap = float(np.abs(new_vec - b_moved).sum(dtype=np.float32))
+                        else:
+                            gap = float(ga_np[j])
+                        want = pred.decide(gap)
+                    else:
+                        # mirror BroadcastPredictor.decide with the planned
+                        # outcome — counters and the one-suppressed-decision
+                        # activation stay host-exact
+                        pred.decisions += 1
+                        if not pred.active:
+                            pred.active = True
+                            want = False
+                        else:
+                            want = plan.wants[j]
+                        if want:
+                            pred.broadcasts += 1
+                    if want:
+                        self._rnn_broadcasts += 1
+                        msgs.extend(self._broadcast(cluster, exclude={client_id}))
+                        bcast_np[cid] = new_vec  # snapshot_broadcast just copied it
+                last_vec[cid] = new_vec
+
+                if j == j1 - 1 and plan is not None:
+                    # write the fused chain's final RNN weights back before a
+                    # refine can inherit them (expansion/merge maintenance)
+                    for wcid, wparams in plan.new_params.items():
+                        self.predictors[wcid].params = wparams
+                if self._uploads % self.refine_every == 0:
+                    msgs.extend(self._refine())
+                    out.append(msgs)
+                    if j + 1 < S and not self._segment_continuation_valid(
+                        seg, j + 1, cid_order, prev_idx, forced_idx
+                    ):
+                        # the refine changed what the speculative launch
+                        # assumed: hand the remainder back for a relaunch
+                        cl._pending = None
+                        return out, j + 1
+                else:
+                    out.append(msgs)
+            j0 = j1
+        cl._pending = None  # the fused path never uses the assign-time cache
+        return out, S
+
+    def _segment_continuation_valid(
+        self, seg: list[tuple], start: int, cid_order: list, prev_idx: list, forced_idx: list
+    ) -> bool:
+        """Did a mid-segment refine leave the speculative chain launch valid
+        for the remaining uploads? The launch fixed (a) the cluster set and
+        its center/anchor rows and (b) each upload's prev/forced index.
+        Expansion, merge and dissolve all change the cluster set (and every
+        center write rides on those), so (a) catches them; feedback
+        reassignment and partial-finetune lifts change (b)."""
+        cl = self.clustering
+        if sorted(cl.clusters) != cid_order:
+            return False
+        pos = {c: k for k, c in enumerate(cid_order)}
+        for j in range(start, len(seg)):
+            client = seg[j][0]
+            prev = cl.assignment.get(client)
+            alive = prev is not None and prev in cl.clusters
+            pf = alive and client in cl.clusters[prev].partial_finetune
+            if prev_idx[j] != (pos[prev] if alive else -1):
+                return False
+            if forced_idx[j] != (pos[prev] if pf else -1):
+                return False
+        return True
+
+    def _plan_predictor_window(
+        self, seg, j0, j1, step_cids, forced_idx,
+        change_np, gb_np, ga_np, blended, bcast_np, last_vec,
+    ) -> "_PredictorPlan | None":
+        """Plan one refinement sub-window's predictor work as one fused RNN
+        chain launch per touched cluster (``kernels.ops.predictor_chain``).
+
+        The serial path pays two jit dispatches plus a blocking want-sync
+        per upload. All of that work is a deterministic function of state
+        we already hold on the host: record windows evolve by the synced
+        ``change`` stats alone, gates (learn: records nonempty; decide:
+        cluster size > 1 with active/cold-start kinds) are
+        decision-independent, and only the Eq. 4 *labels* and the
+        cold-start fallback decisions depend on broadcast anchors that
+        intra-window decisions may move. A structure pass replays
+        membership + record evolution without touching live state, and
+        the label/decision circularity is resolved IN-SCAN: within a
+        window a cluster's anchor can only be its pre-window anchor or
+        the blended vector of an earlier fired step of the same chain, so
+        the planner precomputes each step's label (and each cold-start
+        fallback decision) for every possible "last fired position" with
+        exact host float64 arithmetic, and the chain's scan carries the
+        fired position and gathers from those rows. Every step executes
+        once; one decision sync per window covers all clusters.
+
+        Inactive (post-expansion) decisions need no device work and are
+        computed host-side, mirroring :meth:`BroadcastPredictor.decide`;
+        the final host ``resolve`` replay under the synced RNN decisions
+        recomputes fallback fires with the same float64 rules the tables
+        were built from, keeping the returned bookkeeping host-exact.
+        """
+        cl = self.clustering
+
+        # ---- structure pass: decision-independent step data -------------
+        sim_size: dict[int, int] = {}
+        sim_assign: dict[Any, int] = {}
+        pstate: dict[int, dict] = {}  # cid -> simulated predictor state
+
+        def size_of(c):
+            return sim_size.get(c, cl.clusters[c].size)
+
+        def pred_of(c):
+            ps = pstate.get(c)
+            if ps is None:
+                live = self.predictors.get(c)
+                if live is not None:
+                    ps = {
+                        "records": list(live.records), "scale": live.scale,
+                        "active": live.active, "k": live.k, "params": live.params,
+                    }
+                else:  # _predictor() creates at first touch, k from live size
+                    ps = {
+                        "records": [], "scale": 1.0, "active": True,
+                        "k": max(self.top_k, size_of(c)), "params": self._rnn_init,
+                    }
+                pstate[c] = ps
+            return ps
+
+        steps = []
+        for j in range(j0, j1):
+            client = seg[j][0]
+            cid = step_cids[j]
+            if forced_idx[j] < 0:  # mirror cl._move's size effects
+                prev = sim_assign.get(client, cl.assignment.get(client))
+                if prev != cid:
+                    if prev is not None and prev in cl.clusters:
+                        sim_size[prev] = size_of(prev) - 1
+                    sim_size[cid] = size_of(cid) + 1
+                sim_assign[client] = cid
+            ps = pred_of(cid)
+            change = float(change_np[j])
+            learn_gate = len(ps["records"]) > 0
+            seq_pre = build_seq(ps["records"], ps["k"]) if learn_gate else None
+            # observe(), host-exact
+            ps["records"].append(change)
+            ps["records"] = ps["records"][-max(ps["k"], 1):]
+            ps["scale"] = 0.9 * ps["scale"] + 0.1 * max(abs(change), 1e-12)
+            kind, seq_post = "none", None
+            if size_of(cid) > 1:
+                if not ps["active"]:
+                    kind = "inactive"
+                    ps["active"] = True
+                elif len(ps["records"]) < 2:
+                    kind = "fallback"
+                else:
+                    kind = "rnn"
+                    seq_post = build_seq(ps["records"], ps["k"])
+            steps.append({
+                "j": j, "cid": cid, "change": change, "learn": learn_gate,
+                "seq_pre": seq_pre, "kind": kind, "seq_post": seq_post,
+                "scale": ps["scale"],
+            })
+
+        # ---- label/decision resolution under a set of RNN outcomes ------
+        def resolve(rnn_wants: dict) -> tuple[dict, dict]:
+            anchors = dict(bcast_np)
+            lastv = dict(last_vec)
+            labels: dict[int, int] = {}
+            wants: dict[int, bool] = {}
+            for st in steps:
+                j, cid = st["j"], st["cid"]
+                a = anchors.get(cid)
+                if a is not None:
+                    gap_before = float(np.abs(lastv[cid] - a).sum(dtype=np.float32))
                 else:
                     gap_before = float(gb_np[j])
-                label = 1 if change > gap_before else 0
-                if pred.records:
-                    pred.learn(label)
-                pred.observe(change)
+                labels[j] = 1 if st["change"] > gap_before else 0
+                want = False
+                if st["kind"] == "fallback":
+                    if a is not None:
+                        gap = float(np.abs(blended[j] - a).sum(dtype=np.float32))
+                    else:
+                        gap = float(ga_np[j])
+                    want = gap > 1.0 * st["scale"]  # decide()'s fallback rule
+                elif st["kind"] == "rnn":
+                    want = bool(rnn_wants.get(j, False))
+                wants[j] = want
+                if want:
+                    anchors[cid] = blended[j]
+                lastv[cid] = blended[j]
+            return labels, wants
 
-            # unicast payload: host-side numpy views of the blended row we
-            # already synced — bitwise the center the per-event path would
-            # materialize, with zero device dispatches
-            msgs.append(
-                Downlink(client_id, plane.spec.unflatten_np(new_vec), cluster.version, cid, "unicast")
+        # ---- fused launch: in-scan label/decision resolution ------------
+        # A chain covers every step of a cluster that learns, decides via
+        # the RNN, or decides via the cold-start fallback — the latter two
+        # can fire a broadcast and move the anchor that later labels and
+        # fallback gaps read. Within one window that anchor is either the
+        # pre-window anchor or the blended vector of an earlier fired step
+        # of the SAME chain, so every anchor-dependent comparison is
+        # enumerable on the host: build, per step, a boolean row over
+        # "last fired chain position" with the exact float64 expressions
+        # resolve() uses, and let the scan carry the fired position and
+        # gather from the rows (no float compare ever runs on device).
+        # One launch per cluster, one decision sync per window, every step
+        # executed exactly once — no fixpoint iteration, no relaunches.
+        chains: dict[int, list] = {}
+        for st in steps:
+            if st["learn"] or st["kind"] in ("rnn", "fallback"):
+                chains.setdefault(st["cid"], []).append(st)
+        rnn_any = any(st["kind"] == "rnn" for st in steps)
+        launch_cids = [
+            c for c in sorted(chains)
+            if any(st["learn"] or st["kind"] == "rnn" for st in chains[c])
+        ]
+        if not launch_cids:  # no device work at all this window
+            _, wants = resolve({})
+            return _PredictorPlan(wants=wants, new_params={})
+
+        # last-upload vector seen by each step BEFORE it runs (evolves at
+        # every step of its cluster, chain member or not — mirrors the
+        # ``lastv`` updates in resolve())
+        lastv_sim = dict(last_vec)
+        lastv_before: dict[int, Any] = {}
+        for st in steps:
+            lastv_before[st["j"]] = lastv_sim.get(st["cid"])
+            lastv_sim[st["cid"]] = blended[st["j"]]
+
+        wants_dev: dict[int, Any] = {}
+        finals: dict[int, Any] = {}
+        for c in launch_cids:
+            sub = chains[c]
+            k = pred_of(c)["k"]
+            # pow2-padded shapes keep the jit cache O(log window x log K);
+            # per-cluster launches keep it independent of cluster count
+            Kp = 1 << (k - 1).bit_length()
+            Sp = 1 << (len(sub) - 1).bit_length()
+            pre = np.zeros((Sp, Kp, 1), np.float32)
+            post = np.zeros((Sp, Kp, 1), np.float32)
+            lab_t = np.zeros((Sp, Sp + 1), np.int32)
+            fb_t = np.zeros((Sp, Sp + 1), bool)
+            lgate = np.zeros(Sp, bool)
+            dgate = np.zeros(Sp, bool)
+            fgate = np.zeros(Sp, bool)
+            anchor0 = bcast_np.get(c)
+            for p, st in enumerate(sub):
+                j = st["j"]
+                lv = lastv_before[j]
+                # anchor candidates live when step p runs: column 0 = the
+                # pre-window anchor, column q+1 = chain step q fired last
+                cand = [(0, anchor0)] + [
+                    (q + 1, blended[sub[q]["j"]]) for q in range(p)
+                    if sub[q]["kind"] in ("rnn", "fallback")
+                ]
+                if st["learn"]:
+                    pre[p, Kp - k:, :] = st["seq_pre"]
+                    lgate[p] = True
+                    for col, a in cand:
+                        if a is None:
+                            gb = float(gb_np[j])
+                        else:
+                            gb = float(np.abs(lv - a).sum(dtype=np.float32))
+                        lab_t[p, col] = 1 if st["change"] > gb else 0
+                if st["kind"] == "rnn":
+                    post[p, Kp - k:, :] = st["seq_post"]
+                    dgate[p] = True
+                elif st["kind"] == "fallback":
+                    fgate[p] = True
+                    for col, a in cand:
+                        if a is None:
+                            ga = float(ga_np[j])
+                        else:
+                            ga = float(np.abs(blended[j] - a).sum(dtype=np.float32))
+                        fb_t[p, col] = ga > 1.0 * st["scale"]
+            finals[c], w = K.predictor_chain(
+                pred_of(c)["params"], pre, post, lab_t, fb_t,
+                lgate, dgate, fgate, Kp - k, 1e-2,
             )
-            self.client_versions[client_id] = (cid, cluster.version)
+            if any(s["kind"] == "rnn" for s in sub):
+                wants_dev[c] = w
 
-            if pred is not None and cluster.size > 1:
-                b_moved = bcast_np.get(cid)
-                if b_moved is not None:
-                    gap = float(np.abs(new_vec - b_moved).sum(dtype=np.float32))
-                else:
-                    gap = float(ga_np[j])
-                self._decisions += 1
-                if pred.decide(gap):
-                    self._rnn_broadcasts += 1
-                    msgs.extend(self._broadcast(cluster, exclude={client_id}))
-                    bcast_np[cid] = new_vec  # snapshot_broadcast just copied it
-            last_vec[cid] = new_vec
-
-            if self._uploads % self.refine_every == 0:  # segment-final by construction
-                msgs.extend(self._refine())
-            out.append(msgs)
-        cl._pending = None  # the fused path never uses the assign-time cache
-        return out
+        used: dict[int, bool] = {}
+        if rnn_any:
+            w_host = jax.device_get(wants_dev)  # ONE blocking sync per window
+            for c, wc in w_host.items():
+                for p, st in enumerate(chains[c]):
+                    if st["kind"] == "rnn":
+                        used[st["j"]] = bool(wc[p])
+        _, wants = resolve(used)
+        new_params = {
+            c: finals[c] for c in launch_cids
+            if any(st["learn"] for st in chains[c])
+        }
+        return _PredictorPlan(wants=wants, new_params=new_params)
 
     def _broadcast(self, cluster, exclude: set = frozenset()) -> list[Downlink]:
         cluster.snapshot_broadcast()  # row copy in plane mode

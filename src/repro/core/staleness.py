@@ -31,7 +31,12 @@ class StalenessTracker:
 
     @property
     def convergence_proxy(self) -> float:
-        """O(sqrt(Q_max * Q_avg)) — lower is better."""
+        """O(sqrt(Q_max * Q_avg)) — lower is better. A run that never saw
+        staleness (no records, or every record zero) reports exactly 0.0;
+        the 1e-12 floor only guards the mixed case where one factor is zero
+        by rounding, not a genuinely staleness-free run."""
+        if self.count == 0 or (self.q_max == 0 and self.q_avg == 0.0):
+            return 0.0
         return math.sqrt(max(self.q_max, 1e-12) * max(self.q_avg, 1e-12))
 
     def snapshot(self) -> dict:

@@ -49,12 +49,20 @@ class NetworkModel:
         self._down_series[int(t // self.bin_seconds)] += nbytes * count
         return nbytes / self.downstream_bps
 
+    def _series_for(self, direction: str) -> dict[int, float]:
+        if direction == "down":
+            return self._down_series
+        if direction == "up":
+            return self._up_series
+        raise ValueError(
+            f"unknown direction {direction!r}: expected 'up' or 'down'"
+        )
+
     def peak(self, direction: str = "down") -> float:
-        series = self._down_series if direction == "down" else self._up_series
-        return max(series.values(), default=0.0)
+        return max(self._series_for(direction).values(), default=0.0)
 
     def series(self, direction: str = "down") -> dict[int, float]:
-        return dict(self._down_series if direction == "down" else self._up_series)
+        return dict(self._series_for(direction))
 
     @property
     def total_bytes(self) -> int:

@@ -12,6 +12,7 @@ import os
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import plane_sharded, ref
 from repro.kernels.assign_lerp import assign_and_lerp as _assign_lerp_kernel
@@ -429,6 +430,102 @@ def ingest_chain(U, centers, bcast, prev_idx, forced_idx, valid, *, beta,
         jnp.int32(C if num_centers is None else num_centers),
         jnp.asarray(prev_idx, jnp.int32), jnp.asarray(forced_idx, jnp.int32),
         jnp.asarray(valid, jnp.bool_), beta, switch_margin,
+    )
+
+
+@jax.jit
+def _predictor_chain_jit(params, pre, post, lab_table, fb_table, learn_gate,
+                         decide_gate, fb_gate, start, lr):
+    from repro.core.broadcast import rnn_chain_step
+
+    S = lab_table.shape[0]
+    pos = jnp.arange(S, dtype=jnp.int32)
+
+    def step(carry, inp):
+        p, fire = carry
+        pre_j, post_j, lab_row, fb_row, lg_j, dg_j, fg_j, pos_j = inp
+        new_p, want_rnn = rnn_chain_step(
+            p, pre_j, post_j, lab_row[fire], lg_j, dg_j, lr, start
+        )
+        want = jnp.where(fg_j, fb_row[fire], want_rnn)
+        fire = jnp.where(want, pos_j + 1, fire)
+        return (new_p, fire), want
+
+    (final, _), wants = jax.lax.scan(
+        step, (params, jnp.int32(0)),
+        (pre, post, lab_table, fb_table, learn_gate, decide_gate, fb_gate, pos),
+    )
+    return final, wants
+
+
+def predictor_chain(params, pre, post, lab_table, fb_table, learn_gate,
+                    decide_gate, fb_gate, start, lr):
+    """Fused broadcast-predictor chain: every learn/decide step one cluster
+    accumulates over a coalesced window in ONE launch, instead of two
+    dispatches plus a blocking sync per upload.
+
+    One ``lax.scan`` walks the cluster's steps in chronological order with
+    its RNN tree as carry; each step runs the cond-gated SGD on the
+    pre-observe record window then the cond-gated broadcast decision on the
+    post-observe window. The carry is the single NATIVE-shape tree — this
+    is load-bearing for the bitwise contract with the per-upload
+    `_rnn_sgd`/`_rnn_want` path. Cross-cluster batching was tried twice and
+    both forms break it or don't pay:
+
+      * one B-stacked tree with a gathered (h, h) slice per step makes XLA
+        lower the dots against sliced operands with a different
+        accumulation order, an ulp off the serial graph (vmapping clusters
+        drifts the same way);
+      * a tuple-of-B-trees carry with ``lax.switch`` per step IS bitwise,
+        but both its compile time and its per-step runtime grow with the
+        branch count — at fleet scale (many clusters per window) it lost
+        more than the saved dispatches, and every distinct cluster count
+        recompiled.
+
+    Cluster chains are fully independent (each step touches only its own
+    cluster's tree), so per-cluster launches lose nothing semantically: the
+    caller fires one launch per touched cluster and syncs all their
+    decisions with one blocking gather per window.
+
+    The chain resolves the label/decision circularity IN-SCAN rather than
+    by host fixpoint iteration: a step's Eq. 4 label and a cold-start
+    fallback decision depend on the cluster's broadcast anchor, and
+    within one window the anchor can only be the pre-window anchor or the
+    blended vector of an earlier fired step of the SAME chain. The caller
+    enumerates those candidates and precomputes, per step, a boolean row
+    over "last fired chain position" (host float64 arithmetic, identical
+    to the serial rules — no float compare happens on device). The scan
+    carries the fired-position index alongside the RNN tree: each step
+    gathers its label from ``lab_table[fire]``, a fallback step gathers
+    its decision from ``fb_table[fire]``, and a fired want advances
+    ``fire`` to its own position. Every step therefore executes exactly
+    once per window, with no relaunches.
+
+    Ragged Top-K windows (predictor ``k`` varies with cluster size) are
+    front-padded to ``K``; ``start`` (scalar: K minus the real window
+    length, fixed for the cluster) marks where the real window begins and
+    the RNN holds its hidden state at zero before it, so valid steps see
+    exactly the serial operands.
+
+    Shapes: params is one RNN pytree; pre/post (S, K, 1); lab_table (S,
+    S+1) int32 and fb_table (S, S+1) bool, column 0 meaning "pre-window
+    anchor" and column q+1 meaning "step q fired last"; the three gates
+    are (S,) bool (fb_gate marks cold-start fallback steps, which skip
+    both RNN bodies); start/lr scalars. Callers pow2-pad S and K (pad
+    steps have all gates False — an identity rewrite that skips both RNN
+    bodies via the step's conds). Returns (final params tree, wants (S,)
+    bool) covering RNN and fallback decisions alike.
+
+    Operands stay host-side numpy right up to the jit boundary: the
+    launch is fired once per cluster per window, and eager
+    ``jnp.asarray`` staging cost more dispatch time than the chain saved.
+    The numpy scalars keep strong dtypes (a weak python float for ``lr``
+    would change promotion inside the SGD and break the bitwise match)."""
+    return _predictor_chain_jit(
+        params, np.asarray(pre, np.float32), np.asarray(post, np.float32),
+        np.asarray(lab_table, np.int32), np.asarray(fb_table, np.bool_),
+        np.asarray(learn_gate, np.bool_), np.asarray(decide_gate, np.bool_),
+        np.asarray(fb_gate, np.bool_), np.int32(start), np.float32(lr),
     )
 
 

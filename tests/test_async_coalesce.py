@@ -276,6 +276,135 @@ class TestHandleUploadsSequentialEquivalence:
             outB.extend(sB.handle_uploads(stream[i : i + 9]))
         self._assert_servers_equal(sA, sB, outA, outB)
 
+    def test_minimal_window_pairs_bitwise(self):
+        """Degenerate (size-1 chain) windows: batches of two distinct
+        clients make every predictor sub-window carry at most one or two
+        steps per cluster — the smallest launches the fused chain emits —
+        and must still replay the serial trajectory bitwise."""
+        clients, init, sA = _build_server()
+        _, _, sB = _build_server()
+        stream = _noisy_stream(clients, init, rounds=8)
+        outA = [sA.handle_upload(*u) for u in stream]
+        outB = []
+        for i in range(0, len(stream), 2):
+            outB.extend(sB.handle_uploads(stream[i : i + 2]))
+        self._assert_servers_equal(sA, sB, outA, outB)
+
+    def test_predictor_batch_on_off_trajectories_identical(self, monkeypatch):
+        """REPRO_PREDICTOR_BATCH on vs off over identical coalesced windows:
+        the fused RNN chain launch must reproduce the per-upload serial
+        learn/decide trajectory bitwise — including the final RNN weights."""
+        import jax
+
+        monkeypatch.setenv("REPRO_PREDICTOR_BATCH", "0")
+        clients, init, sOff = _build_server()
+        stream = _noisy_stream(clients, init)
+        outOff = []
+        for i in range(0, len(stream), 6):
+            outOff.extend(sOff.handle_uploads(stream[i : i + 6]))
+        monkeypatch.setenv("REPRO_PREDICTOR_BATCH", "1")
+        _, _, sOn = _build_server()
+        outOn = []
+        for i in range(0, len(stream), 6):
+            outOn.extend(sOn.handle_uploads(stream[i : i + 6]))
+        self._assert_servers_equal(sOff, sOn, outOff, outOn)
+        assert set(sOff.predictors) == set(sOn.predictors)
+        for cid in sOn.predictors:
+            for a, b in zip(
+                jax.tree_util.tree_leaves(sOff.predictors[cid].params),
+                jax.tree_util.tree_leaves(sOn.predictors[cid].params),
+            ):
+                assert np.array_equal(np.asarray(a), np.asarray(b)), (
+                    f"predictor {cid} RNN weights diverged"
+                )
+
+
+# ------------------------------------------------------ predictor chain
+class TestPredictorChainKernel:
+    def test_degenerate_window_bitwise_vs_serial(self):
+        """L=1 chain (one cluster, one upload) against the serial
+        `_rnn_sgd` + `_rnn_want` dispatches: params and decision bitwise."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.broadcast import _rnn_sgd, _rnn_want, build_seq, init_rnn
+        from repro.kernels import ops as K
+
+        params = init_rnn(jax.random.PRNGKey(5))
+        k = 10
+        records = [0.5, 1.25, 0.75]
+        seq_pre = build_seq(records, k)
+        seq_post = build_seq(records + [2.0], k)
+        p_serial, _ = _rnn_sgd(params, jnp.asarray(seq_pre), jnp.asarray(1), jnp.asarray(1e-2))
+        want_serial = bool(_rnn_want(p_serial, jnp.asarray(seq_post)))
+        lab_t = np.asarray([[1, 1]], np.int32)  # label 1 under any anchor
+        fb_t = np.zeros((1, 2), bool)
+        new_params, wants = K.predictor_chain(
+            params, seq_pre[None], seq_post[None],
+            lab_t, fb_t, [True], [True], [False], 0, 1e-2,
+        )
+        assert bool(np.asarray(wants)[0]) == want_serial
+        for a, b in zip(
+            jax.tree_util.tree_leaves(p_serial),
+            jax.tree_util.tree_leaves(new_params),
+        ):
+            assert np.array_equal(np.asarray(a), np.asarray(b))
+
+    def test_front_padded_ragged_k_bitwise(self):
+        """Predictors carry different Top-K lengths; each cluster's chain
+        front-pads its window to the launch K and masks the RNN hidden
+        state before `start`. Valid steps must see exactly the serial
+        operands — params and decisions bitwise vs the exact-k dispatches,
+        including mixed gated/pad steps in one scan."""
+        import jax
+        import jax.numpy as jnp
+
+        from repro.core.broadcast import _rnn_sgd, _rnn_want, build_seq, init_rnn
+        from repro.kernels import ops as K
+
+        ks = [10, 16, 12]
+        keys = jax.random.split(jax.random.PRNGKey(7), len(ks))
+        params_list = [init_rnn(key) for key in keys]
+        rng = np.random.default_rng(11)
+        labels = rng.integers(0, 2, (len(ks), 2)).astype(np.int32)
+        for b, k in enumerate(ks):
+            Kp = 1 << (k - 1).bit_length()  # pow2 bucket, like the planner
+            recs = [float(x) for x in rng.uniform(0.1, 3.0, k)]
+            p = params_list[b]
+            pre_b, post_b, wants_b = [], [], []
+            for step in range(2):
+                s_pre = build_seq(recs, k)
+                recs = (recs + [float(rng.uniform(0.1, 3.0))])[-k:]
+                s_post = build_seq(recs, k)
+                p, _ = _rnn_sgd(p, jnp.asarray(s_pre), jnp.asarray(labels[b, step]), jnp.asarray(1e-2))
+                wants_b.append(bool(_rnn_want(p, jnp.asarray(s_post))))
+                pad = np.zeros((Kp - k, 1), np.float32)
+                pre_b.append(np.concatenate([pad, s_pre]))
+                post_b.append(np.concatenate([pad, s_post]))
+            # pow2-pad the 2 real steps to 4 with both gates off: the pad
+            # steps must be a bitwise identity rewrite
+            pre_p = np.concatenate([np.stack(pre_b), np.zeros((2, Kp, 1), np.float32)])
+            post_p = np.concatenate([np.stack(post_b), np.zeros((2, Kp, 1), np.float32)])
+            # anchor-independent label tables: every "last fired" column
+            # carries the step's serial label, so fires can't perturb them
+            lab_p = np.zeros((4, 5), np.int32)
+            lab_p[0, :] = labels[b, 0]
+            lab_p[1, :] = labels[b, 1]
+            fb_p = np.zeros((4, 5), bool)
+            gates = np.asarray([True, True, False, False])
+            fgates = np.zeros(4, bool)
+            new_params, wants = K.predictor_chain(
+                params_list[b], pre_p, post_p, lab_p, fb_p,
+                gates, gates, fgates, Kp - k, 1e-2
+            )
+            assert [bool(x) for x in np.asarray(wants)[:2]] == wants_b
+            assert not np.asarray(wants)[2:].any()
+            for x, y in zip(
+                jax.tree_util.tree_leaves(p),
+                jax.tree_util.tree_leaves(new_params),
+            ):
+                assert np.array_equal(np.asarray(x), np.asarray(y)), f"cluster {b} params drift"
+
 
 # ----------------------------------------------------------- ingest chain
 class TestIngestChainKernel:

@@ -115,3 +115,39 @@ class TestMaintenance:
         b = BroadcastPredictor(params=rnn_params, k=4)
         merged = predictor_for_merge(a, b)
         assert merged.records == []
+
+    def test_merge_one_side_empty(self, rnn_params):
+        """The np.var guard: a single-record (or empty) side has no variance
+        and must not crash or dominate the resample."""
+        a = BroadcastPredictor(params=rnn_params, k=4)
+        for c in (1.0, 3.0, 2.0):
+            a.observe(c)
+        b = BroadcastPredictor(params=rnn_params, k=4)
+        merged = predictor_for_merge(a, b)
+        assert all(r in a.records for r in merged.records)
+        merged_rev = predictor_for_merge(b, a)  # symmetric orientation
+        assert all(r in a.records for r in merged_rev.records)
+
+    def test_merge_of_singleton_records(self, rnn_params):
+        """Both sides singleton: len(records) == 1 skips np.var entirely
+        (variance of one sample is 0 by convention here), so the zero-total
+        split falls back to an even allocation."""
+        a = BroadcastPredictor(params=rnn_params, k=4)
+        a.observe(7.0)
+        b = BroadcastPredictor(params=rnn_params, k=4)
+        b.observe(2.0)
+        merged = predictor_for_merge(a, b)
+        assert sorted(merged.records) == [2.0, 7.0]
+        assert merged.scale == max(a.scale, b.scale)
+
+    def test_expansion_child_suppresses_exactly_one_decision(self, rnn_params):
+        """Sec. 5.2.2: a freshly-expanded cluster's center is already fresh,
+        so its predictor must hold exactly one broadcast decision."""
+        parent = BroadcastPredictor(params=rnn_params, k=5)
+        for c in (1.0, 2.0, 4.0):
+            parent.observe(c)
+        child = predictor_for_expansion(parent, change_of_new_client=8.0)
+        assert child.decide(accumulated_gap=1e9) is False  # suppressed once
+        assert child.active
+        assert child.decide(accumulated_gap=1e9) is True  # fallback resumes
+        assert child.decisions == 2 and child.broadcasts == 1

@@ -87,6 +87,20 @@ class TestSimulatorAccounting:
         }
         assert model_bytes(params) == 160 + 8 + 12 + 4
 
+    def test_network_rejects_unknown_direction(self):
+        """Regression: peak()/series() silently treated any unrecognized
+        direction string (e.g. "downstream") as "up"."""
+        net = NetworkModel()
+        net.upload(100, t=0.0)
+        net.download(400, t=0.0)
+        assert net.peak("down") == 400.0
+        assert net.peak("up") == 100.0
+        assert net.series("up") == {0: 100.0}
+        with pytest.raises(ValueError):
+            net.peak("downstream")
+        with pytest.raises(ValueError):
+            net.series("UP")
+
     def test_run_sync_zero_rounds_returns_zero_round_report(self):
         """Regression: rounds=0 raised UnboundLocalError on the round
         counter instead of returning an empty report."""

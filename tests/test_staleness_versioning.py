@@ -17,13 +17,28 @@ def test_tracker_stats_match_numpy(xs):
         t.record(x)
     assert t.q_max == max(xs)
     assert np.isclose(t.q_avg, np.mean(xs))
-    assert np.isclose(t.convergence_proxy, np.sqrt(max(max(xs), 1e-12) * max(np.mean(xs), 1e-12)))
+    if max(xs) == 0:
+        assert t.convergence_proxy == 0.0
+    else:
+        assert np.isclose(t.convergence_proxy, np.sqrt(max(xs) * np.mean(xs)))
 
 
 def test_tracker_rejects_negative():
     t = StalenessTracker()
     with pytest.raises(ValueError):
         t.record(-1)
+
+
+def test_proxy_is_exactly_zero_without_staleness():
+    """Regression: the 1e-12 floors used to leak into staleness-free runs,
+    reporting sqrt(1e-12 * 1e-12) instead of 0.0."""
+    t = StalenessTracker()
+    assert t.convergence_proxy == 0.0  # no records at all
+    for _ in range(5):
+        t.record(0)
+    assert t.convergence_proxy == 0.0  # records, all zero
+    t.record(3)
+    assert t.convergence_proxy > 0.0  # real staleness still reports
 
 
 def test_broadcast_lowers_convergence_proxy():
