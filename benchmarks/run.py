@@ -21,6 +21,7 @@ from benchmarks import (
     bench_distance_metrics,
     bench_drift_adaptation,
     bench_hm_sensitivity,
+    bench_lm_fleet,
     bench_roofline,
     bench_server_throughput,
     bench_slow_device_drop,
@@ -40,6 +41,7 @@ BENCHES = {
     "server_throughput": bench_server_throughput.run,  # plane vs pytree hot path
     "client_fleet": bench_client_fleet.run,         # loop vs fleet client plane
     "async_coalesce": bench_async_coalesce.run,     # event-coalesced async pipeline
+    "lm_fleet": bench_lm_fleet.run,                 # REPRO_TASK=lm throughput + model axis
 }
 
 

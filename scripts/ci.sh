@@ -60,4 +60,23 @@ REPRO_FLEET_MESH=auto REPRO_ASYNC_COALESCE=45 \
 python -m pytest -q -p no:cacheprovider -m "not slow" \
     tests/test_async_coalesce.py tests/test_client_fleet.py
 
+echo "=== model-axis plane compute over a 4x2 (plane, model) mesh ==="
+# True dim-axis compute: pairwise-L1 psums per-shard partials, assign
+# blends run elementwise per dim chunk, chi2 recruits the model axis for
+# rows. The suite pins decision-identity + bitwise centers vs the
+# single-device run (subprocess trajectory harness) and covers the
+# REPRO_PLANE_MODEL_COMPUTE=off parity arm itself.
+XLA_FLAGS="--xla_force_host_platform_device_count=8${XLA_FLAGS:+ $XLA_FLAGS}" \
+REPRO_PLANE_MESH=4x2 REPRO_PLANE_MESH_MIN_ROWS=0 \
+python -m pytest -q -p no:cacheprovider -m "not slow" \
+    tests/test_model_axis_plane.py
+
+echo "=== REPRO_TASK=lm smoke (LoRA/head deltas over the frozen tiny_lm base) ==="
+# The LM personalization workload end-to-end on both simulator loops:
+# run_sync (fedavg) + coalesced run_async (echopfl), loop/fleet backend
+# agreement, delta-only payload billing, and the kernel-vs-model-layer
+# attention oracle cross-check the LM training path leans on.
+REPRO_TASK=lm python -m pytest -q -p no:cacheprovider -m "not slow" \
+    tests/test_lm_task.py tests/test_flash_vs_layers_reference.py
+
 echo "ci.sh: all green"

@@ -25,11 +25,14 @@ from repro.configs import (  # noqa: F401  (registration side effects)
     llama3_405b,
     paper_tasks,
     pixtral_12b,
+    tiny_lm,
     xlstm_1_3b,
 )
+from repro.configs.tiny_lm import TINY_LM
 
 __all__ = [
     "ARCH_REGISTRY",
+    "TINY_LM",
     "SHAPES",
     "LayerSpec",
     "MLASpec",

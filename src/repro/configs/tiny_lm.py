@@ -1,0 +1,28 @@
+"""tiny_lm: CI-sized decoder for the federated LM personalization task.
+
+Not one of the ten assigned architectures — this is the REPRO_TASK=lm
+workload's frozen base, sized so transformer-path tests and the ci.sh LM
+smoke leg run in seconds on CPU (d_model 64, 2 layers, 256-token vocab).
+GQA (2 query heads per KV head) is deliberate: the LM fleet path then
+exercises the grouped flash-attention kernels, not just MHA.
+"""
+from repro.configs.base import LayerSpec, ModelConfig, TrainSpec, register_arch
+
+TINY_LM = register_arch(
+    ModelConfig(
+        name="tiny_lm",
+        family="dense",
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=2,
+        d_ff=128,
+        vocab_size=256,
+        pattern=(LayerSpec("attn", "dense"),),
+        num_periods=2,
+        head_dim=16,
+        tie_embeddings=True,
+        rope_theta=10000.0,
+        train=TrainSpec(optimizer="sgdm", remat=False),
+        notes="CI-sized frozen base for the EchoPFL LM personalization task",
+    )
+)

@@ -1,17 +1,19 @@
 """Simulated mobile client: local training, feedback computation, and the
 device latency model. In the threaded CI mode the same object runs inside a
 worker thread; in the event-driven simulator its timing methods feed the
-virtual clock."""
+virtual clock.
+
+The workload itself lives behind the client's
+:class:`~repro.fl.tasks.PersonalizationTask` (``task`` field): ``None``
+means the paper's default MLP task. The task is a constructor-time value,
+not an env lookup — a client's task must match the data it was built with,
+so only fleet *builders* consult ``REPRO_TASK``."""
 from __future__ import annotations
 
 import dataclasses
 from typing import Any
 
-import jax.numpy as jnp
 import numpy as np
-
-from repro.data.synthetic import ClientDataset
-from repro.models import mlp
 
 PyTree = Any
 
@@ -19,7 +21,7 @@ PyTree = Any
 @dataclasses.dataclass
 class SimClient:
     client_id: int
-    data: ClientDataset
+    data: Any
     num_classes: int
     device_class: str
     round_time_fn: Any  # () -> seconds of local compute
@@ -31,31 +33,34 @@ class SimClient:
     base_version: int = 0
     cluster_id: int | None = None
     partial_finetune: bool = False
+    task: Any = None  # PersonalizationTask; None -> the default MLP task
+
+    def _task(self):
+        if self.task is None:
+            from repro.fl.tasks import MLP_TASK
+
+            self.task = MLP_TASK
+        return self.task
 
     def local_train(self, params: PyTree | None = None) -> tuple[PyTree, Any]:
         """One local training round. The returned loss is a *device scalar*
         (no forced host sync); call ``float()`` on it only if you actually
         need the value on the host."""
         p = params if params is not None else self.model
-        x = jnp.asarray(self.data.x_train)
-        y = jnp.asarray(self.data.y_train)
-        return mlp.local_train(
-            p, x, y, epochs=self.local_epochs, lr=self.lr, head_only=self.partial_finetune
+        return self._task().local_train(
+            p, self.data, epochs=self.local_epochs, lr=self.lr,
+            head_only=self.partial_finetune,
         )
 
     def evaluate(self, params: PyTree | None = None) -> float:
         p = params if params is not None else self.model
         if p is None:
             return 0.0
-        return float(mlp.evaluate(p, jnp.asarray(self.data.x_test), jnp.asarray(self.data.y_test)))
+        return self._task().evaluate(p, self.data)
 
     def feedback_inputs(self, params: PyTree) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
         """(F_pred, F_true, S_soft) on the local training set (Eq. 2/3)."""
-        f_pred, s_soft = mlp.predict_distributions(
-            params, jnp.asarray(self.data.x_train), self.num_classes
-        )
-        f_true = self.data.label_histogram(self.num_classes)
-        return np.asarray(f_pred), f_true.astype(np.float32), np.asarray(s_soft)
+        return self._task().feedback_inputs(params, self.data, self.num_classes)
 
     def compute_time(self) -> float:
         return float(self.round_time_fn())

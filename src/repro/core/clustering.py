@@ -206,7 +206,11 @@ class DynamicClustering:
         fleets."""
         if self.plane is None or self.plane.mesh is None or nrows < self.mesh_min_rows:
             return {}
-        return {"mesh": self.plane.mesh, "axis": self.plane.row_axis}
+        return {
+            "mesh": self.plane.mesh,
+            "axis": self.plane.row_axis,
+            "dim_axis": self.plane.dim_axis,
+        }
 
     def _new_cluster(self, center: PyTree) -> Cluster:
         """``center`` may be a pytree or (plane mode) an already-flat row."""

@@ -117,6 +117,7 @@ class ParameterPlane:
         self.dtype = jnp.dtype(dtype)
         self.mesh = mesh
         self.row_axis = row_axis
+        self.dim_axis = dim_axis
         self._row_shards = 1
         self._sharding: NamedSharding | None = None
         if mesh is not None and row_axis in mesh.axis_names:

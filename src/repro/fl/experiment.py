@@ -19,6 +19,7 @@ from repro.data.synthetic import make_task
 from repro.fl.devices import PAPER_SIM_MIX, make_device_fleet
 from repro.fl.network import NetworkModel
 from repro.fl.simulator import Simulator
+from repro.fl.tasks import MLP_TASK, default_task
 
 PyTree = Any
 
@@ -33,8 +34,6 @@ def build_clients(
     samples_per_client: int = 96,
     local_epochs: int = 5,
 ):
-    from repro.models.mlp import init_mlp
-
     rng = np.random.default_rng(seed)
     task = make_task(
         task_name, num_clients, rng,
@@ -42,7 +41,7 @@ def build_clients(
     )
     fleet = make_device_fleet(num_clients, rng, device_mix or PAPER_SIM_MIX, base_round_time)
     cfg = PAPER_TASKS[task_name]
-    init_params = init_mlp(cfg, jax.random.PRNGKey(seed))
+    init_params = MLP_TASK.init_params(jax.random.PRNGKey(seed), cfg)
     clients = [
         SimClient(
             client_id=i,
@@ -130,6 +129,20 @@ def run_experiment(
     client_backend: str | None = None,
     **strategy_kw,
 ):
+    if default_task().name == "lm":
+        # REPRO_TASK=lm swaps the whole workload: token streams + LoRA/head
+        # deltas over a frozen transformer base instead of the synthetic
+        # MLP task. ``task_name`` (a PAPER_TASKS data recipe) does not
+        # apply there; the LM driver owns its data pipeline.
+        from repro.fl.lm_task import run_lm_experiment
+
+        return run_lm_experiment(
+            strategy_name, num_clients=num_clients, seed=seed,
+            max_time=max_time, rounds=rounds, eval_interval=eval_interval,
+            network=network, local_epochs=local_epochs,
+            base_round_time=base_round_time, client_backend=client_backend,
+            **strategy_kw,
+        )
     task, clients, init_params = build_clients(
         task_name, num_clients, seed=seed, latent_clusters=latent_clusters,
         device_mix=device_mix, samples_per_client=samples_per_client,

@@ -11,10 +11,10 @@ batchable. The fleet engine replaces those loops with three fused
 launches:
 
 * :meth:`ClientFleet.train_cohort` / :meth:`ClientFleet.train_client` —
-  ``jax.vmap`` over clients of a ``lax.scan`` over epochs
-  (:func:`repro.models.mlp.fleet_local_train`). Per-client ``lr`` /
-  ``epochs`` / ``head_only`` are vmapped operands, so heterogeneous epoch
-  budgets and partial fine-tuning stay per-row.
+  ``jax.vmap`` over clients of a ``lax.scan`` over epochs (the task's
+  ``fleet_local_train``). Per-client ``lr`` / ``epochs`` / ``head_only``
+  are vmapped operands, so heterogeneous epoch budgets and partial
+  fine-tuning stay per-row.
 * :meth:`ClientFleet.evaluate_fleet` — one masked-accuracy launch for the
   whole fleet per eval tick.
 * :meth:`ClientFleet.feedback_many` — batched ``predict_distributions``
@@ -49,7 +49,7 @@ import numpy as np
 
 from repro.common.pytrees import FlattenSpec, flatten_spec
 from repro.core.plane import ParameterPlane
-from repro.models import mlp
+from repro.fl.tasks import MLP_TASK
 
 PyTree = Any
 
@@ -58,53 +58,48 @@ def _pow2(n: int) -> int:
     return 1 if n <= 1 else 1 << (n - 1).bit_length()
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "max_epochs"))
-def _train_launch(mat, x_all, y_all, mask_all, gather, lr, epochs, head, *,
-                  spec: FlattenSpec, max_epochs: int):
+@functools.partial(jax.jit, static_argnames=("spec", "max_epochs", "task"))
+def _train_launch(mat, train, gather, lr, epochs, head, *,
+                  spec: FlattenSpec, max_epochs: int, task):
     # the cohort's data-row gather happens inside the launch, fused with the
-    # training compute — no materialized (P, n, dim) copies per round
-    x, y, mask = x_all[gather], y_all[gather], mask_all[gather]
+    # training compute — no materialized (P, n, ...) copies per round. The
+    # whole train dict is gathered; tensors the task never reads (e.g. the
+    # MLP feedback path ignoring labels) are pruned by XLA DCE.
+    d = {k: v[gather] for k, v in train.items()}
     params_b = jax.vmap(spec._unflatten)(mat)
-    new_b, losses = mlp.fleet_local_train(
-        params_b, x, y, mask, lr, epochs, head, max_epochs=max_epochs
+    new_b, losses = task.fleet_local_train(
+        params_b, d, lr, epochs, head, max_epochs=max_epochs
     )
     return jax.vmap(spec._flatten)(new_b), losses
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "max_epochs"))
-def _train_launch_bank(bank, sel, x_all, y_all, mask_all, gather, lr, epochs, head, *,
-                       spec: FlattenSpec, max_epochs: int):
+@functools.partial(jax.jit, static_argnames=("spec", "max_epochs", "task"))
+def _train_launch_bank(bank, sel, train, gather, lr, epochs, head, *,
+                       spec: FlattenSpec, max_epochs: int, task):
     # row-sliced variant: the model matrix is gathered from the fleet's
     # model-row bank INSIDE the launch. An eager per-call gather of dozens
     # of scattered plane rows is the slow path on CPU (that is why the
     # plane caches views); in-jit it compiles once and fuses with training.
     return _train_launch.__wrapped__(
-        bank[sel], x_all, y_all, mask_all, gather, lr, epochs, head,
-        spec=spec, max_epochs=max_epochs,
+        bank[sel], train, gather, lr, epochs, head,
+        spec=spec, max_epochs=max_epochs, task=task,
     )
 
 
-@functools.partial(jax.jit, static_argnames=("spec",))
-def _eval_launch(mat, x, y, mask, *, spec: FlattenSpec):
-    return mlp.fleet_evaluate(jax.vmap(spec._unflatten)(mat), x, y, mask)
+@functools.partial(jax.jit, static_argnames=("spec", "task"))
+def _eval_launch(mat, test, *, spec: FlattenSpec, task):
+    return task.fleet_evaluate(jax.vmap(spec._unflatten)(mat), test)
 
 
-@functools.partial(jax.jit, static_argnames=("spec", "num_classes"))
-def _feedback_launch(bank, sel, x_all, mask_all, gather, *, spec: FlattenSpec, num_classes: int):
+@functools.partial(jax.jit, static_argnames=("spec", "num_classes", "task"))
+def _feedback_launch(bank, sel, train, gather, *, spec: FlattenSpec,
+                     num_classes: int, task):
     # a probe sweep pairs hundreds of members against a handful of DISTINCT
     # centers: the (pairs, dim) probe matrix is expanded from the small
     # center bank inside the launch, never materialized eagerly
     mat = bank[sel]
-    x, mask = x_all[gather], mask_all[gather]
-    return mlp.fleet_predict_distributions(
-        jax.vmap(spec._unflatten)(mat), x, mask, num_classes
-    )
-
-
-def _pad_rows(arr: np.ndarray, n: int) -> np.ndarray:
-    if len(arr) == n:
-        return arr
-    return np.concatenate([arr, np.zeros((n - len(arr),) + arr.shape[1:], arr.dtype)])
+    d = {k: v[gather] for k, v in train.items()}
+    return task.fleet_feedback(jax.vmap(spec._unflatten)(mat), d, num_classes)
 
 
 class ClientFleet:
@@ -119,12 +114,16 @@ class ClientFleet:
     launches are client-wise vmaps), so trajectories do not depend on the
     mesh."""
 
-    def __init__(self, clients: Sequence[Any], template: PyTree, *, mesh: Any | None = None):
+    def __init__(self, clients: Sequence[Any], template: PyTree, *,
+                 mesh: Any | None = None, task: Any | None = None):
         self.clients = list(clients)
         self.ids = [c.client_id for c in self.clients]
         self.index = {cid: i for i, cid in enumerate(self.ids)}
         K = len(self.clients)
         self.num_classes = self.clients[0].num_classes
+        # the fleet's task: explicit arg, else the clients' own, else MLP.
+        # All clients must share one task (one fused launch per fleet).
+        self.task = task or getattr(self.clients[0], "task", None) or MLP_TASK
         self.spec = flatten_spec(template)
         if mesh is None:
             from repro.launch.mesh import fleet_mesh_from_env
@@ -142,8 +141,11 @@ class ClientFleet:
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec
 
-            self._row_sharding = NamedSharding(mesh, PartitionSpec("plane", *(None,) * 2))
-            self._vec_sharding = NamedSharding(mesh, PartitionSpec("plane", None))
+            # (clients, ...) tensors of any rank shard over the row axis
+            self._dim_shardings: dict[int, Any] = {}
+            self._sharding_of = lambda ndim: self._dim_shardings.setdefault(
+                ndim, NamedSharding(mesh, PartitionSpec("plane", *(None,) * (ndim - 1)))
+            )
             self._replicated = NamedSharding(mesh, PartitionSpec())
         self.plane = ParameterPlane(template, capacity=2 * K, mesh=mesh)
         self._model_row = [self.plane.alloc() for _ in range(K)]
@@ -170,8 +172,7 @@ class ClientFleet:
         axis (no-op without a mesh)."""
         if self.mesh is None:
             return x
-        sh = self._row_sharding if x.ndim == 3 else self._vec_sharding
-        return jax.device_put(x, sh)
+        return jax.device_put(x, self._sharding_of(x.ndim))
 
     def _rep(self, x) -> jax.Array:
         """Replicate a small launch operand (a stacked model matrix, gather
@@ -182,36 +183,15 @@ class ClientFleet:
         return jax.device_put(jnp.asarray(x), self._replicated)
 
     def _build_data(self) -> None:
-        """(Re)pad every client's train/test split into the batched device
-        tensors + validity masks, and cache the true label histograms."""
+        """(Re)pad every client's train/test split into the task's batched
+        device tensors, and cache the true label histograms."""
         self._data_ref = [c.data for c in self.clients]
-        n_tr = max(len(c.data.y_train) for c in self.clients)
-        n_te = max(len(c.data.y_test) for c in self.clients)
-        self.x_train = self._shard_clients(jnp.asarray(
-            np.stack([_pad_rows(np.asarray(c.data.x_train, np.float32), n_tr) for c in self.clients])
-        ))
-        self.y_train = self._shard_clients(jnp.asarray(
-            np.stack([_pad_rows(np.asarray(c.data.y_train, np.int32), n_tr) for c in self.clients])
-        ))
-        self.train_mask = self._shard_clients(jnp.asarray(
-            np.stack([
-                _pad_rows(np.ones(len(c.data.y_train), np.float32), n_tr) for c in self.clients
-            ])
-        ))
-        self.x_test = self._shard_clients(jnp.asarray(
-            np.stack([_pad_rows(np.asarray(c.data.x_test, np.float32), n_te) for c in self.clients])
-        ))
-        self.y_test = self._shard_clients(jnp.asarray(
-            np.stack([_pad_rows(np.asarray(c.data.y_test, np.int32), n_te) for c in self.clients])
-        ))
-        self.test_mask = self._shard_clients(jnp.asarray(
-            np.stack([
-                _pad_rows(np.ones(len(c.data.y_test), np.float32), n_te) for c in self.clients
-            ])
-        ))
-        self.f_true = np.stack([
-            c.data.label_histogram(self.num_classes).astype(np.float32) for c in self.clients
-        ])
+        fd = self.task.build_fleet_data(
+            self._data_ref, self._shard_clients, self.num_classes
+        )
+        self._train_data = fd.train
+        self._test_data = fd.test
+        self.f_true = fd.f_true
 
     def _sync_data(self) -> None:
         """Match the loop backend's live-read semantics: a replaced
@@ -304,9 +284,7 @@ class ClientFleet:
         max_epochs = int(epochs.max()) if len(epochs) else 0
         self.launches += 1
         args = (
-            self.x_train,
-            self.y_train,
-            self.train_mask,
+            self._train_data,
             self._rep(idx),
             self._rep(lr),
             self._rep(epochs),
@@ -314,11 +292,13 @@ class ClientFleet:
         )
         if bank is not None:
             vecs, losses = _train_launch_bank(
-                self._rep(bank), self._rep(idx), *args, spec=self.spec, max_epochs=max_epochs
+                self._rep(bank), self._rep(idx), *args,
+                spec=self.spec, max_epochs=max_epochs, task=self.task,
             )
         else:
             vecs, losses = _train_launch(
-                self._rep(mat), *args, spec=self.spec, max_epochs=max_epochs
+                self._rep(mat), *args,
+                spec=self.spec, max_epochs=max_epochs, task=self.task,
             )
         return vecs[:S], losses[:S]
 
@@ -418,7 +398,7 @@ class ClientFleet:
         mat = plane.rows(tuple(self._eval_row), on_mesh=self.mesh is not None)
         self.launches += 1
         accs = np.asarray(
-            _eval_launch(mat, self.x_test, self.y_test, self.test_mask, spec=self.spec)
+            _eval_launch(mat, self._test_data, spec=self.spec, task=self.task)
         )
         if zero.any():
             accs = np.where(zero, 0.0, accs)
@@ -456,8 +436,8 @@ class ClientFleet:
             sel = np.concatenate([sel, np.full(P - M, sel[0], np.int32)])
         self.launches += 1
         f_pred, s_soft = _feedback_launch(
-            self._rep(bank), self._rep(sel), self.x_train, self.train_mask, self._rep(gather),
-            spec=self.spec, num_classes=self.num_classes,
+            self._rep(bank), self._rep(sel), self._train_data, self._rep(gather),
+            spec=self.spec, num_classes=self.num_classes, task=self.task,
         )
         f_pred, s_soft = jax.device_get((f_pred[:M], s_soft[:M]))
         return np.asarray(f_pred), self.f_true[idx], np.asarray(s_soft)

@@ -1,0 +1,439 @@
+"""REPRO_TASK=lm: personalized LM fine-tuning as plane rows.
+
+Each simulated device personalizes a FROZEN transformer base (the
+``tiny_lm`` config by default) by training a small delta pytree:
+
+* ``head_a``/``head_b`` — a LoRA factorization of the output head. With
+  tied embeddings the update merges into the embedding matrix, so it
+  personalizes both the input lookup and the logits (the tied-weight
+  analogue of a per-client classifier head).
+* ``wq`` — per-slot LoRA on the attention query projections of the
+  scanned blocks, so local training runs the flash-attention kernels
+  forward AND backward, not just a linear probe over frozen features.
+
+Only the delta rides the wire and becomes a plane row: the base lives in
+a :class:`FrozenBase` (a ``register_static`` pytree wrapper with zero
+array leaves), so ``simulator.model_bytes`` bills uploads/downlinks at
+delta size automatically and the server's clustering plane stores
+``dim = size(delta)`` rows, not ``size(base)``.
+
+Per-client data is a token stream (:mod:`repro.data.lm`): clients in the
+same latent cluster share one Zipf+Markov distribution (same support
+permutation and successor table) but draw disjoint sequences. Feedback
+distributions (Eq. 2/3) histogram token ids into ``buckets`` classes
+(``token_id % J``) — the LM analogue of the MLP label histogram, sized so
+the server's chi2 kernels stay (J,)-cheap regardless of vocab.
+
+LoRA b-factors init to zero, so every client's initial delta row sits at
+the plane origin and row distance directly measures personalization
+divergence — the EchoPFL Eq. 1 metric, unpolluted by base weights.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.data.lm import TokenStream, TokenStreamConfig
+from repro.fl.tasks import FleetData, pad_rows
+from repro.models.model import forward as model_forward
+from repro.models.model import init_params as model_init_params
+
+PyTree = Any
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True, eq=False)
+class FrozenBase:
+    """Static pytree wrapper for the frozen base parameters.
+
+    ``register_static`` makes it flatten to ZERO leaves (the whole object
+    is treedef metadata), which is what keeps the base out of every
+    leaf-walking code path at once: ``model_bytes`` bills payloads that
+    carry it at 0 bytes, ``flatten_spec`` rows exclude it, and jit treats
+    it as a compile-time constant. ``eq=False`` gives identity hash/eq —
+    comparing multi-MB pytrees per jit-cache lookup would be absurd."""
+
+    params: PyTree
+
+
+@dataclasses.dataclass
+class LMClientData:
+    """One client's token sequences, pre-split. Mirrors the surface the
+    coordination layers read from ``ClientDataset``: ``n`` (upload
+    weighting) and ``label_histogram`` (feedback f_true)."""
+
+    tokens_train: np.ndarray  # (n_train, S) int32
+    labels_train: np.ndarray  # (n_train, S) int32 next-token targets
+    tokens_test: np.ndarray  # (n_test, S) int32
+    labels_test: np.ndarray
+    latent_cluster: int = 0
+
+    @property
+    def n(self) -> int:
+        return len(self.tokens_train)
+
+    def label_histogram(self, num_classes: int) -> np.ndarray:
+        """Counts of target tokens per ``token_id % J`` bucket (the LM
+        analogue of the MLP class histogram — counts, not frequencies,
+        matching ``ClientDataset.label_histogram``)."""
+        return np.bincount(
+            self.labels_train.reshape(-1) % num_classes, minlength=num_classes
+        ).astype(np.float64)
+
+
+@dataclasses.dataclass(frozen=True)
+class LMTask:
+    """PersonalizationTask over LoRA/head deltas on a frozen base.
+
+    Frozen + hashable: ``base`` hashes by identity (FrozenBase), ``cfg``
+    by value, so the fleet's static-task jit cache keys correctly."""
+
+    base: FrozenBase
+    cfg: ModelConfig
+    lora_rank: int = 4
+    buckets: int = 16
+    name: str = "lm"
+
+    # ---- delta pytree ---------------------------------------------------
+    def init_params(self, key: jax.Array) -> PyTree:
+        cfg, r = self.cfg, self.lora_rank
+        d, V, P = cfg.d_model, cfg.padded_vocab, cfg.num_periods
+        k_head, k_wq = jax.random.split(key)
+        delta: dict[str, Any] = {
+            # standard LoRA init: a random, b zero — the initial delta is an
+            # exact zero update, so initial rows sit at the plane origin
+            "head_a": jax.random.normal(k_head, (d, r), jnp.float32) / np.sqrt(d),
+            "head_b": jnp.zeros((r, V), jnp.float32),
+            "wq": {},
+        }
+        for i, spec in enumerate(cfg.pattern):
+            if spec.mixer in ("attn", "attn_local"):
+                k_wq, k = jax.random.split(k_wq)
+                hk = cfg.num_heads * cfg.resolved_head_dim
+                delta["wq"][f"slot{i}"] = {
+                    "a": jax.random.normal(k, (P, d, r), jnp.float32) / np.sqrt(d),
+                    "b": jnp.zeros((P, r, hk), jnp.float32),
+                }
+        return delta
+
+    def merged(self, delta: PyTree) -> PyTree:
+        """Base + delta as effective forward params (pure, jit-traceable;
+        the base leaves fold in as constants)."""
+        base = self.base.params
+        cfg = self.cfg
+        scale = 1.0 / self.lora_rank
+        params = dict(base)
+        head_upd = (delta["head_a"] @ delta["head_b"]) * scale  # (d, V)
+        if cfg.tie_embeddings:
+            params["embed"] = base["embed"] + head_upd.T.astype(base["embed"].dtype)
+        else:
+            params["lm_head"] = base["lm_head"] + head_upd.astype(base["lm_head"].dtype)
+        if delta["wq"]:
+            blocks = dict(base["blocks"])
+            for slot, ab in delta["wq"].items():
+                sp = dict(blocks[slot])
+                mx = dict(sp["mixer"])
+                upd = jnp.einsum("pdr,prx->pdx", ab["a"], ab["b"]) * scale
+                mx["wq"] = mx["wq"] + upd.reshape(mx["wq"].shape).astype(mx["wq"].dtype)
+                sp["mixer"] = mx
+                blocks[slot] = sp
+            params["blocks"] = blocks
+        return params
+
+    # ---- per-client arithmetic (the vmap operands) ----------------------
+    def _nll(self, delta, tokens, labels, seq_mask):
+        """Mean next-token NLL over valid sequences (padded rows masked)."""
+        logits, _, _ = model_forward(self.cfg, self.merged(delta), {"tokens": tokens})
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        per = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]  # (n, S)
+        per = per * seq_mask[:, None]
+        denom = jnp.maximum(jnp.sum(seq_mask) * tokens.shape[1], 1.0)
+        return -(jnp.sum(per) / denom)
+
+    def _scan_train(self, delta, tokens, labels, seq_mask, lr, epochs, head_frac,
+                    max_epochs: int):
+        """Multi-epoch full-batch SGD on the delta, mirroring
+        ``mlp._scan_train``: steps past this client's ``epochs`` budget are
+        carried through untouched, and head-only fine-tuning selects the
+        block-LoRA gradients to exact zeros (the head LoRA is the LM
+        analogue of the MLP's last layer)."""
+
+        def step(carry, e):
+            p, last_loss = carry
+            loss, grads = jax.value_and_grad(
+                lambda q: self._nll(q, tokens, labels, seq_mask)
+            )(p)
+            freeze_body = head_frac > 0
+            gw = jax.tree_util.tree_map(
+                lambda g: jnp.where(freeze_body, jnp.zeros_like(g), g), grads["wq"]
+            )
+            grads = {**grads, "wq": gw}
+            new = jax.tree_util.tree_map(lambda a, g: a - lr * g, p, grads)
+            active = e < epochs
+            p2 = jax.tree_util.tree_map(
+                lambda old, nw: jnp.where(active, nw, old), p, new
+            )
+            return (p2, jnp.where(active, loss, last_loss)), None
+
+        (delta, loss), _ = jax.lax.scan(
+            step, (delta, jnp.zeros(())), jnp.arange(max_epochs)
+        )
+        return delta, loss
+
+    def _accuracy(self, delta, tokens, labels, seq_mask):
+        logits, _, _ = model_forward(self.cfg, self.merged(delta), {"tokens": tokens})
+        pred = jnp.argmax(logits, axis=-1)
+        correct = (pred == labels).astype(jnp.float32) * seq_mask[:, None]
+        denom = jnp.maximum(jnp.sum(seq_mask) * tokens.shape[1], 1.0)
+        return jnp.sum(correct) / denom
+
+    def _distributions(self, delta, tokens, seq_mask, num_classes: int):
+        """(F_pred, S_soft) over ``token_id % J`` buckets: predicted-token
+        bucket counts and the mean bucket-aggregated softmax."""
+        J = num_classes
+        logits, _, _ = model_forward(self.cfg, self.merged(delta), {"tokens": tokens})
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # (n, S, V)
+        pred = jnp.argmax(logits, axis=-1)  # (n, S)
+        bucket = jax.nn.one_hot(jnp.arange(logits.shape[-1]) % J, J)  # (V, J)
+        valid = seq_mask[:, None]  # (n, 1)
+        onehot = jax.nn.one_hot(pred % J, J) * valid[..., None]
+        hist = jnp.sum(onehot, axis=(0, 1))  # (J,) bucket counts
+        sprob = jnp.einsum("nsv,vj->nsj", probs, bucket) * valid[..., None]
+        denom = jnp.maximum(jnp.sum(seq_mask) * tokens.shape[1], 1.0)
+        return hist, jnp.sum(sprob, axis=(0, 1)) / denom
+
+    # ---- fleet engine (batched; called inside the fleet's jits) ---------
+    def build_fleet_data(self, datasets, shard, num_classes):
+        n_tr = max(d.n for d in datasets)
+        n_te = max(len(d.tokens_test) for d in datasets)
+
+        def stack(attr, n):
+            return shard(jnp.asarray(np.stack(
+                [pad_rows(np.asarray(getattr(d, attr), np.int32), n) for d in datasets]
+            )))
+
+        def masks(n, lens):
+            return shard(jnp.asarray(np.stack(
+                [pad_rows(np.ones(k, np.float32), n) for k in lens]
+            )))
+
+        train = {
+            "tokens": stack("tokens_train", n_tr),
+            "labels": stack("labels_train", n_tr),
+            "mask": masks(n_tr, [d.n for d in datasets]),
+        }
+        test = {
+            "tokens": stack("tokens_test", n_te),
+            "labels": stack("labels_test", n_te),
+            "mask": masks(n_te, [len(d.tokens_test) for d in datasets]),
+        }
+        f_true = np.stack([
+            d.label_histogram(num_classes).astype(np.float32) for d in datasets
+        ])
+        return FleetData(train=train, test=test, f_true=f_true)
+
+    def fleet_local_train(self, params_b, train, lr, epochs, head, *, max_epochs):
+        return jax.vmap(
+            functools.partial(self._scan_train, max_epochs=max_epochs)
+        )(params_b, train["tokens"], train["labels"], train["mask"], lr, epochs, head)
+
+    def fleet_evaluate(self, params_b, test):
+        return jax.vmap(self._accuracy)(
+            params_b, test["tokens"], test["labels"], test["mask"]
+        )
+
+    def fleet_feedback(self, params_b, train, num_classes):
+        return jax.vmap(
+            functools.partial(self._distributions, num_classes=num_classes)
+        )(params_b, train["tokens"], train["mask"])
+
+    # ---- per-client entry points (loop backend / SimClient) -------------
+    def local_train(self, params, data, *, epochs, lr, head_only):
+        mask = jnp.ones((data.n,), jnp.float32)
+        delta, loss = _client_train(
+            self, params, jnp.asarray(data.tokens_train), jnp.asarray(data.labels_train),
+            mask, jnp.asarray(lr, jnp.float32), jnp.asarray(epochs, jnp.int32),
+            jnp.asarray(1.0 if head_only else 0.0, jnp.float32), max_epochs=epochs,
+        )
+        return delta, loss
+
+    def evaluate(self, params, data):
+        return float(_client_eval(
+            self, params, jnp.asarray(data.tokens_test), jnp.asarray(data.labels_test),
+            jnp.ones((len(data.tokens_test),), jnp.float32),
+        ))
+
+    def feedback_inputs(self, params, data, num_classes):
+        f_pred, s_soft = _client_feedback(
+            self, params, jnp.asarray(data.tokens_train),
+            jnp.ones((data.n,), jnp.float32), num_classes=num_classes,
+        )
+        f_true = data.label_histogram(num_classes)
+        return np.asarray(f_pred), f_true.astype(np.float32), np.asarray(s_soft)
+
+
+@functools.partial(jax.jit, static_argnames=("task", "max_epochs"))
+def _client_train(task, delta, tokens, labels, mask, lr, epochs, head_frac, *,
+                  max_epochs: int):
+    return task._scan_train(delta, tokens, labels, mask, lr, epochs, head_frac,
+                            max_epochs=max_epochs)
+
+
+@functools.partial(jax.jit, static_argnames=("task",))
+def _client_eval(task, delta, tokens, labels, mask):
+    return task._accuracy(delta, tokens, labels, mask)
+
+
+@functools.partial(jax.jit, static_argnames=("task", "num_classes"))
+def _client_feedback(task, delta, tokens, mask, *, num_classes: int):
+    return task._distributions(delta, tokens, mask, num_classes)
+
+
+# ---------------------------------------------------------------------------
+# data + experiment drivers
+# ---------------------------------------------------------------------------
+
+
+_DEFAULT_LM_TASK: LMTask | None = None
+
+
+def default_lm_task() -> LMTask:
+    """The singleton ``REPRO_TASK=lm`` task (tiny_lm base, PRNGKey(0)).
+
+    A singleton on purpose: the task is a static jit-cache key, so every
+    resolver call must hand back the SAME object or each lookup would
+    recompile the fleet launches."""
+    global _DEFAULT_LM_TASK
+    if _DEFAULT_LM_TASK is None:
+        cfg = get_config("tiny_lm")
+        base = model_init_params(cfg, jax.random.PRNGKey(0))
+        _DEFAULT_LM_TASK = LMTask(base=FrozenBase(base), cfg=cfg)
+    return _DEFAULT_LM_TASK
+
+
+def make_lm_data(
+    num_clients: int,
+    *,
+    vocab_size: int,
+    latent_clusters: int = 4,
+    n_train: int = 8,
+    n_test: int = 4,
+    seq_len: int = 32,
+    seed: int = 0,
+) -> list[LMClientData]:
+    """Per-client token datasets with cluster-structured heterogeneity.
+
+    All clients of a latent cluster share one stream DISTRIBUTION (support
+    permutation + Markov successor table come from the cluster seed); each
+    client then draws its own sequences from a reseeded sampler — same
+    personalization geometry as the synthetic MLP tasks."""
+    out = []
+    for i in range(num_clients):
+        cl = i % latent_clusters
+        stream = TokenStream(TokenStreamConfig(
+            vocab_size=vocab_size, seq_len=seq_len, batch_size=1,
+            seed=7000 + 17 * cl + seed,
+        ))
+        # distribution tables are built; re-seed only the sampling rng
+        stream.rng = np.random.default_rng(100_003 * (seed + 1) + i)
+        seqs = np.stack([stream._sample_seq(seq_len + 1) for _ in range(n_train + n_test)])
+        tok, lab = seqs[:, :-1].astype(np.int32), seqs[:, 1:].astype(np.int32)
+        out.append(LMClientData(
+            tokens_train=tok[:n_train], labels_train=lab[:n_train],
+            tokens_test=tok[n_train:], labels_test=lab[n_train:],
+            latent_cluster=cl,
+        ))
+    return out
+
+
+def build_lm_clients(
+    num_clients: int,
+    *,
+    seed: int = 0,
+    latent_clusters: int = 4,
+    device_mix: dict | None = None,
+    base_round_time: float = 30.0,
+    local_epochs: int = 2,
+    lr: float = 0.5,
+    n_train: int = 8,
+    n_test: int = 4,
+    seq_len: int = 32,
+    task: LMTask | None = None,
+):
+    """(clients, task, init_delta) for the LM workload — the LM analogue of
+    ``experiment.build_clients``."""
+    from repro.core.client import SimClient
+    from repro.fl.devices import PAPER_SIM_MIX, make_device_fleet
+
+    task = task or default_lm_task()
+    rng = np.random.default_rng(seed)
+    datasets = make_lm_data(
+        num_clients, vocab_size=task.cfg.vocab_size, latent_clusters=latent_clusters,
+        n_train=n_train, n_test=n_test, seq_len=seq_len, seed=seed,
+    )
+    fleet = make_device_fleet(num_clients, rng, device_mix or PAPER_SIM_MIX, base_round_time)
+    clients = [
+        SimClient(
+            client_id=i,
+            data=datasets[i],
+            num_classes=task.buckets,
+            device_class=fleet[i]["class"],
+            round_time_fn=fleet[i]["round_time"],
+            local_epochs=local_epochs,
+            lr=lr,
+            task=task,
+        )
+        for i in range(num_clients)
+    ]
+    init_delta = task.init_params(jax.random.PRNGKey(seed))
+    return clients, task, init_delta
+
+
+def run_lm_experiment(
+    strategy_name: str,
+    *,
+    num_clients: int = 8,
+    seed: int = 0,
+    max_time: float = 1800.0,
+    rounds: int = 5,
+    eval_interval: float = 120.0,
+    network=None,
+    local_epochs: int = 2,
+    base_round_time: float = 30.0,
+    client_backend: str | None = None,
+    latent_clusters: int = 4,
+    n_train: int = 8,
+    n_test: int = 4,
+    seq_len: int = 32,
+    **strategy_kw,
+):
+    """End-to-end LM personalization run: returns (task, clients, strategy,
+    report) like ``experiment.run_experiment``. Sync strategies go through
+    ``run_sync`` round barriers; async ones through the (coalesced) event
+    loop — both on delta payloads."""
+    from repro.fl.experiment import build_strategy
+    from repro.fl.network import NetworkModel
+    from repro.fl.simulator import Simulator
+
+    clients, task, init_delta = build_lm_clients(
+        num_clients, seed=seed, latent_clusters=latent_clusters,
+        base_round_time=base_round_time, local_epochs=local_epochs,
+        n_train=n_train, n_test=n_test, seq_len=seq_len,
+    )
+    strategy = build_strategy(strategy_name, init_delta, clients, seed=seed, **strategy_kw)
+    sim = Simulator(
+        clients, strategy,
+        network=network or NetworkModel(),
+        eval_interval=eval_interval, seed=seed, client_backend=client_backend,
+    )
+    report = sim.run(max_time=max_time, rounds=rounds)
+    report.extra["task"] = "lm"
+    report.extra["latent_clusters"] = {c.client_id: c.data.latent_cluster for c in clients}
+    return task, clients, strategy, report

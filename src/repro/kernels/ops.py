@@ -104,8 +104,15 @@ def _local_attention(q, k, v, *, causal, scale, window, softcap, q_pos0):
     a Mosaic kernel does not have), which poisons byte accounting. The cost
     model then filters the reference's S^2 tensors and substitutes the
     kernels' analytic streaming traffic (hlo_cost.skip_trailing +
-    dryrun.flash_attention_analytic_bytes)."""
-    if _FORCE == "ref" or os.environ.get("REPRO_ATTN_COST_PROXY") == "1":
+    dryrun.flash_attention_analytic_bytes).
+
+    Backend dispatch follows the documented ``REPRO_KERNELS`` contract
+    (same rule as ``flash_attention`` above): ``auto`` lowers the kernels
+    only on TPU and the AD-able jnp oracle elsewhere — interpret-mode
+    execution is a per-grid-step interpreter loop, ~100x slower than the
+    oracle under a wide vmap (the LM fleet's cohort launches), and is
+    reserved for the explicit ``pallas`` CI parity sweeps."""
+    if os.environ.get("REPRO_ATTN_COST_PROXY") == "1" or not _use_pallas():
         return ref.flash_attention_ref(
             q, k, v, causal=causal, scale=scale, window=window,
             softcap=softcap, q_pos0=q_pos0,
@@ -198,25 +205,32 @@ def _chi2_single(f_pred, f_true, s_soft):
     return _chi2_local(f_pred, f_true, s_soft)
 
 
-@functools.partial(jax.jit, static_argnames=("mesh", "axis"))
-def _chi2_mesh(f_pred, f_true, s_soft, mesh, axis):
-    return plane_sharded.chi2_rows_sharded(f_pred, f_true, s_soft, mesh, axis, _chi2_local)
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "dim_axis"))
+def _chi2_mesh(f_pred, f_true, s_soft, mesh, axis, dim_axis=None):
+    return plane_sharded.chi2_rows_sharded(
+        f_pred, f_true, s_soft, mesh, axis, _chi2_local, dim_axis=dim_axis
+    )
 
 
-def chi2_feedback(f_pred, f_true, s_soft, *, mesh=None, axis="plane"):
+def chi2_feedback(f_pred, f_true, s_soft, *, mesh=None, axis="plane", dim_axis="model"):
     """Per-row Eq. 2/3 feedback statistic, (M, J) -> (M,) in one launch.
 
-    With a plane mesh, the M probe rows shard over ``axis`` and every shard
-    scores only its rows (per-row arithmetic is shard-local, so scores are
+    With a plane mesh, the M probe rows shard over ``axis`` — and over the
+    model axis too when one is active (the feedback operands have no model
+    dim, so it contributes row-parallelism) — and every shard scores only
+    its rows (per-row arithmetic is shard-local, so scores are
     bitwise-identical to the single-device launch). This is the
     dissolve/expand probe path: it goes sharded only when the flagged-pair
     count crosses the plane's ``mesh_min_rows`` threshold."""
-    if _mesh_active(mesh, axis):
+    ms = _model_axis_size(mesh, dim_axis) if mesh is not None else 1
+    if _mesh_active(mesh, axis) or ms > 1:
         M = f_pred.shape[0]
-        f_pred = _to_mesh_rows(mesh, axis, jnp.asarray(f_pred))
-        f_true = _to_mesh_rows(mesh, axis, jnp.asarray(f_true), fill=1)
-        s_soft = _to_mesh_rows(mesh, axis, jnp.asarray(s_soft))
-        return _chi2_mesh(f_pred, f_true, s_soft, mesh=mesh, axis=axis)[:M]
+        da = dim_axis if ms > 1 else None
+        row_axes = (axis, da) if da is not None else (axis,)
+        f_pred = _to_mesh_rows(mesh, axis, jnp.asarray(f_pred), row_axes=row_axes)
+        f_true = _to_mesh_rows(mesh, axis, jnp.asarray(f_true), fill=1, row_axes=row_axes)
+        s_soft = _to_mesh_rows(mesh, axis, jnp.asarray(s_soft), row_axes=row_axes)
+        return _chi2_mesh(f_pred, f_true, s_soft, mesh=mesh, axis=axis, dim_axis=da)[:M]
     return _chi2_single(f_pred, f_true, s_soft)
 
 
@@ -231,6 +245,34 @@ def chi2_feedback(f_pred, f_true, s_soft, *, mesh=None, axis="plane"):
 
 def _mesh_active(mesh, axis: str) -> bool:
     return mesh is not None and axis in mesh.axis_names and mesh.shape[axis] > 1
+
+
+def _model_compute_on() -> bool:
+    """The model-axis compute knob (REPRO_PLANE_MODEL_COMPUTE): ``on`` (the
+    default) lets an R×M plane mesh shard kernel *compute* over the flat
+    parameter dim; ``off`` reverts to replicating operands over the model
+    axis (storage may still shard — the PR-2 behavior). Read per call so
+    tests can flip it without reimporting."""
+    return os.environ.get("REPRO_PLANE_MODEL_COMPUTE", "on").lower() not in (
+        "off", "0", "none", "false"
+    )
+
+
+def _model_axis_size(mesh, dim_axis) -> int:
+    """Model-axis extent usable for compute (1 when absent/disabled)."""
+    if mesh is None or dim_axis is None or not _model_compute_on():
+        return 1
+    if dim_axis not in mesh.axis_names:
+        return 1
+    return int(mesh.shape[dim_axis])
+
+
+def _dim_shards(mesh, dim_axis, dim: int) -> int:
+    """Shard count for splitting a flat parameter dim over the model axis:
+    the axis extent when it divides ``dim``, else 1 (fall back to
+    replicated operands, mirroring the plane's storage rule)."""
+    m = _model_axis_size(mesh, dim_axis)
+    return m if m > 1 and dim % m == 0 else 1
 
 
 def _to_mesh(mesh, *arrays):
@@ -255,15 +297,23 @@ def _to_mesh(mesh, *arrays):
     return out
 
 
-def _to_mesh_rows(mesh, axis, x, fill=0):
+def _to_mesh_rows(mesh, axis, x, fill=0, *, row_axes=None, dim_axis=None):
     """Place a row-batched operand *sharded* over ``axis`` (rows padded up
     to the shard count first). The fleet-scale operand — an (M, dim) upload
     matrix, (M, J) feedback rows — must never be materialized whole on
     every device; replicate-then-reshard would cost shard_count x the
-    sharded footprint on exactly the path sharding exists to relieve."""
+    sharded footprint on exactly the path sharding exists to relieve.
+
+    ``row_axes`` spreads the rows over several mesh axes jointly (the chi2
+    kernels recruit the model axis for row-parallelism); ``dim_axis``
+    additionally shards the trailing dim (the L1 kernels' partial-sum
+    operands — the caller guarantees divisibility)."""
     from jax.sharding import NamedSharding, PartitionSpec
 
-    shards = mesh.shape[axis]
+    axes = tuple(row_axes) if row_axes is not None else (axis,)
+    shards = 1
+    for a in axes:
+        shards *= mesh.shape[a]
     rows = x.shape[0]
     rows_p = -(-rows // shards) * shards
     if rows_p != rows:
@@ -272,11 +322,35 @@ def _to_mesh_rows(mesh, axis, x, fill=0):
             ((0, rows_p - rows),) + ((0, 0),) * (x.ndim - 1),
             constant_values=fill,
         )
-    want = NamedSharding(mesh, PartitionSpec(axis, *(None,) * (x.ndim - 1)))
+    trailing = [None] * (x.ndim - 1)
+    if dim_axis is not None and trailing:
+        trailing[-1] = dim_axis
+    rows_spec = axes[0] if len(axes) == 1 else axes
+    want = NamedSharding(mesh, PartitionSpec(rows_spec, *trailing))
     sharding = getattr(x, "sharding", None)
     if sharding is not None and sharding.is_equivalent_to(want, x.ndim):
         return x
     return jax.device_put(x, want)
+
+
+def _to_mesh_dim(mesh, dim_axis, *arrays):
+    """Place small operands with only the trailing dim sharded over the
+    model axis (replicated over rows): the arriving upload vector and the
+    center matrix of a dim-sharded launch. Arrays already laid out that way
+    (a plane ``take`` off a dim-sharded row store) pass through."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    out = []
+    for x in arrays:
+        want = NamedSharding(
+            mesh, PartitionSpec(*(None,) * (x.ndim - 1), dim_axis)
+        )
+        sharding = getattr(x, "sharding", None)
+        if sharding is not None and sharding.is_equivalent_to(want, x.ndim):
+            out.append(x)
+        else:
+            out.append(jax.device_put(x, want))
+    return out
 
 
 def _l1_pairwise_local(xs, centers):
@@ -302,21 +376,30 @@ def _l1_pairwise_single(xs, centers):
     return _l1_pairwise_local(xs, centers)
 
 
-@functools.partial(jax.jit, static_argnames=("mesh", "axis"))
-def _l1_pairwise_mesh(xs, centers, mesh, axis):
-    return plane_sharded.l1_pairwise_sharded(xs, centers, mesh, axis, _l1_pairwise_local)
+@functools.partial(jax.jit, static_argnames=("mesh", "axis", "dim_axis"))
+def _l1_pairwise_mesh(xs, centers, mesh, axis, dim_axis=None):
+    return plane_sharded.l1_pairwise_sharded(
+        xs, centers, mesh, axis, _l1_pairwise_local, dim_axis=dim_axis
+    )
 
 
-def l1_distance_pairwise(xs, centers, *, mesh=None, axis="plane"):
+def l1_distance_pairwise(xs, centers, *, mesh=None, axis="plane", dim_axis="model"):
     """(M, N) x (C, N) -> (M, C) L1 matrix in one launch (plane hot path).
 
     With a plane mesh, the M query rows shard over ``axis`` and each shard
-    scores only its rows (identical per-row arithmetic)."""
-    if _mesh_active(mesh, axis):
+    scores only its rows (identical per-row arithmetic). With a model axis
+    whose extent divides N, the flat dim shards too: each shard scores its
+    dim chunk and a psum over ``dim_axis`` completes the matrix."""
+    ds = _dim_shards(mesh, dim_axis, xs.shape[-1]) if mesh is not None else 1
+    if _mesh_active(mesh, axis) or ds > 1:
         M = xs.shape[0]
-        xs = _to_mesh_rows(mesh, axis, xs)
-        (centers,) = _to_mesh(mesh, centers)
-        return _l1_pairwise_mesh(xs, centers, mesh=mesh, axis=axis)[:M]
+        da = dim_axis if ds > 1 else None
+        xs = _to_mesh_rows(mesh, axis, xs, dim_axis=da)
+        if da is not None:
+            (centers,) = _to_mesh_dim(mesh, da, centers)
+        else:
+            (centers,) = _to_mesh(mesh, centers)
+        return _l1_pairwise_mesh(xs, centers, mesh=mesh, axis=axis, dim_axis=da)[:M]
     return _l1_pairwise_single(xs, centers)
 
 
@@ -327,24 +410,35 @@ def _assign_lerp_single(u, centers, beta):
     return ref.assign_and_lerp_ref(u, centers, beta)
 
 
-@functools.partial(jax.jit, static_argnames=("beta", "valid_rows", "mesh", "axis"))
-def _assign_lerp_mesh(u, centers, beta, valid_rows, mesh, axis):
+@functools.partial(jax.jit, static_argnames=("beta", "valid_rows", "mesh", "axis", "dim_axis"))
+def _assign_lerp_mesh(u, centers, beta, valid_rows, mesh, axis, dim_axis=None):
     return plane_sharded.assign_lerp_sharded(
-        u, centers, beta, mesh, axis, _l1_local, valid_rows=valid_rows
+        u, centers, beta, mesh, axis, _l1_local, valid_rows=valid_rows,
+        dim_axis=dim_axis,
     )
 
 
-def assign_and_lerp(u, centers, beta, *, mesh=None, axis="plane"):
+def assign_and_lerp(u, centers, beta, *, mesh=None, axis="plane", dim_axis="model"):
     """Fused Eq. 1 argmin + mixed-rate center blend: (dists, idx, blended).
 
     With a plane mesh, the C center rows shard over ``axis``; distances
     all_gather, the argmin replicates, and the winning row is fetched with
-    a one-hot psum — the full center matrix never moves."""
-    if _mesh_active(mesh, axis):
+    a one-hot psum — the full center matrix never moves. With a model axis
+    whose extent divides N, the dim shards too: per-shard partial L1 sums
+    psum into the distances and each model shard blends only its own chunk
+    of the winning row."""
+    ds = _dim_shards(mesh, dim_axis, u.shape[-1]) if mesh is not None else 1
+    if _mesh_active(mesh, axis) or ds > 1:
         C = centers.shape[0]
-        centers = _to_mesh_rows(mesh, axis, centers)
-        (u,) = _to_mesh(mesh, u)
-        return _assign_lerp_mesh(u, centers, beta, valid_rows=C, mesh=mesh, axis=axis)
+        da = dim_axis if ds > 1 else None
+        centers = _to_mesh_rows(mesh, axis, centers, dim_axis=da)
+        if da is not None:
+            (u,) = _to_mesh_dim(mesh, da, u)
+        else:
+            (u,) = _to_mesh(mesh, u)
+        return _assign_lerp_mesh(
+            u, centers, beta, valid_rows=C, mesh=mesh, axis=axis, dim_axis=da
+        )
     return _assign_lerp_single(u, centers, beta)
 
 
@@ -535,29 +629,38 @@ def _chi2_all_single(f_pred, f_true, s_soft, seg_ids, num_segments):
     return _chi2_seg_local(f_pred, f_true, s_soft, onehot)
 
 
-@functools.partial(jax.jit, static_argnames=("num_segments", "mesh", "axis"))
-def _chi2_all_mesh(f_pred, f_true, s_soft, seg_ids, num_segments, mesh, axis):
+@functools.partial(jax.jit, static_argnames=("num_segments", "mesh", "axis", "dim_axis"))
+def _chi2_all_mesh(f_pred, f_true, s_soft, seg_ids, num_segments, mesh, axis, dim_axis=None):
     onehot = (seg_ids[:, None] == jnp.arange(num_segments)[None, :]).astype(jnp.float32)
     return plane_sharded.chi2_all_sharded(
-        f_pred, f_true, s_soft, onehot, mesh, axis, _chi2_seg_local
+        f_pred, f_true, s_soft, onehot, mesh, axis, _chi2_seg_local, dim_axis=dim_axis
     )
 
 
-def chi2_feedback_all(f_pred, f_true, s_soft, seg_ids, num_segments, *, mesh=None, axis="plane"):
+def chi2_feedback_all(f_pred, f_true, s_soft, seg_ids, num_segments, *, mesh=None,
+                      axis="plane", dim_axis="model"):
     """Cluster-segmented feedback: every member of every cluster in one
     launch. ``seg_ids`` maps each row to its cluster slot in [0,
     num_segments); returns (g (M,), seg_sum (num_segments,)). With a plane
-    mesh, member rows shard over ``axis`` and segment sums psum."""
-    if _mesh_active(mesh, axis):
+    mesh, member rows shard over ``axis`` — plus the model axis when one is
+    active (row-parallelism; per-member g stays bitwise) — and segment sums
+    psum over every sharded axis."""
+    ms = _model_axis_size(mesh, dim_axis) if mesh is not None else 1
+    if _mesh_active(mesh, axis) or ms > 1:
         M = f_pred.shape[0]
-        f_pred = _to_mesh_rows(mesh, axis, f_pred)
-        f_true = _to_mesh_rows(mesh, axis, f_true)
-        s_soft = _to_mesh_rows(mesh, axis, s_soft)
+        da = dim_axis if ms > 1 else None
+        row_axes = (axis, da) if da is not None else (axis,)
+        f_pred = _to_mesh_rows(mesh, axis, f_pred, row_axes=row_axes)
+        f_true = _to_mesh_rows(mesh, axis, f_true, row_axes=row_axes)
+        s_soft = _to_mesh_rows(mesh, axis, s_soft, row_axes=row_axes)
         # padded members get segment -1: a one-hot row of zeros, so they
         # never contribute to any cluster's sum
-        seg_ids = _to_mesh_rows(mesh, axis, jnp.asarray(seg_ids, jnp.int32), fill=-1)
+        seg_ids = _to_mesh_rows(
+            mesh, axis, jnp.asarray(seg_ids, jnp.int32), fill=-1, row_axes=row_axes
+        )
         g, seg = _chi2_all_mesh(
-            f_pred, f_true, s_soft, seg_ids, num_segments, mesh=mesh, axis=axis
+            f_pred, f_true, s_soft, seg_ids, num_segments, mesh=mesh, axis=axis,
+            dim_axis=da,
         )
         return g[:M], seg
     return _chi2_all_single(f_pred, f_true, s_soft, seg_ids, num_segments)

@@ -35,9 +35,30 @@ here assume shard-divisible inputs and handle only the *masking* —
 padded center rows go to ``+inf`` distance before any argmin
 (``valid_rows``), padded member rows carry an all-zero segment one-hot
 (segment id -1) — while the dispatch slices padded query rows off the
-output. Meshes with an extra ``model`` axis replicate these kernels'
-operands over it (the plane may still *store* ``dim`` sharded; shard_map
-reshards on entry).
+output.
+
+Meshes with an extra ``model`` axis additionally shard the *compute* over
+the flat parameter dim (``dim_axis``), so a row wider than one device
+never materializes whole anywhere:
+
+  * the L1 kernels run the single-device kernel body on each shard's dim
+    chunk — a chunk's L1 IS the partial sum over those coordinates — and
+    one ``psum`` over ``dim_axis`` stitches the full per-row distances
+    (last-ulp vs the single-device flat reduction; the R×M subprocess
+    trajectory harness in tests/test_model_axis_plane.py pins that the
+    server's *decisions* and blended centers stay identical);
+  * the assign blend is elementwise, so each model shard blends only its
+    own dim chunk of the winning row — per-element arithmetic unchanged,
+    bitwise-identical to the single-device blend;
+  * the chi2 kernels spread their member/probe *rows* over both axes
+    (the feedback operands have no model dim — per-row arithmetic stays
+    shard-local and bitwise; segment sums psum over both axes).
+
+The dispatch layer only passes ``dim_axis`` when the model axis is real
+(present, >1 shards, knob on) and — for the L1 kernels — the flat dim is
+shard-divisible; otherwise these wrappers replicate over it exactly as
+before (the plane may still *store* ``dim`` sharded; shard_map reshards
+on entry).
 """
 from __future__ import annotations
 
@@ -55,17 +76,32 @@ from jax.sharding import PartitionSpec as P
 
 def l1_pairwise_sharded(
     xs: jax.Array,  # (M_padded, N) query rows, shard-divisible
-    centers: jax.Array,  # (C, N) replicated
+    centers: jax.Array,  # (C, N) replicated over rows (dim-sharded w/ dim_axis)
     mesh: jax.sharding.Mesh,
     axis: str,
     local_fn: Callable[[jax.Array, jax.Array], jax.Array],
+    dim_axis: str | None = None,
 ) -> jax.Array:
     """(M_padded, C) pairwise L1 with M sharded over ``axis``; the caller
-    slices the padded query rows off."""
+    slices the padded query rows off. With ``dim_axis`` the flat dim also
+    shards: each shard's kernel body scores only its dim chunk (a partial
+    L1 sum) and one ``psum`` over ``dim_axis`` yields the full matrix."""
+    if dim_axis is None:
+        return shard_map(
+            local_fn,
+            mesh=mesh,
+            in_specs=(P(axis, None), P(None, None)),
+            out_specs=P(axis, None),
+            check_rep=False,
+        )(xs, centers)
+
+    def body(x_local, c_local):
+        return jax.lax.psum(local_fn(x_local, c_local), dim_axis)
+
     return shard_map(
-        local_fn,
+        body,
         mesh=mesh,
-        in_specs=(P(axis, None), P(None, None)),
+        in_specs=(P(axis, dim_axis), P(None, dim_axis)),
         out_specs=P(axis, None),
         check_rep=False,
     )(xs, centers)
@@ -79,11 +115,17 @@ def assign_lerp_sharded(
     axis: str,
     local_dist_fn: Callable[[jax.Array, jax.Array], jax.Array],
     valid_rows: int | None = None,
+    dim_axis: str | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Sharded fused Eq. 1 argmin + blend: (dists (C,), idx (), blended (N,)).
 
     ``valid_rows`` is the true center count; the shard-padding rows above
-    it are masked to ``+inf`` so they can never win the argmin."""
+    it are masked to ``+inf`` so they can never win the argmin. With
+    ``dim_axis`` the upload and the center rows arrive dim-chunked: the
+    kernel body scores each shard's chunk (a partial L1 sum), a ``psum``
+    over ``dim_axis`` completes the distances, and after the replicated
+    argmin each model shard blends only its own chunk of the winning row
+    (elementwise — bitwise-identical per element to the full-row blend)."""
     C = valid_rows if valid_rows is not None else centers.shape[0]
     cp = centers
 
@@ -91,6 +133,8 @@ def assign_lerp_sharded(
         rows_local = c_local.shape[0]
         row0 = jax.lax.axis_index(axis) * rows_local
         d_local = local_dist_fn(u_full, c_local)
+        if dim_axis is not None:
+            d_local = jax.lax.psum(d_local, dim_axis)  # partial chunk sums
         gids = row0 + jnp.arange(rows_local)
         d_local = jnp.where(gids < C, d_local, jnp.inf)  # mask padded rows
         d_full = jax.lax.all_gather(d_local, axis).reshape(-1)
@@ -106,8 +150,8 @@ def assign_lerp_sharded(
     d_full, idx, blended = shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(None), P(axis, None)),
-        out_specs=(P(None), P(), P(None)),
+        in_specs=(P(dim_axis), P(axis, dim_axis)),
+        out_specs=(P(None), P(), P(dim_axis)),
         check_rep=False,
     )(u, cp)
     return d_full[:C], idx, blended
@@ -120,16 +164,21 @@ def chi2_rows_sharded(
     mesh: jax.sharding.Mesh,
     axis: str,
     local_fn: Callable[[jax.Array, jax.Array, jax.Array], jax.Array],
+    dim_axis: str | None = None,
 ) -> jax.Array:
     """Sharded per-row feedback scores (the dissolve/expand probe matrix):
     every shard scores only its own probe rows — no reduction at all, the
     (M_padded,) output is row-sharded and reassembles on exit; the caller
-    slices the padded rows off."""
+    slices the padded rows off. With ``dim_axis`` the probe rows spread
+    over BOTH mesh axes (the feedback operands have no model dim, so the
+    model shards contribute row-parallelism; per-row arithmetic stays
+    shard-local and bitwise)."""
+    rows = (axis, dim_axis) if dim_axis is not None else axis
     return shard_map(
         local_fn,
         mesh=mesh,
-        in_specs=(P(axis, None),) * 3,
-        out_specs=P(axis),
+        in_specs=(P(rows, None),) * 3,
+        out_specs=P(rows),
         check_rep=False,
     )(f_pred, f_true, s_soft)
 
@@ -142,18 +191,24 @@ def chi2_all_sharded(
     mesh: jax.sharding.Mesh,
     axis: str,
     local_fn: Callable[..., tuple[jax.Array, jax.Array]],
+    dim_axis: str | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Sharded segmented feedback: (g (M_padded,), seg_sum (S,) psum'd
-    globally); the caller slices the padded member rows off ``g``."""
+    globally); the caller slices the padded member rows off ``g``. With
+    ``dim_axis`` the member rows spread over BOTH mesh axes and the
+    segment-sum psum runs over both (the partial chi2 contributions;
+    per-member g stays shard-local and bitwise)."""
+    rows = (axis, dim_axis) if dim_axis is not None else axis
+    psum_axes = (axis, dim_axis) if dim_axis is not None else axis
 
     def body(fp_l, ft_l, ss_l, oh_l):
         g_local, seg_local = local_fn(fp_l, ft_l, ss_l, oh_l)
-        return g_local, jax.lax.psum(seg_local, axis)
+        return g_local, jax.lax.psum(seg_local, psum_axes)
 
     return shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(axis, None),) * 4,
-        out_specs=(P(axis), P(None)),
+        in_specs=(P(rows, None),) * 4,
+        out_specs=(P(rows), P(None)),
         check_rep=False,
     )(f_pred, f_true, s_soft, seg_onehot)

@@ -38,7 +38,10 @@ PARAM_TARGETS = {
 
 
 def test_all_ten_archs_registered():
-    assert set(EXPECTED) == set(ARCH_REGISTRY)
+    # tiny_lm is the CI-sized frozen base for the REPRO_TASK=lm workload,
+    # not an assigned architecture — it rides the registry for get_config()
+    # but stays out of the 10-arch paper matrix
+    assert set(EXPECTED) == set(ARCH_REGISTRY) - {"tiny_lm"}
 
 
 @pytest.mark.parametrize("name", sorted(EXPECTED))
@@ -111,6 +114,8 @@ def test_total_cell_count():
     long_500k + hubert's decode_32k and long_500k)."""
     runnable = skipped = 0
     for arch in ARCH_REGISTRY.values():
+        if arch.name == "tiny_lm":  # not part of the 40-cell paper matrix
+            continue
         for shape in SHAPES.values():
             ok, _ = supports_shape(arch, shape)
             runnable += ok

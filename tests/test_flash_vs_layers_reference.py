@@ -1,0 +1,119 @@
+"""Flash-attention kernels vs the MODEL-layer oracle.
+
+``tests/test_attention_grads.py`` checks the kernels against the kernel
+package's own jnp oracle (``kernels.ref``). This file closes the other
+half of the loop: the kernels must also agree with
+``models.layers.attention_scores_reference`` — the (B, S, H, hd)-layout
+reference that ``apply_attention`` is specified against — forward AND
+under jax.grad. A drift between the two oracles (layout bridge, GQA
+expansion order, mask sign conventions, softcap chain rule) would let
+model-level tests and kernel-level tests both pass while the LM training
+path silently computed something else.
+
+Layout bridge: kernels take (B, H, S, hd); the layers reference takes
+(B, S, H, hd). ``apply_attention`` crosses with swapaxes(1, 2) — so do we.
+Runs in interpret mode, so it exercises the Pallas kernel logic on CPU.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_with_lse
+from repro.kernels.flash_attention_bwd import flash_attention_bwd
+from repro.models.layers import attention_scores_reference
+
+CASES = [
+    # B, H, KV, S, hd, causal, window, softcap
+    (1, 4, 4, 64, 32, True, None, None),     # causal MHA
+    (2, 4, 2, 64, 16, True, None, None),     # GQA 2:1 (tiny_lm's shape class)
+    (1, 8, 2, 48, 32, True, None, None),     # GQA 4:1
+    (1, 2, 2, 64, 32, False, None, None),    # bidirectional (encoder)
+    (1, 4, 2, 64, 32, True, 16, None),       # sliding window
+    (1, 4, 4, 64, 32, True, None, 30.0),     # logit softcap
+    (1, 4, 2, 100, 16, True, None, None),    # ragged (non-pow2) seq
+]
+
+
+def _inputs(case, seed=0):
+    B, H, KV, S, hd, causal, window, softcap = case
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    # layers layout: (B, S, heads, hd)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    kw = dict(causal=causal, scale=hd ** -0.5, window=window, softcap=softcap)
+    return q, k, v, kw
+
+
+def _flash_fwd(q, k, v, **kw):
+    """Run the kernel on layers-layout inputs via the swapaxes bridge
+    apply_attention uses, returning layers-layout output."""
+    o, _ = flash_attention_with_lse(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        interpret=True, **kw,
+    )
+    return o.swapaxes(1, 2)
+
+
+@pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
+def test_forward_matches_layers_reference(case):
+    q, k, v, kw = _inputs(case)
+    want = attention_scores_reference(q, k, v, **kw)
+    got = _flash_fwd(q, k, v, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-4, rtol=3e-4)
+
+
+@pytest.mark.parametrize("case", CASES, ids=[str(c) for c in CASES])
+def test_grads_match_layers_reference(case):
+    q, k, v, kw = _inputs(case, seed=1)
+
+    def loss_ref(q, k, v):
+        o = attention_scores_reference(q, k, v, **kw)
+        return jnp.sum(o * jnp.sin(o))  # nontrivial cotangent
+
+    want = jax.grad(loss_ref, argnums=(0, 1, 2))(q, k, v)
+
+    qk, kk, vk = (x.swapaxes(1, 2) for x in (q, k, v))
+    o, lse = flash_attention_with_lse(qk, kk, vk, interpret=True, **kw)
+    do = jax.grad(lambda o_: jnp.sum(o_ * jnp.sin(o_)))(o)
+    got = flash_attention_bwd(qk, kk, vk, o, lse, do, interpret=True, **kw)
+
+    for g, w, name in zip(got, want, ("dq", "dk", "dv")):
+        np.testing.assert_allclose(
+            np.asarray(g.swapaxes(1, 2)), np.asarray(w),
+            atol=3e-4, rtol=3e-4, err_msg=name,
+        )
+
+
+def test_q_pos0_decode_offset_matches_reference():
+    """Decode-style call: 4 new queries attending into a longer KV context
+    at position offset — both oracles must place the causal mask the same
+    way."""
+    B, H, S_kv, S_q, hd = 1, 4, 64, 4, 32
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, S_q, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S_kv, H, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S_kv, H, hd), jnp.float32)
+    pos0 = S_kv - S_q
+    kw = dict(causal=True, scale=hd ** -0.5)
+    want = attention_scores_reference(q, k, v, q_pos0=pos0, **kw)
+    o, _ = flash_attention_with_lse(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        q_pos0=pos0, interpret=True, **kw,
+    )
+    np.testing.assert_allclose(np.asarray(o.swapaxes(1, 2)), np.asarray(want),
+                               atol=3e-4, rtol=3e-4)
+
+
+def test_chunked_reference_is_consistent():
+    """chunk_q (memory-efficient path) of the layers oracle agrees with its
+    own unchunked path AND the kernel — three-way agreement."""
+    q, k, v, kw = _inputs((1, 4, 2, 64, 32, True, None, None), seed=2)
+    full = attention_scores_reference(q, k, v, **kw)
+    chunked = attention_scores_reference(q, k, v, chunk_q=16, **kw)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(full),
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(_flash_fwd(q, k, v, **kw)),
+                               np.asarray(full), atol=3e-4, rtol=3e-4)

@@ -1,0 +1,178 @@
+"""REPRO_TASK=lm: LoRA/head-delta personalization over a frozen LM base.
+
+Covers the task surface (zero-init delta == base model, loss decreases,
+head-only freezing), delta-only payload billing through ``model_bytes``
+(the FrozenBase wrapper contributes zero bytes), loop/fleet backend
+agreement, and end-to-end runs through both ``run_sync`` (FedAvg) and the
+coalesced async event loop (EchoPFL)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.lm_task import (
+    FrozenBase,
+    LMClientData,
+    default_lm_task,
+    make_lm_data,
+    run_lm_experiment,
+)
+from repro.fl.simulator import model_bytes
+from repro.fl.tasks import PersonalizationTask, get_task
+from repro.models.model import forward as model_forward
+
+TASK = default_lm_task()
+SMALL = dict(seq_len=16, n_train=4, n_test=2, local_epochs=1, eval_interval=60.0)
+
+
+def _data(n_clients=2, seed=0):
+    return make_lm_data(
+        n_clients, vocab_size=TASK.cfg.vocab_size,
+        n_train=4, n_test=2, seq_len=16, seed=seed,
+    )
+
+
+def test_is_personalization_task():
+    assert isinstance(TASK, PersonalizationTask)
+    assert get_task("lm") is TASK  # singleton: stable jit-cache key
+
+
+def test_initial_delta_is_exact_zero_update():
+    """LoRA b-factors init to zero, so merged(init delta) must equal the
+    frozen base bitwise — every client starts at the plane origin."""
+    delta = TASK.init_params(jax.random.PRNGKey(3))
+    tokens = jnp.asarray(_data()[0].tokens_train)
+    base_logits, _, _ = model_forward(TASK.cfg, TASK.base.params, {"tokens": tokens})
+    merged_logits, _, _ = model_forward(TASK.cfg, TASK.merged(delta), {"tokens": tokens})
+    assert jnp.array_equal(base_logits, merged_logits)
+
+
+def test_local_train_reduces_loss():
+    d = _data()[0]
+    delta = TASK.init_params(jax.random.PRNGKey(0))
+    tok, lab = jnp.asarray(d.tokens_train), jnp.asarray(d.labels_train)
+    mask = jnp.ones((d.n,), jnp.float32)
+    first = float(TASK._nll(delta, tok, lab, mask))
+    p = delta
+    for _ in range(4):
+        p, loss = TASK._scan_train(
+            p, tok, lab, mask, jnp.float32(0.5), jnp.int32(5), jnp.float32(0.0),
+            max_epochs=5,
+        )
+    assert float(loss) < first - 0.2
+    assert np.isfinite(float(loss))
+
+
+def test_head_only_freezes_block_lora():
+    d = _data()[0]
+    delta = TASK.init_params(jax.random.PRNGKey(0))
+    trained, _ = TASK._scan_train(
+        jax.tree_util.tree_map(jnp.asarray, delta),
+        jnp.asarray(d.tokens_train), jnp.asarray(d.labels_train),
+        jnp.ones((d.n,), jnp.float32),
+        jnp.float32(0.5), jnp.int32(2), jnp.float32(1.0), max_epochs=2,
+    )
+    # wq LoRA untouched, head LoRA moved
+    for slot in delta["wq"]:
+        assert jnp.array_equal(trained["wq"][slot]["a"], delta["wq"][slot]["a"])
+        assert jnp.array_equal(trained["wq"][slot]["b"], delta["wq"][slot]["b"])
+    assert not jnp.array_equal(trained["head_b"], delta["head_b"])
+
+
+def test_feedback_inputs_shapes_and_mass():
+    d = _data()[0]
+    delta = TASK.init_params(jax.random.PRNGKey(0))
+    J = TASK.buckets
+    f_pred, f_true, s_soft = TASK.feedback_inputs(delta, d, J)
+    assert f_pred.shape == f_true.shape == s_soft.shape == (J,)
+    # f_pred / f_true are COUNT histograms over the same n*S positions
+    assert np.isclose(f_pred.sum(), d.n * d.tokens_train.shape[1])
+    assert np.isclose(f_true.sum(), d.n * d.tokens_train.shape[1])
+    # s_soft is a mean softmax over buckets -> sums to 1
+    assert np.isclose(s_soft.sum(), 1.0, atol=1e-4)
+
+
+def test_latent_clusters_share_distribution_not_samples():
+    data = make_lm_data(8, vocab_size=TASK.cfg.vocab_size, latent_clusters=4,
+                        n_train=8, n_test=2, seq_len=32, seed=0)
+    J = TASK.buckets
+    hists = np.stack([d.label_histogram(J) for d in data])
+    hists /= hists.sum(axis=1, keepdims=True)
+    # same latent cluster (0 and 4) -> near-identical bucket distribution
+    same = np.abs(hists[0] - hists[4]).sum()
+    cross = np.abs(hists[0] - hists[1]).sum()
+    assert same < cross, (same, cross)
+    # ...but not the same sequences
+    assert not np.array_equal(data[0].tokens_train, data[4].tokens_train)
+
+
+# ---------------------------------------------------------------------------
+# delta-aware payload accounting
+# ---------------------------------------------------------------------------
+
+
+def test_frozen_base_bills_zero_bytes():
+    """FrozenBase is a static pytree: payloads that carry it are billed at
+    delta size only — the wire never pays for the frozen base."""
+    delta = TASK.init_params(jax.random.PRNGKey(0))
+    delta_bytes = model_bytes(delta)
+    assert model_bytes(TASK.base) == 0
+    assert model_bytes({"base": TASK.base, "delta": delta}) == delta_bytes
+    # sanity: the delta is orders of magnitude smaller than the base
+    base_bytes = sum(x.size * x.dtype.itemsize
+                     for x in jax.tree_util.tree_leaves(TASK.base.params))
+    assert delta_bytes < base_bytes / 3
+
+
+def test_sim_bills_uploads_at_delta_size():
+    delta_bytes = model_bytes(TASK.init_params(jax.random.PRNGKey(0)))
+    _, _, _, rep = run_lm_experiment("fedavg", num_clients=4, rounds=2, **SMALL)
+    assert rep.up_events > 0
+    assert rep.up_bytes == rep.up_events * delta_bytes
+
+
+# ---------------------------------------------------------------------------
+# end-to-end
+# ---------------------------------------------------------------------------
+
+
+def test_run_sync_fedavg():
+    task, clients, strat, rep = run_lm_experiment(
+        "fedavg", num_clients=4, rounds=2, **SMALL)
+    assert rep.extra["task"] == "lm"
+    assert rep.up_events == 8  # 4 clients x 2 rounds
+    assert 0.0 <= rep.final_acc <= 1.0
+    assert len(rep.curve) > 0
+
+
+def test_run_async_echopfl_coalesced(monkeypatch):
+    monkeypatch.setenv("REPRO_ASYNC_COALESCE", "1")
+    task, clients, strat, rep = run_lm_experiment(
+        "echopfl", num_clients=4, max_time=200.0, num_clusters=2, **SMALL)
+    assert rep.up_events > 0
+    assert rep.extra["task"] == "lm"
+    assert 0.0 <= rep.final_acc <= 1.0
+
+
+def test_loop_fleet_backend_agree():
+    """The batched fleet launches and the per-client loop implement the
+    same task arithmetic."""
+    runs = {}
+    for backend in ("loop", "fleet"):
+        _, _, _, rep = run_lm_experiment(
+            "fedavg", num_clients=4, rounds=2, seed=1,
+            client_backend=backend, **SMALL)
+        runs[backend] = rep
+    assert runs["loop"].up_events == runs["fleet"].up_events
+    assert np.isclose(runs["loop"].final_acc, runs["fleet"].final_acc, atol=1e-5)
+
+
+def test_repro_task_env_dispatch(monkeypatch):
+    """run_experiment reroutes to the LM driver under REPRO_TASK=lm."""
+    monkeypatch.setenv("REPRO_TASK", "lm")
+    from repro.fl.experiment import run_experiment
+    task, clients, strat, rep = run_experiment(
+        "image_recognition", "fedavg", num_clients=4, rounds=2,
+        local_epochs=1, eval_interval=60.0)
+    assert rep.extra["task"] == "lm"
+    assert task is TASK

@@ -1,0 +1,243 @@
+"""Model-axis (R×M mesh) plane compute: dim-sharded kernel parity and the
+full-server trajectory harness.
+
+PR 2 sharded the plane's *storage* over an optional ``model`` axis but
+replicated kernel compute over it; these tests pin the true model-axis
+compute path: per-shard partial L1 sums psum into full distances, the
+assign blend runs elementwise per dim chunk (bitwise), and the chi2
+kernels recruit the model axis for row-parallelism (per-row bitwise).
+
+The in-process tests need an even device count >= 4 (the ci.sh
+multi-device legs); the subprocess trajectory test always runs — it forces
+an 8-device host in a child interpreter, builds a 4x2 ``(plane, model)``
+mesh, and asserts the EchoPFL server's decisions are identical and its
+centers bitwise-equal to the single-device run.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+even_multi_device = pytest.mark.skipif(
+    len(jax.devices()) < 4 or len(jax.devices()) % 2,
+    reason="needs an even device count >= 4 (ci.sh multi-device legs)",
+)
+
+
+@pytest.fixture(scope="module")
+def mesh_rm():
+    if len(jax.devices()) < 4 or len(jax.devices()) % 2:
+        pytest.skip("needs an even device count >= 4")
+    from repro.launch.mesh import make_plane_mesh
+
+    return make_plane_mesh(len(jax.devices()) // 2, dim_shards=2)
+
+
+def test_dim_shards_dispatch_rules():
+    """The engagement rule is shared with the plane's storage rule: the
+    model axis must exist, exceed one shard, and divide the flat dim."""
+    if len(jax.devices()) < 4 or len(jax.devices()) % 2:
+        pytest.skip("needs an even device count >= 4")
+    from repro.launch.mesh import make_plane_mesh
+
+    m = make_plane_mesh(len(jax.devices()) // 2, dim_shards=2)
+    assert ops._dim_shards(m, "model", 300) == 2
+    assert ops._dim_shards(m, "model", 301) == 1  # indivisible -> replicate
+    assert ops._dim_shards(m, None, 300) == 1
+    assert ops._dim_shards(None, "model", 300) == 1
+    r_only = make_plane_mesh(len(jax.devices()))
+    assert ops._dim_shards(r_only, "model", 300) == 1  # no model axis
+
+
+def test_model_compute_knob(monkeypatch):
+    monkeypatch.setenv("REPRO_PLANE_MODEL_COMPUTE", "off")
+    assert not ops._model_compute_on()
+    monkeypatch.setenv("REPRO_PLANE_MODEL_COMPUTE", "on")
+    assert ops._model_compute_on()
+    monkeypatch.delenv("REPRO_PLANE_MODEL_COMPUTE")
+    assert ops._model_compute_on()  # default on
+
+
+@even_multi_device
+class TestModelAxisOps:
+    def test_l1_pairwise_dim_sharded_matches_single_device(self, mesh_rm):
+        xs = jax.random.normal(jax.random.PRNGKey(0), (11, 300))
+        cs = jax.random.normal(jax.random.PRNGKey(1), (5, 300))
+        got = np.asarray(ops.l1_distance_pairwise(xs, cs, mesh=mesh_rm))
+        want = np.asarray(ops.l1_distance_pairwise(xs, cs))
+        # partial chunk sums psum: last-ulp, never decision-flipping here
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+        np.testing.assert_array_equal(got.argmin(axis=1), want.argmin(axis=1))
+        np.testing.assert_allclose(
+            got, np.asarray(ref.l1_distance_pairwise_ref(xs, cs)), rtol=1e-5
+        )
+
+    def test_l1_pairwise_indivisible_dim_falls_back_bitwise(self, mesh_rm):
+        # 301 is not divisible by the 2-way model axis: the dispatch must
+        # replicate over it (the PR-2 path), whose per-row sums are bitwise
+        xs = jax.random.normal(jax.random.PRNGKey(2), (9, 301))
+        cs = jax.random.normal(jax.random.PRNGKey(3), (4, 301))
+        got = np.asarray(ops.l1_distance_pairwise(xs, cs, mesh=mesh_rm))
+        np.testing.assert_array_equal(got, np.asarray(ops.l1_distance_pairwise(xs, cs)))
+
+    def test_l1_pairwise_knob_off_restores_replicated_compute(self, mesh_rm, monkeypatch):
+        monkeypatch.setenv("REPRO_PLANE_MODEL_COMPUTE", "off")
+        xs = jax.random.normal(jax.random.PRNGKey(4), (11, 300))
+        cs = jax.random.normal(jax.random.PRNGKey(5), (5, 300))
+        got = np.asarray(ops.l1_distance_pairwise(xs, cs, mesh=mesh_rm))
+        np.testing.assert_array_equal(got, np.asarray(ops.l1_distance_pairwise(xs, cs)))
+
+    @pytest.mark.parametrize("c", [1, 3, 8, 11])
+    def test_assign_and_lerp_blend_bitwise_dists_last_ulp(self, mesh_rm, c):
+        u = jax.random.normal(jax.random.PRNGKey(c), (300,))
+        cs = jax.random.normal(jax.random.PRNGKey(c + 100), (c, 300))
+        d, i, b = ops.assign_and_lerp(u, cs, 0.25, mesh=mesh_rm)
+        ds, is_, bs = ops.assign_and_lerp(u, cs, 0.25)
+        assert int(i) == int(is_)
+        # the blend is elementwise per dim chunk: bitwise, not just close
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(bs))
+        np.testing.assert_allclose(np.asarray(d), np.asarray(ds), rtol=1e-6)
+
+    def test_assign_and_lerp_padded_rows_never_win(self, mesh_rm):
+        u = jnp.full((256,), 1e-3)
+        cs = jnp.stack([jnp.full((256,), 50.0), jnp.full((256,), -40.0), jnp.full((256,), 30.0)])
+        d, i, b = ops.assign_and_lerp(u, cs, 0.5, mesh=mesh_rm)
+        assert int(i) == 2  # 30.0 is nearest; no padding row may win
+        assert np.all(np.isfinite(np.asarray(d)))
+
+    def test_chi2_rows_spread_over_both_axes_bitwise(self, mesh_rm):
+        for m in (3, 11, 16):
+            f_pred = jax.random.uniform(jax.random.PRNGKey(m), (m, 6)) * 100
+            f_true = jax.random.uniform(jax.random.PRNGKey(m + 1), (m, 6)) * 100 + 1.0
+            s_soft = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(m + 2), (m, 6)), axis=-1)
+            got = np.asarray(ops.chi2_feedback(f_pred, f_true, s_soft, mesh=mesh_rm))
+            want = np.asarray(ops.chi2_feedback(f_pred, f_true, s_soft))
+            assert got.shape == (m,)
+            np.testing.assert_array_equal(got, want)
+
+    def test_chi2_all_g_bitwise_seg_psums_both_axes(self, mesh_rm):
+        sizes = [2, 1, 9, 4]
+        m, s = sum(sizes), len(sizes)
+        f_pred = jax.random.uniform(jax.random.PRNGKey(7), (m, 6)) * 100
+        f_true = jax.random.uniform(jax.random.PRNGKey(8), (m, 6)) * 100 + 1.0
+        s_soft = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(9), (m, 6)), axis=-1)
+        seg_ids = jnp.asarray(np.repeat(np.arange(s), sizes), np.int32)
+        g, seg = ops.chi2_feedback_all(f_pred, f_true, s_soft, seg_ids, num_segments=s, mesh=mesh_rm)
+        g1, seg1 = ops.chi2_feedback_all(f_pred, f_true, s_soft, seg_ids, num_segments=s)
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(g1))
+        np.testing.assert_allclose(np.asarray(seg), np.asarray(seg1), rtol=1e-5, atol=1e-6)
+
+    def test_plane_rows_feed_dim_sharded_pairwise_without_gathering(self, mesh_rm):
+        """End to end: rows taken off a dim-sharded plane pass straight into
+        the dim-sharded pairwise launch (dispatch passes both operand
+        layouts through) and score within fp tolerance."""
+        from repro.core.plane import ParameterPlane
+
+        template = {"w": jnp.zeros((300,), jnp.float32)}
+        plane = ParameterPlane(template, capacity=16, mesh=mesh_rm)
+        assert plane._sharding.spec[1] == "model"  # storage dim-sharded
+        rows = [
+            plane.alloc(jnp.asarray(np.random.default_rng(i).standard_normal(plane.dim), jnp.float32))
+            for i in range(8)
+        ]
+        centers = jnp.asarray(
+            np.random.default_rng(99).standard_normal((3, plane.dim)), jnp.float32
+        )
+        U_shard = plane.rows(tuple(rows), on_mesh="shard")
+        got = np.asarray(ops.l1_distance_pairwise(U_shard, centers, mesh=mesh_rm))
+        want = np.asarray(ops.l1_distance_pairwise(plane.rows(tuple(rows)), centers))
+        np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+# ------------------------------------------------ forced-8-device R×M parity
+_RM_PARITY_SCRIPT = textwrap.dedent(
+    """
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    os.environ.pop("REPRO_PLANE_MESH", None)
+    os.environ.pop("REPRO_PLANE_MODEL_COMPUTE", None)  # default: compute shards
+    os.environ["REPRO_PLANE_MESH_MIN_ROWS"] = "0"  # force sharded compute
+    import jax, jax.numpy as jnp
+    import numpy as np
+    from repro.core.server import EchoPFLServer
+    from repro.kernels import ops
+    from repro.launch.mesh import make_plane_mesh
+
+    assert len(jax.devices()) == 8
+
+    def vec(x):
+        return {"w": jnp.full((24,), float(x))}  # 24 % 2 == 0: dim shards
+
+    def feedback_fn(client_id, center):
+        err = 80.0 if client_id in ("c4", "c5") else 1.0
+        f_pred = np.asarray([50.0 + err, 50.0 - err, 1.0])
+        f_true = np.asarray([50.0, 50.0, 1.0])
+        s_soft = np.asarray([0.9, 0.08, 0.02])
+        return f_pred, f_true, s_soft
+
+    def run(mesh):
+        srv = EchoPFLServer(vec(0.0), num_initial_clusters=1, refine_every=8,
+                            feedback_fn=feedback_fn, local_train_fn=lambda p: p,
+                            plane_backend="plane", plane_mesh=mesh, seed=0)
+        for i in range(40):
+            srv.handle_upload(f"c{i % 6}", vec(40.0 * (i % 2) + 0.01 * i), 0, 8,
+                              t=float(i))
+        return srv
+
+    mesh = make_plane_mesh(4, dim_shards=2)
+    assert ops._dim_shards(mesh, "model", 24) == 2  # model compute engages
+    single = run(False)  # explicit unsharded, immune to inherited env knobs
+    sharded = run(mesh)
+    assert single.clustering.plane.mesh is None
+    assert sharded.clustering.plane.mesh is not None
+    # storage sharded over BOTH axes (rows over plane, dim over model)
+    spec = sharded.clustering.plane._sharding.spec
+    assert spec[0] == "plane" and spec[1] == "model", spec
+
+    # trajectory identity: every protocol decision matches the 1-device run
+    assert sharded.clustering.assignment == single.clustering.assignment
+    assert sharded.events == single.events
+    ss, sg = sharded.stats(), single.stats()
+    for key in ("clusters", "merges", "expansions", "staleness", "broadcasts",
+                "rnn_broadcasts", "decisions", "plane_rows"):
+        assert ss[key] == sg[key], (key, ss[key], sg[key])
+    assert ss["expansions"] > 0  # scenario must exercise refinement
+    # centers: decisions identical + elementwise blends -> bitwise equality
+    for cid, c in single.clustering.clusters.items():
+        a = sharded.clustering.clusters[cid]
+        for x, y in zip(jax.tree_util.tree_leaves(a.center),
+                        jax.tree_util.tree_leaves(c.center)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    print("RM-PARITY-OK")
+    """
+)
+
+
+def test_model_axis_server_trajectory_parity_on_forced_8_device_host():
+    """Acceptance: an R×M mesh (4 row shards x 2 model shards) whose model
+    axis shards both storage AND kernel compute reproduces the
+    single-device server trajectory on the same seed — assignments, merges,
+    expansions, and broadcast decisions identical, centers bitwise-equal
+    (the blend is elementwise per dim chunk). Runs in a subprocess because
+    the device count is fixed at jax init."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in ("src", env.get("PYTHONPATH", "")) if p
+    )
+    proc = subprocess.run(
+        [sys.executable, "-c", _RM_PARITY_SCRIPT],
+        capture_output=True,
+        text=True,
+        timeout=600,
+        env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\nstderr:\n{proc.stderr}"
+    assert "RM-PARITY-OK" in proc.stdout
