@@ -31,6 +31,7 @@ BENCHES = {
     "accuracy_time": bench_accuracy_time.run,       # Tab.1 / Fig.8
     "slow_device_drop": bench_slow_device_drop.run, # Fig.2
     "comm_cost": bench_comm_cost.run,               # Fig.9 / Tab.3
+    "comm_compress": bench_comm_cost.run_compress,  # REPRO_UPLINK measured sweep
     "comm_peaks": bench_comm_peaks.run,             # Fig.10
     "clustering_quality": bench_clustering_quality.run,  # Fig.11 / Fig.12
     "distance_metrics": bench_distance_metrics.run, # Tab.5

@@ -71,6 +71,21 @@ REPRO_PLANE_MESH=4x2 REPRO_PLANE_MESH_MIN_ROWS=0 \
 python -m pytest -q -p no:cacheprovider -m "not slow" \
     tests/test_model_axis_plane.py
 
+echo "=== compressed uplinks as the ambient default (REPRO_UPLINK=topk) ==="
+# Tier-1's simulator-exercising suites with every uplink crossing the wire
+# EF-top-k compressed: exact payload billing, codec checkpoint riding the
+# server state, and the loop/fleet + coalesced/per-event compressed parity
+# asserted inside test_uplink.py itself.
+REPRO_UPLINK=topk python -m pytest -q -p no:cacheprovider -m "not slow" \
+    tests/test_uplink.py tests/test_server_integration.py tests/test_client_fleet.py
+
+echo "=== compressed coalesced-vs-per-event parity under both kernel backends ==="
+# The REPRO_UPLINK parity suite (degenerate-window bitwise, real-window
+# billing/trajectory agreement) must hold whichever kernel backend computes
+# the training launches the codec consumes.
+REPRO_KERNELS=ref python -m pytest -q -p no:cacheprovider tests/test_uplink.py
+REPRO_KERNELS=pallas python -m pytest -q -p no:cacheprovider tests/test_uplink.py
+
 echo "=== REPRO_TASK=lm smoke (LoRA/head deltas over the frozen tiny_lm base) ==="
 # The LM personalization workload end-to-end on both simulator loops:
 # run_sync (fedavg) + coalesced run_async (echopfl), loop/fleet backend

@@ -212,6 +212,20 @@ class ParameterPlane:
             self.write(row, value)
         return row
 
+    def alloc_many(self, n: int) -> list[int]:
+        """Claim ``n`` zero-seeded rows with ONE staged write (a single
+        ``write_rows`` bookkeeping entry instead of ``n`` per-row stagings)
+        — the fleet-sized allocation path: the uplink codec claiming a
+        per-client anchor + residual row for every simulated device."""
+        if n <= 0:
+            return []
+        while len(self._free) < n:
+            self._grow()
+        rows = [self._free.pop() for _ in range(n)]
+        self._used.update(rows)
+        self.write_rows(rows, jnp.zeros((n, self.dim), self.dtype))
+        return rows
+
     def free(self, row: int) -> None:
         if row not in self._used:
             raise KeyError(f"row {row} is not allocated")

@@ -99,6 +99,10 @@ class EchoPFLServer:
         # whole pair list. The simulator's fleet engine installs its
         # ``feedback_many`` here; when unset, pairs probe via feedback_fn.
         self.feedback_batch_fn: Callable[[list], tuple] | None = None
+        # optional uplink codec (REPRO_UPLINK): attached by the simulator so
+        # the per-client anchor/residual rows ride this server's checkpoints
+        self.uplink_codec = None
+        self._pending_uplink_state: tuple | None = None
         self.local_train_fn = local_train_fn
         self.enable_clustering = enable_clustering
         self.enable_broadcast = enable_broadcast
@@ -125,6 +129,16 @@ class EchoPFLServer:
         if cid is None:
             return self.init_params
         return self.clustering.clusters[cid].center
+
+    def attach_uplink_codec(self, codec) -> None:
+        """Adopt the simulator's uplink codec: its anchors/residuals become
+        part of :meth:`state_dict`/:meth:`load_state`. A restore that ran
+        BEFORE the codec existed (load_state then start the run) stashed the
+        codec section; it is replayed into the codec here."""
+        self.uplink_codec = codec
+        if codec is not None and self._pending_uplink_state is not None:
+            codec.load_state(*self._pending_uplink_state)
+            self._pending_uplink_state = None
 
     def _predictor(self, cluster_id: int) -> BroadcastPredictor:
         if cluster_id not in self.predictors:
@@ -1029,6 +1043,11 @@ class EchoPFLServer:
             "refine_round": self._refine_round,
             "upload_clients": sorted(last_uploads),
         }
+        if self.uplink_codec is not None:
+            # compressed-uplink codec state (anchors + EF residuals): without
+            # it a restarted run re-anchors at zero and the first post-restart
+            # upload per client ships a full-model delta through the codec
+            tree["uplink"], meta["uplink"] = self.uplink_codec.state_dict()
         return tree, meta
 
     def state_template(self, meta: dict) -> PyTree:
@@ -1038,12 +1057,17 @@ class EchoPFLServer:
         from repro.core.broadcast import init_rnn
 
         rnn_like = self._rnn_init if self._rnn_init is not None else init_rnn(jax.random.PRNGKey(0))
-        return {
+        template = {
             "centers": {cid: self.init_params for cid in meta["clusters"]},
             "bcast_centers": {cid: self.init_params for cid in meta["clusters"]},
             "last_uploads": {c: self.init_params for c in meta.get("upload_clients", [])},
             "rnn": {cid: rnn_like for cid in meta["predictors"]},
         }
+        if meta.get("uplink"):
+            from repro.fl.uplink import seed_template
+
+            template["uplink"] = seed_template(meta["uplink"], self.init_params)
+        return template
 
     def load_state(self, tree: PyTree, meta: dict, client_id_type=int) -> None:
         """Restore from :meth:`state_dict` output (elastic restart)."""
@@ -1096,6 +1120,15 @@ class EchoPFLServer:
         self._decisions = meta["decisions"]
         self._rnn_broadcasts = meta["rnn_broadcasts"]
         self._refine_round = meta["refine_round"]
+        if meta.get("uplink"):
+            if self.uplink_codec is not None:
+                self.uplink_codec.load_state(tree["uplink"], meta["uplink"], client_id_type)
+                self._pending_uplink_state = None
+            else:
+                # the codec builds with the next run's fleet; replay then
+                self._pending_uplink_state = (tree["uplink"], meta["uplink"], client_id_type)
+        else:
+            self._pending_uplink_state = None
 
     # ------------------------------------------------------------- metrics
     def stats(self) -> dict:

@@ -127,6 +127,7 @@ def run_experiment(
     local_epochs: int = 5,
     base_round_time: float = 30.0,
     client_backend: str | None = None,
+    uplink: Any | None = None,
     **strategy_kw,
 ):
     if default_task().name == "lm":
@@ -141,7 +142,7 @@ def run_experiment(
             max_time=max_time, rounds=rounds, eval_interval=eval_interval,
             network=network, local_epochs=local_epochs,
             base_round_time=base_round_time, client_backend=client_backend,
-            **strategy_kw,
+            uplink=uplink, **strategy_kw,
         )
     task, clients, init_params = build_clients(
         task_name, num_clients, seed=seed, latent_clusters=latent_clusters,
@@ -153,7 +154,7 @@ def run_experiment(
         clients, strategy,
         network=network or NetworkModel(),
         eval_interval=eval_interval, target_acc=target_acc, seed=seed,
-        client_backend=client_backend,
+        client_backend=client_backend, uplink=uplink,
     )
     report = sim.run(max_time=max_time, rounds=rounds)
     report.extra["task"] = task_name

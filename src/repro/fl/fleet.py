@@ -303,13 +303,17 @@ class ClientFleet:
         return vecs[:S], losses[:S]
 
     def train_cohort(
-        self, cids: Sequence[Any], params_list: Sequence[PyTree]
-    ) -> tuple[list[PyTree], np.ndarray]:
+        self, cids: Sequence[Any], params_list: Sequence[PyTree], *,
+        with_vecs: bool = False,
+    ):
         """One fused launch of local training for a selected cohort (the
         sync-round path). ``params_list[i]`` is what client ``cids[i]``
         trains from; ``None`` falls back to the client's own model row
         (the same contract as ``SimClient.local_train(None)``). Returns
-        (per-client trained pytrees, losses)."""
+        (per-client trained pytrees, losses) — plus the device ``(S, dim)``
+        trained matrix when ``with_vecs`` is set, so a downstream batched
+        consumer (the uplink codec) can launch on it directly instead of
+        re-flattening S pytrees."""
         idx = np.asarray([self.index[c] for c in cids])
         mat = jnp.stack([
             self.model_vec(c) if p is None else self._vec_of(p)
@@ -322,7 +326,8 @@ class ClientFleet:
         # immutable jax-array leaves the loop path hands out
         vecs_np = np.asarray(vecs_np)
         vecs_np.flags.writeable = False
-        return [self.to_pytree_np(v) for v in vecs_np], losses_np
+        out = [self.to_pytree_np(v) for v in vecs_np], losses_np
+        return (*out, vecs) if with_vecs else out
 
     def train_client(self, cid) -> tuple[PyTree, jax.Array]:
         """Row-sliced single-client path (the async event loop): trains from
@@ -337,14 +342,16 @@ class ClientFleet:
         self._model_ver[i] += 1
         return self.spec.unflatten(vec), losses[0]
 
-    def train_rows(self, cids: Sequence[Any]) -> tuple[list[PyTree], np.ndarray]:
+    def train_rows(self, cids: Sequence[Any], *, with_vecs: bool = False):
         """Row-sliced BATCH of the async path: N concurrent ``upload_start``
         events become one fused launch. Every client trains from (and
         writes back) its own model row — exactly N :meth:`train_client`
         calls' arithmetic, since the rows are mutually independent — and
         the trained models come back as host-side numpy-view pytrees plus
-        the (N,) losses. ``cids`` must be distinct (one in-flight local
-        round per client, which the event loop guarantees)."""
+        the (N,) losses (and, with ``with_vecs``, the device ``(N, dim)``
+        trained matrix for batched downstream consumers like the uplink
+        codec). ``cids`` must be distinct (one in-flight local round per
+        client, which the event loop guarantees)."""
         idx = np.asarray([self.index[c] for c in cids])
         for c in cids:
             if not self._has_model[self.index[c]]:
@@ -362,7 +369,8 @@ class ClientFleet:
         vecs_np, losses_np = jax.device_get((vecs, losses))
         vecs_np = np.asarray(vecs_np)
         vecs_np.flags.writeable = False  # leaves are views: freeze like train_cohort
-        return [self.to_pytree_np(v) for v in vecs_np], losses_np
+        out = [self.to_pytree_np(v) for v in vecs_np], losses_np
+        return (*out, vecs) if with_vecs else out
 
     # ---------------------------------------------------------- evaluation
     def evaluate_fleet(self, params_list: Sequence[PyTree | None]) -> np.ndarray:

@@ -408,6 +408,7 @@ def run_lm_experiment(
     local_epochs: int = 2,
     base_round_time: float = 30.0,
     client_backend: str | None = None,
+    uplink=None,
     latent_clusters: int = 4,
     n_train: int = 8,
     n_test: int = 4,
@@ -432,6 +433,7 @@ def run_lm_experiment(
         clients, strategy,
         network=network or NetworkModel(),
         eval_interval=eval_interval, seed=seed, client_backend=client_backend,
+        uplink=uplink,
     )
     report = sim.run(max_time=max_time, rounds=rounds)
     report.extra["task"] = "lm"

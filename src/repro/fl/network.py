@@ -19,15 +19,24 @@ class NetworkModel:
 
     def __post_init__(self):
         self.up_bytes = 0
+        self.up_raw_bytes = 0  # dense-equivalent uplink bytes (compression ratio)
         self.down_bytes = 0
         self.up_events = 0
         self.down_events = 0
         self._up_series: dict[int, float] = defaultdict(float)
         self._down_series: dict[int, float] = defaultdict(float)
 
-    def upload(self, nbytes: int, t: float) -> float:
-        """Register an upload starting at t; returns transfer duration."""
+    def upload(self, nbytes: int, t: float, raw_nbytes: int | None = None) -> float:
+        """Register an upload starting at t; returns transfer duration.
+
+        ``nbytes`` is what actually crosses the thin link (the compressed
+        payload when an uplink codec is active) and drives ALL billing —
+        totals, the per-bin series, the transfer duration. ``raw_nbytes``
+        is the dense size of the same model payload, tracked separately so
+        reports can state the achieved compression ratio; it defaults to
+        ``nbytes`` (uncompressed uploads)."""
         self.up_bytes += nbytes
+        self.up_raw_bytes += nbytes if raw_nbytes is None else raw_nbytes
         self.up_events += 1
         self._up_series[int(t // self.bin_seconds)] += nbytes
         return nbytes / self.upstream_bps

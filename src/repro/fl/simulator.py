@@ -63,6 +63,9 @@ class SimReport:
     extra: dict
     up_series: dict = dataclasses.field(default_factory=dict)  # minute -> bytes
     down_series: dict = dataclasses.field(default_factory=dict)
+    # dense-equivalent uplink bytes: equals up_bytes unless an uplink codec
+    # (REPRO_UPLINK) compressed the wire — the ratio is the comm-cost claim
+    up_raw_bytes: int = 0
 
     def bytes_until(self, t: float) -> tuple[float, float]:
         """(up, down) bytes accumulated in bins up to time t (the paper's
@@ -73,7 +76,7 @@ class SimReport:
         return up, down
 
     def summary(self) -> dict:
-        return {
+        out = {
             "strategy": self.strategy,
             "final_acc": round(self.final_acc, 4),
             "time_to_target_min": None if self.time_to_target is None else round(self.time_to_target / 60, 2),
@@ -84,6 +87,10 @@ class SimReport:
             "peak_down_MB_per_min": round(self.peak_down / 1e6, 2),
             "peak_up_MB_per_min": round(self.peak_up / 1e6, 2),
         }
+        if self.up_raw_bytes and self.up_raw_bytes != self.up_bytes:
+            out["up_raw_MB"] = round(self.up_raw_bytes / 1e6, 2)
+            out["uplink_ratio"] = round(self.up_bytes / self.up_raw_bytes, 4)
+        return out
 
 
 _MODEL_BYTES_CACHE: dict = {}
@@ -131,10 +138,17 @@ class Simulator:
         churn: dict[Any, list[tuple[float, float]]] | None = None,
         client_backend: str | None = None,
         coalesce_window: float | None = None,
+        uplink: Any | None = None,
     ):
+        from repro.fl.uplink import resolve_uplink
+
         self.clients = {c.client_id: c for c in clients}
         self.strategy = strategy
         self.net = network or NetworkModel()
+        # uplink compression (REPRO_UPLINK): config resolves now, the codec
+        # itself builds lazily with the fleet (it needs the model template)
+        self.uplink = resolve_uplink(uplink)
+        self._codec = None
         self.eval_interval = eval_interval
         self.target_acc = target_acc
         self.rng = np.random.default_rng(seed)
@@ -173,6 +187,17 @@ class Simulator:
         always replaced — or cleared on the loop backend — so probes never
         route through a dead fleet's clients/data."""
         strat = self.strategy
+        if self._codec is None and self.uplink.mode != "none":
+            from repro.fl.uplink import UplinkCodec
+
+            # both backends compress: the codec is its own batched launch, so
+            # even the per-client loop ships compressed (B = 1) uploads
+            self._codec = UplinkCodec(template, list(self.clients), self.uplink)
+            attach = getattr(strat, "attach_uplink_codec", None)
+            if attach is not None:
+                # the strategy adopts the codec so anchors/residuals ride its
+                # checkpoints (a pre-attach load_state restores here too)
+                attach(self._codec)
         current = getattr(strat, "feedback_batch_fn", "missing")
         fleet_hook = current is not None and current != "missing" and getattr(
             current, "_fleet_hook", False
@@ -203,10 +228,27 @@ class Simulator:
 
     def _set_model(self, c: SimClient, params: PyTree) -> None:
         """Install a downlinked model on a client (mirrored into the fleet's
-        model row so the batched paths see it)."""
+        model row so the batched paths see it, and into the client's uplink
+        anchor — a downlink is a value both sides agree on for free)."""
         c.model = params
+        if self._codec is not None:
+            self._codec.install(c.client_id, params)
         if self._fleet is not None:
             self._fleet.set_model(c.client_id, params)
+
+    # ------------------------------------------------------ uplink encoding
+    def _encode_upload(self, cid, new_params: PyTree) -> tuple[PyTree, int, int | None]:
+        """Route ONE trained model through the uplink codec: returns the
+        payload the strategy ingests, the billed wire bytes, and the dense
+        size for ratio tracking. The client keeps its own uncompressed
+        model; the server sees (and the predictor's change statistics see)
+        the reconstruction — what actually crossed the compressed wire.
+        With no codec this is the identity: dense params, dense bytes."""
+        raw = model_bytes(new_params)
+        if self._codec is None:
+            return new_params, raw, None
+        rec, nbytes = self._codec.encode(cid, new_params)
+        return rec, nbytes, raw
 
     # ----------------------------------------------------------- evaluation
     def _evaluate(self, t: float) -> float:
@@ -226,6 +268,12 @@ class Simulator:
         return mean
 
     def _report(self, t_end: float, extra: dict) -> SimReport:
+        if self._codec is not None:
+            extra["uplink"] = {
+                "mode": self._codec.mode,
+                "payload_bytes": self._codec.nbytes,
+                "launches": self._codec.launches,
+            }
         self._evaluate(t_end)
         target_t = None
         for t, acc in self.curve:
@@ -249,6 +297,7 @@ class Simulator:
             extra=extra,
             up_series=self.net.series("up"),
             down_series=self.net.series("down"),
+            up_raw_bytes=self.net.up_raw_bytes,
         )
 
     # ------------------------------------------------------------ async run
@@ -260,6 +309,9 @@ class Simulator:
         init = strat.initial_models(sorted(self.clients))
         nbytes = model_bytes(next(iter(init.values())))
         self._ensure_fleet(next(iter(init.values())))
+        if self._codec is not None:
+            # both sides saw this broadcast: it is the delta anchor
+            self._codec.seed(init)
         for cid, params in init.items():
             dl = self.net.download(nbytes, 0.0)
             c = self.clients[cid]
@@ -315,8 +367,9 @@ class Simulator:
                 else:
                     new_params, _ = c.local_train()
                 c.model = new_params
-                dur = self.net.upload(model_bytes(new_params), t)
-                push(t + dur, "upload_done", (cid, new_params, c.base_version))
+                up_params, nbytes, raw = self._encode_upload(cid, new_params)
+                dur = self.net.upload(nbytes, t, raw_nbytes=raw)
+                push(t + dur, "upload_done", (cid, up_params, c.base_version))
             elif kind == "upload_done":
                 cid, params, base_version = payload
                 uploads += 1
@@ -475,8 +528,17 @@ class Simulator:
         push."""
         ready = [cid for _, cid, resume in group if resume is None]
         trained: dict[Any, Any] = {}
+        encoded: dict[Any, Any] = {}
         if self._fleet is not None and len(ready) > 1:
-            outs, _ = self._fleet.train_rows(ready)
+            if self._codec is not None:
+                # the window's whole cohort compresses as ONE codec launch,
+                # fed the training launch's device matrix directly (no
+                # per-client re-flatten round trip)
+                outs, _, vecs = self._fleet.train_rows(ready, with_vecs=True)
+                recs, _ = self._codec.encode_rows(ready, vecs)
+                encoded = dict(zip(ready, recs))
+            else:
+                outs, _ = self._fleet.train_rows(ready)
             trained = dict(zip(ready, outs))
         for ti, cid, resume in group:
             if resume is not None:  # device was offline: resumes when back
@@ -490,8 +552,12 @@ class Simulator:
             else:
                 new_params, _ = c.local_train()
             c.model = new_params
-            dur = self.net.upload(model_bytes(new_params), ti)
-            push(ti + dur, "upload_done", (cid, new_params, c.base_version))
+            if cid in encoded:
+                up_params, nbytes, raw = encoded[cid], self._codec.nbytes, model_bytes(new_params)
+            else:
+                up_params, nbytes, raw = self._encode_upload(cid, new_params)
+            dur = self.net.upload(nbytes, ti, raw_nbytes=raw)
+            push(ti + dur, "upload_done", (cid, up_params, c.base_version))
 
     def _coalesced_upload_dones(self, group, push) -> int:
         """One batched server ingest for a window of arrivals; downlinks
@@ -551,6 +617,8 @@ class Simulator:
             c = self.clients[dl.client_id]
             if batched_rows:
                 c.model = dl.params  # row already staged by set_models
+                if self._codec is not None:  # anchors refresh per delivery
+                    self._codec.install(dl.client_id, dl.params)
             else:
                 self._set_model(c, dl.params)
             c.base_version = dl.version
@@ -569,6 +637,8 @@ class Simulator:
         nbytes = model_bytes(next(iter(init.values())))
         self._ensure_fleet(next(iter(init.values())))
         t = 0.0
+        if self._codec is not None:
+            self._codec.seed(init)
         for cid, params in init.items():
             self._set_model(self.clients[cid], params)
         t += nbytes / self.net.downstream_bps
@@ -586,13 +656,22 @@ class Simulator:
                     continue
                 finish_times = {}
                 uploads = {}
+                encoded: dict[Any, Any] = {}
                 if self._fleet is not None:
                     # the whole cohort's local training is ONE fused launch;
                     # per-client timing/accounting below stays loop-ordered
                     # so the RNG draws and byte counts match the loop path
-                    trained, _ = self._fleet.train_cohort(
-                        selected, [strat.model_for(cid) for cid in selected]
-                    )
+                    if self._codec is not None:
+                        trained, _, vecs = self._fleet.train_cohort(
+                            selected, [strat.model_for(cid) for cid in selected],
+                            with_vecs=True,
+                        )
+                        recs, _ = self._codec.encode_rows(selected, vecs)
+                        encoded = dict(zip(selected, recs))
+                    else:
+                        trained, _ = self._fleet.train_cohort(
+                            selected, [strat.model_for(cid) for cid in selected]
+                        )
                     trained = dict(zip(selected, trained))
                 for cid in selected:
                     c = self.clients[cid]
@@ -601,9 +680,15 @@ class Simulator:
                     else:
                         params, _ = c.local_train(strat.model_for(cid))
                     dur = c.compute_time()
-                    up_dur = self.net.upload(model_bytes(params), t0 + dur)
+                    if cid in encoded:
+                        up_params, nbytes_up, raw = (
+                            encoded[cid], self._codec.nbytes, model_bytes(params),
+                        )
+                    else:
+                        up_params, nbytes_up, raw = self._encode_upload(cid, params)
+                    up_dur = self.net.upload(nbytes_up, t0 + dur, raw_nbytes=raw)
                     finish_times[cid] = t0 + dur + up_dur
-                    uploads[cid] = params
+                    uploads[cid] = up_params
                 barrier = max(finish_times.values())
                 downlinks = strat.finish_round(group_id, uploads, barrier)
                 dl_time = 0.0

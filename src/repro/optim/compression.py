@@ -11,9 +11,24 @@ therefore compress only the *uplink* parameter deltas. Two codecs:
 
 Both operate on flat vectors so they compose with the pytree flatten helpers
 and are architecture-agnostic — exactly like the coordination protocol itself.
+
+Two API tiers:
+
+* single-vector codecs (``topk_compress``/``ef_topk_step``/``int8_compress``)
+  — the reference semantics, payload-object based, used by the unit tests
+  and the analytical comm-cost sweeps;
+* batched row-wise codecs (``ef_topk_batch``/``int8_compress_batch`` and
+  friends) — plain traceable functions over ``(B, n)`` matrices, composed
+  into ONE fused launch per upload cohort by
+  :class:`repro.fl.uplink.UplinkCodec`. Per-row arithmetic is independent
+  (row-wise ``top_k``/elementwise ops), so a batch of B rows computes
+  exactly B single-row codecs. ``ef_topk_update`` is the jitted standalone
+  form with the residual buffer donated — an EF state that lives as its own
+  device matrix is updated in place instead of copied every step.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
@@ -55,11 +70,20 @@ class Int8Payload(NamedTuple):
     chunk: int  # static chunk size
 
 
+def _chunk_mask(n: int, chunk: int) -> jax.Array:
+    """(n_chunks, chunk) validity mask for a length-``n`` vector padded up to
+    a whole number of chunks: padding entries must never enter the per-chunk
+    scale max, so the final ragged chunk's scale depends only on real data."""
+    pad = (-n) % chunk
+    return (jnp.arange(n + pad) < n).reshape(-1, chunk)
+
+
 def int8_compress(vec: jax.Array, chunk: int = 4096) -> Int8Payload:
     n = vec.shape[0]
     pad = (-n) % chunk
     v = jnp.pad(vec, (0, pad)).reshape(-1, chunk)
-    scales = jnp.max(jnp.abs(v), axis=1) / 127.0 + 1e-12
+    masked = jnp.where(_chunk_mask(n, chunk), jnp.abs(v), 0.0)
+    scales = jnp.max(masked, axis=1) / 127.0 + 1e-12
     q = jnp.clip(jnp.round(v / scales[:, None]), -127, 127).astype(jnp.int8)
     return Int8Payload(q=q.reshape(-1)[:n], scales=scales, chunk=chunk)
 
@@ -78,3 +102,81 @@ def payload_bytes(payload) -> int:
     if isinstance(payload, Int8Payload):
         return payload.q.size * 1 + payload.scales.size * 4
     raise TypeError(type(payload))
+
+
+def wire_bytes(mode: str, n: int, *, k: int | None = None, chunk: int | None = None) -> int:
+    """Exact wire size of ONE compressed length-``n`` upload, from static
+    config alone (int32 indices + f32 values, or int8 codes + f32 per-chunk
+    scales — itemsizes honored). Matches ``payload_bytes`` of the payload the
+    codecs actually emit; being static is what lets the simulator bill every
+    compressed uplink without a device sync."""
+    if mode == "topk":
+        return min(k, n) * (4 + 4)
+    if mode == "int8":
+        return n * 1 + (-(-n // chunk)) * 4
+    raise ValueError(f"wire_bytes: unknown mode {mode!r}")
+
+
+# --------------------------------------------------------- batched codecs
+# Row-wise (B, n) forms of the codecs above: plain traceable functions, so
+# the uplink codec can fuse gather + compress + reconstruct + state update
+# into one launch per cohort. Row arithmetic is independent of B.
+
+
+def topk_compress_batch(mat: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Per-row top-k of a (B, n) matrix: (B, k) int32 indices + f32 values."""
+    k = min(k, mat.shape[-1])
+    _, idx = jax.lax.top_k(jnp.abs(mat), k)
+    return idx.astype(jnp.int32), jnp.take_along_axis(mat, idx, axis=-1)
+
+
+def topk_scatter_batch(idx: jax.Array, values: jax.Array, n: int) -> jax.Array:
+    """Densify per-row top-k payloads back to (B, n)."""
+    out = jnp.zeros((idx.shape[0], n), values.dtype)
+    return out.at[jnp.arange(idx.shape[0])[:, None], idx].set(values)
+
+
+def ef_topk_batch(
+    mat: jax.Array, residuals: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Batched error-feedback top-k step over (B, n) rows.
+
+    Returns ``(indices, values, sent, new_residuals)``: the per-row payload
+    arrays, the densified transmission (what the server reconstructs from),
+    and the carried residuals — exactly B independent :func:`ef_topk_step`
+    applications."""
+    corrected = mat + residuals
+    idx, vals = topk_compress_batch(corrected, k)
+    sent = topk_scatter_batch(idx, vals, mat.shape[-1])
+    return idx, vals, sent, corrected - sent
+
+
+@functools.partial(jax.jit, static_argnames=("k",), donate_argnums=(1,))
+def ef_topk_update(mat, residuals, *, k: int):
+    """Standalone jitted EF step with the residual matrix DONATED: an EF
+    state held as its own (B, n) device buffer updates in place, never
+    copied per step. (The uplink codec instead traces :func:`ef_topk_batch`
+    inside its own launch and lets the plane's donated flush scatter own the
+    write-back.)"""
+    return ef_topk_batch(mat, residuals, k)
+
+
+def int8_compress_batch(mat: jax.Array, chunk: int) -> tuple[jax.Array, jax.Array]:
+    """Per-row int8 quantization of a (B, n) matrix: (B, n) int8 codes +
+    (B, n_chunks) f32 scales, padding masked out of the scale max like
+    :func:`int8_compress`."""
+    B, n = mat.shape
+    pad = (-n) % chunk
+    v = jnp.pad(mat, ((0, 0), (0, pad))).reshape(B, -1, chunk)
+    masked = jnp.where(_chunk_mask(n, chunk)[None], jnp.abs(v), 0.0)
+    scales = jnp.max(masked, axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(v / scales[..., None]), -127, 127).astype(jnp.int8)
+    return q.reshape(B, -1)[:, :n], scales
+
+
+def int8_decompress_batch(q: jax.Array, scales: jax.Array, chunk: int) -> jax.Array:
+    """Densify per-row int8 payloads back to (B, n) float32."""
+    B, n = q.shape
+    pad = (-n) % chunk
+    qf = jnp.pad(q, ((0, 0), (0, pad))).reshape(B, -1, chunk).astype(jnp.float32)
+    return (qf * scales[..., None]).reshape(B, -1)[:, :n]

@@ -143,8 +143,8 @@ class TestCoalescedLoopParity:
         )
 
     def test_strategy_without_batched_ingest_falls_back(self):
-        """FedAsyn has no handle_uploads: arrivals in a window ingest
-        per-upload, everything else still coalesces."""
+        """FedAsyn windows ingest through its scan-chain handle_uploads,
+        bitwise the per-upload path (degenerate window pins it)."""
         r0, _ = _run(0.0, strategy="fedasyn")
         r1, _ = _run(1e-9, strategy="fedasyn")
         _assert_bitwise(r0, r1)

@@ -1,0 +1,500 @@
+"""REPRO_UPLINK: fleet-batched compressed uplinks with exact byte billing.
+
+Covers the batched codec primitives (batch == B independent single-row
+codecs, EF residual identities, ragged int8 round-trips with pad-blind
+scales), the :class:`UplinkCodec` state machine (anchor advancement, fused
+cohort == per-client encodes, checkpoint roundtrips incl. the pre-attach
+pending replay), exact payload byte accounting through the simulator on
+both the async and sync loops (``up_bytes == up_events * payload_bytes``),
+and the parity discipline: ``REPRO_UPLINK=none`` is bitwise the default
+trajectory, compressed runs agree loop-vs-fleet and coalesced-vs-per-event.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fl.network import NetworkModel
+from repro.fl.uplink import (
+    UplinkCodec,
+    UplinkConfig,
+    default_uplink,
+    resolve_uplink,
+    seed_template,
+    uplink_config_from_env,
+)
+from repro.optim.compression import (
+    ef_topk_batch,
+    ef_topk_step,
+    ErrorFeedbackState,
+    int8_compress,
+    int8_compress_batch,
+    int8_decompress,
+    int8_decompress_batch,
+    payload_bytes,
+    topk_compress,
+    topk_compress_batch,
+    topk_scatter_batch,
+    wire_bytes,
+)
+
+
+def _mat(b=3, n=40, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(b, n)).astype(np.float32))
+
+
+# --------------------------------------------------------------------------
+# batched codec primitives
+# --------------------------------------------------------------------------
+
+
+class TestBatchedCodecs:
+    def test_topk_batch_matches_single(self):
+        mat = _mat()
+        idx, vals = topk_compress_batch(mat, 7)
+        for j in range(mat.shape[0]):
+            p = topk_compress(mat[j], 7)
+            np.testing.assert_array_equal(np.asarray(idx[j]), np.asarray(p.indices))
+            np.testing.assert_array_equal(np.asarray(vals[j]), np.asarray(p.values))
+
+    def test_topk_scatter_roundtrip(self):
+        mat = _mat()
+        idx, vals = topk_compress_batch(mat, mat.shape[1])  # keep everything
+        np.testing.assert_array_equal(
+            np.asarray(topk_scatter_batch(idx, vals, mat.shape[1])), np.asarray(mat)
+        )
+
+    def test_ef_batch_matches_single_step(self):
+        mat, res = _mat(seed=1), _mat(seed=2)
+        _, _, sent, new_r = ef_topk_batch(mat, res, 5)
+        for j in range(mat.shape[0]):
+            payload, state = ef_topk_step(mat[j], ErrorFeedbackState(res[j]), 5)
+            np.testing.assert_array_equal(
+                np.asarray(sent[j]),
+                np.asarray(jnp.zeros(mat.shape[1]).at[payload.indices].set(payload.values)),
+            )
+            np.testing.assert_array_equal(np.asarray(new_r[j]), np.asarray(state.residual))
+
+    def test_ef_residual_identity(self):
+        """sent + new_residual == mat + residual BITWISE: kept coordinates
+        subtract to exact zero, dropped ones pass through untouched — the
+        invariant that makes EF lossless in the long run."""
+        mat, res = _mat(seed=3), _mat(seed=4)
+        _, _, sent, new_r = ef_topk_batch(mat, res, 5)
+        np.testing.assert_array_equal(np.asarray(sent + new_r), np.asarray(mat + res))
+
+    def test_ef_accumulates_everything(self):
+        """Over rounds, cumulative sent == cumulative input - final residual:
+        nothing is permanently lost to sparsification."""
+        n = 32
+        rng = np.random.default_rng(7)
+        res = jnp.zeros((1, n))
+        total_in = np.zeros(n, np.float64)
+        total_sent = np.zeros(n, np.float64)
+        for r in range(6):
+            mat = jnp.asarray(rng.normal(size=(1, n)).astype(np.float32))
+            _, _, sent, res = ef_topk_batch(mat, res, 4)
+            total_in += np.asarray(mat[0], np.float64)
+            total_sent += np.asarray(sent[0], np.float64)
+        np.testing.assert_allclose(
+            total_sent + np.asarray(res[0], np.float64), total_in, atol=1e-5
+        )
+
+    @pytest.mark.parametrize("n,chunk", [(40, 8), (41, 8), (7, 16), (100, 33)])
+    def test_int8_ragged_roundtrip_error_bound(self, n, chunk):
+        """Quantization error stays within half a scale step per coordinate,
+        including the final ragged chunk."""
+        rng = np.random.default_rng(n)
+        mat = jnp.asarray(rng.normal(size=(2, n)).astype(np.float32))
+        q, scales = int8_compress_batch(mat, chunk)
+        dec = int8_decompress_batch(q, scales, chunk)
+        n_chunks = -(-n // chunk)
+        assert q.shape == (2, n) and scales.shape == (2, n_chunks)
+        per_coord_bound = np.repeat(np.asarray(scales), chunk, axis=1)[:, :n]
+        assert np.all(np.abs(np.asarray(dec - mat)) <= 0.5 * per_coord_bound + 1e-7)
+
+    def test_int8_scales_ignore_padding(self):
+        """The ragged final chunk's scale comes from its REAL entries only:
+        a vector whose tail chunk holds one small value must get a small
+        tail scale regardless of how much padding fills the chunk."""
+        v = jnp.asarray([4.0, -2.0, 1.0, 3.0, 0.25], jnp.float32)  # chunk=4: tail holds 0.25
+        p = int8_compress(v, chunk=4)
+        np.testing.assert_allclose(
+            np.asarray(p.scales), [4.0 / 127.0 + 1e-12, 0.25 / 127.0 + 1e-12], rtol=1e-6
+        )
+        # and the round-trip recovers the tail value at tail precision
+        dec = int8_decompress(p)
+        assert abs(float(dec[4]) - 0.25) <= 0.5 * float(p.scales[1]) + 1e-9
+
+    def test_int8_batch_matches_single(self):
+        mat = _mat(b=3, n=41, seed=9)
+        q, scales = int8_compress_batch(mat, 8)
+        for j in range(mat.shape[0]):
+            p = int8_compress(mat[j], chunk=8)
+            np.testing.assert_array_equal(np.asarray(q[j]), np.asarray(p.q))
+            np.testing.assert_array_equal(np.asarray(scales[j]), np.asarray(p.scales))
+
+    @pytest.mark.parametrize(
+        "mode,n,kw",
+        [("topk", 100, dict(k=10)), ("topk", 5, dict(k=10)),
+         ("int8", 100, dict(chunk=32)), ("int8", 96, dict(chunk=32)), ("int8", 1, dict(chunk=512))],
+    )
+    def test_wire_bytes_matches_emitted_payload(self, mode, n, kw):
+        vec = jnp.asarray(np.random.default_rng(0).normal(size=n).astype(np.float32))
+        payload = (
+            topk_compress(vec, kw["k"]) if mode == "topk" else int8_compress(vec, kw["chunk"])
+        )
+        assert wire_bytes(mode, n, **kw) == payload_bytes(payload)
+
+
+# --------------------------------------------------------------------------
+# config / knobs
+# --------------------------------------------------------------------------
+
+
+class TestKnobs:
+    def test_env_parsing(self, monkeypatch):
+        monkeypatch.delenv("REPRO_UPLINK", raising=False)
+        assert default_uplink() == "none"
+        assert uplink_config_from_env().mode == "none"
+        monkeypatch.setenv("REPRO_UPLINK", " TopK ")
+        monkeypatch.setenv("REPRO_UPLINK_K", "0.25")
+        monkeypatch.setenv("REPRO_UPLINK_CHUNK", "64")
+        cfg = uplink_config_from_env()
+        assert (cfg.mode, cfg.k, cfg.chunk) == ("topk", 0.25, 64)
+        # constructor arg wins over env for the mode, keeps env geometry
+        assert resolve_uplink("int8").mode == "int8"
+        assert resolve_uplink("int8").chunk == 64
+        assert resolve_uplink(None).mode == "topk"
+        assert resolve_uplink(UplinkConfig(mode="int8", chunk=7)).chunk == 7
+
+    def test_invalid_mode_raises(self):
+        with pytest.raises(ValueError):
+            UplinkConfig(mode="gzip")
+        with pytest.raises(ValueError):
+            UplinkConfig(k=0.0)
+        with pytest.raises(ValueError):
+            UplinkConfig(chunk=0)
+
+    def test_resolve_k(self):
+        cfg = UplinkConfig(mode="topk", k=0.1)
+        assert cfg.resolve_k(100) == 10
+        assert cfg.resolve_k(3) == 1
+        assert UplinkConfig(mode="topk", k=17).resolve_k(100) == 17
+        assert UplinkConfig(mode="topk", k=17).resolve_k(5) == 5
+        assert UplinkConfig(chunk=512).resolve_chunk(36) == 36
+
+
+# --------------------------------------------------------------------------
+# UplinkCodec
+# --------------------------------------------------------------------------
+
+
+def _template(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)),
+        "b": jnp.asarray(rng.normal(size=(4,)).astype(np.float32)),
+    }
+
+
+def _models(cids, seed=1):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for c in cids:
+        out[c] = {
+            "w": jnp.asarray(rng.normal(size=(8, 4)).astype(np.float32)),
+            "b": jnp.asarray(rng.normal(size=(4,)).astype(np.float32)),
+        }
+    return out
+
+
+def _codec(mode="topk", cids=(0, 1, 2, 3), **kw):
+    cfg = UplinkConfig(mode=mode, **kw)
+    codec = UplinkCodec(_template(), list(cids), cfg)
+    codec.seed({c: _template() for c in cids})
+    return codec
+
+
+def tree_equal(a, b):
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+class TestUplinkCodec:
+    def test_none_mode_rejected(self):
+        with pytest.raises(ValueError):
+            UplinkCodec(_template(), [0], UplinkConfig(mode="none"))
+
+    def test_unseeded_client_raises(self):
+        cfg = UplinkConfig(mode="topk")
+        codec = UplinkCodec(_template(), [0, 1], cfg)
+        codec.seed({0: _template()})
+        with pytest.raises(ValueError):
+            codec.encode(1, _models([1])[1])
+
+    @pytest.mark.parametrize("mode", ["topk", "int8"])
+    def test_cohort_matches_per_client(self, mode):
+        """A fused B=3 cohort must be bitwise the three per-client B=1
+        encodes (distinct clients' codec rows are independent)."""
+        ca, cb = _codec(mode), _codec(mode)
+        models = _models([0, 1, 2])
+        mat = jnp.stack([ca.spec.flatten(models[c]) for c in (0, 1, 2)])
+        recs, nbytes = ca.encode_rows([0, 1, 2], mat)
+        assert nbytes == ca.nbytes
+        for c in (0, 1, 2):
+            rec, nb = cb.encode(c, models[c])
+            assert nb == nbytes
+            tree_equal(rec, recs[c])
+        # the states advanced identically too: next round still agrees
+        models2 = _models([0, 1, 2], seed=5)
+        mat2 = jnp.stack([ca.spec.flatten(models2[c]) for c in (0, 1, 2)])
+        recs2, _ = ca.encode_rows([0, 1, 2], mat2)
+        for c in (0, 1, 2):
+            rec, _ = cb.encode(c, models2[c])
+            tree_equal(rec, recs2[c])
+
+    @pytest.mark.parametrize("mode", ["topk", "int8"])
+    def test_anchor_advances_to_reconstruction(self, mode):
+        codec = _codec(mode)
+        rec, _ = codec.encode(2, _models([2])[2])
+        anchor = codec.plane.to_pytree(codec._anchor_row[codec.index[2]])
+        tree_equal(rec, anchor)
+
+    def test_identity_when_k_is_dim(self):
+        """topk with k == dim transmits the whole delta: the residual is
+        exactly zero and the reconstruction anchor + (m - anchor) recovers
+        the trained model to 1 ulp (float add/sub, not bitwise)."""
+        codec = _codec("topk", k=10_000)  # clamps to dim
+        m = _models([1])[1]
+        rec, nbytes = codec.encode(1, m)
+        resid = codec.plane.to_pytree(codec._resid_row[codec.index[1]])
+        assert all(not np.any(np.asarray(x)) for x in jax.tree_util.tree_leaves(resid))
+        for x, y in zip(jax.tree_util.tree_leaves(rec), jax.tree_util.tree_leaves(m)):
+            np.testing.assert_allclose(np.asarray(x), np.asarray(y), rtol=1e-5, atol=1e-7)
+        assert nbytes == codec.dim * 8
+
+    def test_launches_flat_in_cohort_size(self):
+        codec = _codec("topk", cids=list(range(8)))
+        models = _models(range(8))
+        for cohort in ([0], [1, 2], [3, 4, 5], [6, 7]):
+            mat = jnp.stack([codec.spec.flatten(models[c]) for c in cohort])
+            codec.encode_rows(cohort, mat)
+        assert codec.launches == 4  # one per cohort, regardless of B
+
+    @pytest.mark.parametrize("mode", ["topk", "int8"])
+    def test_nbytes_static_and_exact(self, mode):
+        codec = _codec(mode, chunk=16)
+        assert codec.nbytes == payload_bytes(codec.payload_template())
+        want = (
+            codec.k * 8 if mode == "topk" else codec.dim + (-(-codec.dim // codec.chunk)) * 4
+        )
+        assert codec.nbytes == want
+
+    def test_seed_skips_already_seeded(self):
+        codec = _codec("topk", cids=[0, 1])
+        rec, _ = codec.encode(0, _models([0])[0])
+        codec.seed({0: _template(seed=9), 1: _template(seed=9)})  # must NOT clobber 0
+        anchor = codec.plane.to_pytree(codec._anchor_row[codec.index[0]])
+        tree_equal(rec, anchor)
+
+    @pytest.mark.parametrize("mode", ["topk", "int8"])
+    def test_state_roundtrip(self, mode):
+        c1 = _codec(mode)
+        models = _models([0, 1, 2, 3])
+        mat = jnp.stack([c1.spec.flatten(models[c]) for c in (0, 1, 2, 3)])
+        c1.encode_rows([0, 1, 2, 3], mat)
+        tree, meta = c1.state_dict()
+        assert meta["mode"] == mode and meta["clients"] == ["0", "1", "2", "3"]
+
+        c2 = UplinkCodec(_template(), [0, 1, 2, 3], UplinkConfig(mode=mode))
+        c2.load_state(tree, meta)
+        # restored codec continues bitwise where c1 would
+        models2 = _models([0, 1, 2, 3], seed=11)
+        mat2 = jnp.stack([c1.spec.flatten(models2[c]) for c in (0, 1, 2, 3)])
+        r1, _ = c1.encode_rows([0, 1, 2, 3], mat2)
+        r2, _ = c2.encode_rows([0, 1, 2, 3], mat2)
+        for a, b in zip(r1, r2):
+            tree_equal(a, b)
+
+    def test_state_restore_unknown_clients_skipped(self):
+        c1 = _codec("topk", cids=[0, 1])
+        c1.encode(0, _models([0])[0])
+        tree, meta = c1.state_dict()
+        c2 = UplinkCodec(_template(), [1, 7], UplinkConfig(mode="topk"))
+        c2.load_state(tree, meta)  # client 0 dropped, 7 unseeded
+        with pytest.raises(ValueError):
+            c2.encode(7, _models([7])[7])
+        c2.encode(1, _models([1])[1])  # 1 restored fine
+
+    def test_mode_mismatch_raises(self):
+        tree, meta = _codec("int8").state_dict()
+        c2 = UplinkCodec(_template(), [0], UplinkConfig(mode="topk"))
+        with pytest.raises(ValueError):
+            c2.load_state(tree, meta)
+
+    def test_seed_template_structure(self):
+        tree, meta = _codec("topk").state_dict()
+        tpl = seed_template(meta, _template())
+        assert set(tpl) == {"anchors", "residuals"}
+        assert set(tpl["anchors"]) == {"0", "1", "2", "3"}
+        assert set(seed_template(_codec("int8").state_dict()[1], _template())) == {"anchors"}
+
+    def test_server_checkpoint_carries_codec(self, tmp_path):
+        """Codec rows ride the EchoPFL server checkpoint: state_dict gains
+        an "uplink" section, state_template covers it, and a load_state
+        BEFORE the next run's codec exists replays at attach time."""
+        from repro.checkpoint.checkpointer import restore_pytree, save_pytree
+        from repro.core.server import EchoPFLServer
+
+        init = _template()
+        srv = EchoPFLServer(init, num_initial_clusters=2, seed=0)
+        codec = _codec("topk")
+        srv.attach_uplink_codec(codec)
+        models = _models([0, 1, 2, 3])
+        for c in (0, 1, 2):
+            rec, _ = codec.encode(c, models[c])
+            srv.handle_upload(c, rec, 0, 16, t=float(c))
+        tree, meta = srv.state_dict()
+        assert "uplink" in tree and meta["uplink"]["mode"] == "topk"
+        save_pytree(str(tmp_path / "srv"), tree, extra=meta)
+
+        srv2 = EchoPFLServer(init, num_initial_clusters=2, seed=0)
+        raw_meta = restore_pytree(str(tmp_path / "srv"), like=None)[1]
+        template = srv2.state_template(raw_meta)
+        assert "uplink" in template
+        tree_r, meta_r = restore_pytree(str(tmp_path / "srv"), like=template)
+        srv2.load_state(tree_r, meta_r)  # no codec yet: stashes pending
+        codec2 = UplinkCodec(_template(), [0, 1, 2, 3], UplinkConfig(mode="topk"))
+        codec2.seed({c: _template(seed=9) for c in (0, 1, 2, 3)})  # pre-seed
+        srv2.attach_uplink_codec(codec2)  # replay clobbers the fresh seed
+        t1, m1 = codec.state_dict()
+        t2, m2 = codec2.state_dict()
+        assert m1 == m2
+        tree_equal(t1, t2)
+
+
+# --------------------------------------------------------------------------
+# simulator integration: billing + parity
+# --------------------------------------------------------------------------
+
+
+def _run(uplink, *, strategy="echopfl", backend="fleet", window=0.0, seed=3,
+         num_clients=5, max_time=300.0, **kw):
+    from repro.fl.experiment import build_clients, build_strategy
+    from repro.fl.simulator import Simulator
+
+    task, clients, init = build_clients("har", num_clients, seed, samples_per_client=48)
+    strat = build_strategy(strategy, init, clients, seed=seed, **kw)
+    sim = Simulator(
+        clients, strat, network=NetworkModel(), eval_interval=60.0, seed=seed,
+        coalesce_window=window, client_backend=backend, uplink=uplink,
+    )
+    return sim.run(max_time=max_time), sim
+
+
+def _assert_bitwise(a, b):
+    assert a.curve == b.curve
+    assert a.per_client_acc == b.per_client_acc
+    assert (a.up_bytes, a.down_bytes, a.up_events, a.down_events) == (
+        b.up_bytes, b.down_bytes, b.up_events, b.down_events)
+    assert a.duration == b.duration
+
+
+class TestSimulatorUplink:
+    def test_none_mode_is_bitwise_identity(self, monkeypatch):
+        monkeypatch.delenv("REPRO_UPLINK", raising=False)
+        r0, s0 = _run(None)
+        r1, s1 = _run("none")
+        monkeypatch.setenv("REPRO_UPLINK", "none")
+        r2, s2 = _run(None)
+        assert s0._codec is None and s1._codec is None and s2._codec is None
+        _assert_bitwise(r0, r1)
+        _assert_bitwise(r0, r2)
+        assert r0.up_raw_bytes == r0.up_bytes
+        assert "uplink_ratio" not in r0.summary()
+
+    @pytest.mark.parametrize("mode", ["topk", "int8"])
+    def test_async_billing_exact(self, mode):
+        """Every async upload bills exactly payload_bytes of the emitted
+        payload shape; dense-equivalent bytes tracked alongside."""
+        rep, sim = _run(mode)
+        codec = sim._codec
+        assert rep.up_events > 0
+        assert rep.up_bytes == rep.up_events * payload_bytes(codec.payload_template())
+        from repro.fl.simulator import model_bytes
+
+        dense = model_bytes(sim.strategy.init_params)
+        assert rep.up_raw_bytes == rep.up_events * dense
+        s = rep.summary()
+        assert s["uplink_ratio"] == round(rep.up_bytes / rep.up_raw_bytes, 4)
+        assert rep.extra["uplink"]["payload_bytes"] == codec.nbytes
+        # every upload ran through a fused encode launch (B=1 per event here)
+        assert codec.launches == rep.up_events
+
+    @pytest.mark.parametrize("mode", ["topk", "int8"])
+    def test_sync_billing_exact(self, mode):
+        rep, sim = _run(mode, strategy="fedavg", max_time=240.0)
+        codec = sim._codec
+        assert rep.up_events > 0
+        assert rep.up_bytes == rep.up_events * payload_bytes(codec.payload_template())
+
+    def test_compressed_degenerate_window_bitwise(self):
+        r0, _ = _run("topk", window=0.0)
+        r1, _ = _run("topk", window=1e-9)
+        _assert_bitwise(r0, r1)
+
+    def test_compressed_window_parity(self):
+        """Real coalescing windows keep exact event counts/bytes/eval grid
+        under compression; values agree to eval tolerance."""
+        r0, _ = _run("topk", window=0.0)
+        r2, _ = _run("topk", window=60.0)
+        assert [t for t, _ in r0.curve] == [t for t, _ in r2.curve]
+        assert r0.up_events == r2.up_events
+        assert r0.up_bytes == r2.up_bytes
+        assert r0.duration == r2.duration
+        np.testing.assert_allclose(
+            [x for _, x in r0.curve], [x for _, x in r2.curve], atol=0.25)
+
+    def test_compressed_coalesced_uses_fused_cohorts(self):
+        """With a real window the codec encodes whole cohorts: fewer fused
+        launches than upload events, same exact billing."""
+        rep, sim = _run("topk", window=60.0)
+        assert rep.up_events > sim._codec.launches  # cohorts actually batched
+        assert rep.up_bytes == rep.up_events * sim._codec.nbytes
+
+    def test_compressed_loop_fleet_agree(self):
+        rf, _ = _run("topk")
+        rl, _ = _run("topk", backend="loop")
+        assert rf.up_events == rl.up_events
+        assert rf.up_bytes == rl.up_bytes
+        assert [t for t, _ in rf.curve] == [t for t, _ in rl.curve]
+        np.testing.assert_allclose(
+            [x for _, x in rf.curve], [x for _, x in rl.curve], atol=0.25)
+
+    def test_compressed_fedasyn_coalesced(self):
+        """The ported FedAsyn ingests compressed cohorts too — billing stays
+        exact through its scan-chain handle_uploads."""
+        r0, s0 = _run("int8", strategy="fedasyn", window=0.0)
+        r2, s2 = _run("int8", strategy="fedasyn", window=60.0)
+        assert r0.up_bytes == r0.up_events * s0._codec.nbytes
+        assert r2.up_bytes == r2.up_events * s2._codec.nbytes
+        assert r0.up_events == r2.up_events
+
+    def test_lm_delta_billing_compressed(self):
+        """The PR 7 LoRA-delta stress case: ~9KB deltas compress per upload
+        at exactly wire_bytes of the delta's flat dim."""
+        from repro.common.pytrees import flatten_spec
+        from repro.fl.lm_task import default_lm_task, run_lm_experiment
+
+        task = default_lm_task()
+        dim = flatten_spec(task.init_params(jax.random.PRNGKey(0))).dim
+        k = UplinkConfig(mode="topk").resolve_k(dim)
+        _, _, _, rep = run_lm_experiment(
+            "fedavg", num_clients=4, rounds=2, seq_len=16, n_train=4, n_test=2,
+            local_epochs=1, eval_interval=60.0, uplink="topk",
+        )
+        assert rep.up_events > 0
+        assert rep.up_bytes == rep.up_events * wire_bytes("topk", dim, k=k)
+        assert rep.up_raw_bytes > rep.up_bytes
