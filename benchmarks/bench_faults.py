@@ -1,0 +1,176 @@
+"""Fault-rate sweep: protocol resilience under deterministic chaos (REPRO_FAULTS).
+
+Sweeps the seeded fault injector's loss/crash rates over a fixed virtual
+horizon and reports, per rate, what EchoPFL's retry-with-backoff discipline
+(REPRO_FAULT_POLICY=retry, the default) preserves versus the
+drop-the-straggler baseline (policy=drop, the classic FedAsync/sync
+response of abandoning clients that keep missing the window — the Fig. 2
+slow-device pathology, now induced by the network instead of the device):
+
+  * ``final_acc`` / ``tail_acc`` — fixed-horizon mean accuracy over the
+    surviving population (drop retires clients; their frozen models still
+    count, which is exactly the personalization cost of abandonment).
+  * ``uploads`` — aggregation rounds that actually landed in the horizon
+    (retries push arrivals later; drops remove them entirely).
+  * ``retry_MB`` — uplink bytes attributable to retransmissions alone,
+    straight from ``NetworkModel.up_retry_bytes`` (every retry bills real
+    bytes; nothing is free).
+  * ``dropped`` — clients the drop policy retired.
+
+The schedule is seeded and counter-keyed per (kind, client), so both arms
+at a given rate see the *identical* crash/loss schedule — the comparison
+isolates the policy, not the luck. ``--json`` writes BENCH_faults.json at
+the repo root.
+
+Usage:
+    python benchmarks/bench_faults.py [--rates 0,0.1,0.3] [--clients 32] [--json]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+for p in (os.path.join(REPO_ROOT, "src"), REPO_ROOT):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+from benchmarks.common import save_result, table  # noqa: E402
+from repro.fl.experiment import build_clients, build_strategy  # noqa: E402
+from repro.fl.faults import FaultConfig, FaultPlan  # noqa: E402
+from repro.fl.network import NetworkModel  # noqa: E402
+from repro.fl.simulator import Simulator  # noqa: E402
+
+
+def _run(n, rate, policy, horizon, seed=0, window=30.0):
+    task, clients, init = build_clients("har", n, seed=seed, samples_per_client=48)
+    strat = build_strategy("echopfl", init, clients, seed=seed)
+    faults = None
+    if rate > 0:
+        faults = FaultPlan(config=FaultConfig(
+            seed=seed + 1,
+            loss_rate=rate,
+            crash_rate=rate / 2,
+            dup_rate=rate / 4,
+            reorder_rate=rate / 4,
+            policy=policy,
+        ))
+    sim = Simulator(clients, strat, network=NetworkModel(), seed=seed,
+                    client_backend="fleet", coalesce_window=window, faults=faults)
+    rep = sim.run_async(max_time=horizon)
+    k = max(1, len(rep.curve) // 5)
+    ledger = rep.extra.get("faults", {})
+    return {
+        "final_acc": rep.final_acc,
+        "tail_acc": sum(a for _, a in rep.curve[-k:]) / k,
+        "uploads": rep.extra["uploads"],
+        "retry_MB": rep.up_retry_bytes / 1e6,
+        "up_MB": rep.up_bytes / 1e6,
+        "dropped": ledger.get("dropped_clients", 0),
+        "crashes": ledger.get("crashes", 0),
+        "upload_failures": ledger.get("upload_failures", 0),
+        "dups_absorbed": ledger.get("dups_absorbed", 0),
+        "stale_absorbed": ledger.get("stale_downlinks_absorbed", 0),
+    }
+
+
+def _mean_arm(n, rate, policy, horizon, seeds):
+    """Per-client accuracy at a fixed horizon is noisy (48 eval samples per
+    client, one chaos realization); average the sweep over seeds so a
+    single unlucky schedule can't tell the story."""
+    runs = [_run(n, rate, policy, horizon, seed=s) for s in seeds]
+    out = {k: sum(r[k] for r in runs) / len(runs) for k in runs[0]}
+    out["final_acc_by_seed"] = [r["final_acc"] for r in runs]
+    return out
+
+
+def run(quick: bool = False, rates=(0.0, 0.1, 0.3), clients: int = 32,
+        horizon: float = 2400.0, seeds=(0, 1, 2), json_out: bool = False) -> dict:
+    if quick:
+        rates, clients, horizon, seeds = (0.0, 0.3), 12, 900.0, (0,)
+    rows, by_rate = [], {}
+    for rate in rates:
+        retry = _mean_arm(clients, rate, "retry", horizon, seeds)
+        drop = _mean_arm(clients, rate, "drop", horizon, seeds) if rate > 0 else retry
+        by_rate[str(rate)] = {"retry": retry, "drop": drop}
+        rows.append({
+            "fault rate": rate,
+            "acc (retry)": retry["final_acc"],
+            "acc (drop)": drop["final_acc"],
+            "uploads (retry)": retry["uploads"],
+            "uploads (drop)": drop["uploads"],
+            "retry MB": retry["retry_MB"],
+            "dropped clients": drop["dropped"],
+        })
+
+    print(table(
+        rows,
+        ["fault rate", "acc (retry)", "acc (drop)", "uploads (retry)",
+         "uploads (drop)", "retry MB", "dropped clients"],
+        title=f"fault sweep (har, {clients} clients, horizon={horizon:.0f}s, "
+              f"mean over seeds {tuple(seeds)}, EchoPFL retry vs drop-straggler)",
+    ))
+
+    clean = by_rate.get("0.0") or by_rate[str(rates[0])]
+    payload = {
+        "task": "har",
+        "clients": clients,
+        "horizon_s": horizon,
+        "window_s": 30.0,
+        "seeds": list(seeds),
+        "by_rate": by_rate,
+        "headline": {
+            "metric": "fixed-horizon mean accuracy under seeded chaos "
+                      "(loss=r, crash=r/2, dup=reorder=r/4), mean over "
+                      "seeds, REPRO_FAULT_POLICY=retry vs drop",
+            "clean_final_acc": clean["retry"]["final_acc"],
+            "acc_by_rate_retry": {r: v["retry"]["final_acc"] for r, v in by_rate.items()},
+            "acc_by_rate_drop": {r: v["drop"]["final_acc"] for r, v in by_rate.items()},
+            "note": "Both arms at a given rate draw the identical "
+                    "counter-keyed fault schedule, so the gap isolates the "
+                    "policy. At these rates the fixed-horizon population "
+                    "accuracies land close (retired clients keep scoring "
+                    "with their frozen personalized models, and EchoPFL's "
+                    "staleness control discounts the very late retried "
+                    "arrivals that would otherwise drag the clusters) — "
+                    "the policy tradeoff the sweep makes measurable is in "
+                    "the other columns: retry keeps every client served "
+                    "(dropped=0, they continue to adapt past the horizon) "
+                    "for retry_MB retransmission bytes and later arrivals; "
+                    "drop saves the bytes but permanently retires clients "
+                    "whose on-device models stop improving. Per-seed "
+                    "accuracies are in by_rate.*.*.final_acc_by_seed — "
+                    "single-seed chaos is noisy, which is why the table "
+                    "reports seed means. Duplicates and reorders are "
+                    "absorbed by the ingest/install fences and never "
+                    "perturb the trajectory (tests/test_faults.py proves "
+                    "trajectory identity under dup-only injection).",
+        },
+    }
+    save_result("faults", payload)
+    if json_out:
+        path = os.path.join(REPO_ROOT, "BENCH_faults.json")
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+        print(f"wrote {path}")
+    return payload
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rates", default="0,0.1,0.3")
+    ap.add_argument("--clients", type=int, default=32)
+    ap.add_argument("--horizon", type=float, default=2400.0)
+    ap.add_argument("--seeds", default="0,1,2")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", action="store_true", help="write BENCH_faults.json")
+    args = ap.parse_args()
+    run(quick=args.quick, rates=tuple(float(r) for r in args.rates.split(",")),
+        clients=args.clients, horizon=args.horizon,
+        seeds=tuple(int(s) for s in args.seeds.split(",")), json_out=args.json)
+
+
+if __name__ == "__main__":
+    main()

@@ -20,6 +20,7 @@ from benchmarks import (
     bench_comm_peaks,
     bench_distance_metrics,
     bench_drift_adaptation,
+    bench_faults,
     bench_hm_sensitivity,
     bench_lm_fleet,
     bench_roofline,
@@ -43,6 +44,7 @@ BENCHES = {
     "client_fleet": bench_client_fleet.run,         # loop vs fleet client plane
     "async_coalesce": bench_async_coalesce.run,     # event-coalesced async pipeline
     "lm_fleet": bench_lm_fleet.run,                 # REPRO_TASK=lm throughput + model axis
+    "faults": bench_faults.run,                     # chaos sweep: retry vs drop-straggler
 }
 
 

@@ -86,6 +86,26 @@ echo "=== compressed coalesced-vs-per-event parity under both kernel backends ==
 REPRO_KERNELS=ref python -m pytest -q -p no:cacheprovider tests/test_uplink.py
 REPRO_KERNELS=pallas python -m pytest -q -p no:cacheprovider tests/test_uplink.py
 
+echo "=== seeded chaos: REPRO_FAULTS=1 under both kernel backends ==="
+# Deterministic fault injection over the resilience suite: crash/rejoin,
+# death + plane-row reclamation, retry billing exactness, dup/reorder
+# fences, drop-straggler policy, and mid-run server kill+restore. The env
+# knobs make the ambient default chaotic so the knob-parsing path is the
+# one under test; explicit FaultConfigs inside the suite pin the seeds.
+REPRO_FAULTS=1 REPRO_FAULT_SEED=7 \
+REPRO_KERNELS=ref python -m pytest -q -p no:cacheprovider tests/test_faults.py
+REPRO_FAULTS=1 REPRO_FAULT_SEED=7 \
+REPRO_KERNELS=pallas python -m pytest -q -p no:cacheprovider tests/test_faults.py
+
+echo "=== faults-off bitwise identity (clean protocol untouched) ==="
+# With REPRO_FAULTS unset no injector is constructed; the coalescing
+# parity suite's bitwise trajectory pins (degenerate-window identity,
+# byte accounting) double as the proof that the fault layer's hooks are
+# inert when disabled. test_checkpoint.py covers the crash-safe
+# staging rewrite the kill+restore path depends on.
+python -m pytest -q -p no:cacheprovider \
+    tests/test_async_coalesce.py tests/test_checkpoint.py
+
 echo "=== REPRO_TASK=lm smoke (LoRA/head deltas over the frozen tiny_lm base) ==="
 # The LM personalization workload end-to-end on both simulator loops:
 # run_sync (fedavg) + coalesced run_async (echopfl), loop/fleet backend

@@ -55,14 +55,28 @@ def _checksum(leaves: list[np.ndarray]) -> str:
 
 
 def save_pytree(directory: str, tree: PyTree, extra: dict | None = None) -> None:
-    """Atomically write ``tree`` (+ JSON-serializable ``extra``) to ``directory``."""
+    """Atomically write ``tree`` (+ JSON-serializable ``extra``) to ``directory``.
+
+    Crash-safe at every point: the payload is staged in a ``tmp.<uuid>``
+    sibling (fsynced, manifest written last), an existing ``directory``
+    is renamed aside rather than deleted, and only then does the staged
+    dir rename into place. A kill anywhere in that sequence leaves either
+    the old checkpoint or the new one fully intact under a name
+    ``latest_step``/``restore_pytree`` will accept — never a half-written
+    step, and never a window where the previous checkpoint is already
+    destroyed but the new one not yet visible (the old rmtree-then-replace
+    overwrite had exactly that window)."""
     parent = os.path.dirname(os.path.abspath(directory)) or "."
     os.makedirs(parent, exist_ok=True)
     tmp = os.path.join(parent, f"tmp.{uuid.uuid4().hex}")
+    old = None
     os.makedirs(tmp)
     try:
         paths, leaves = _paths_and_leaves(tree)
-        np.savez(os.path.join(tmp, "leaves.npz"), **{str(i): leaf for i, leaf in enumerate(leaves)})
+        with open(os.path.join(tmp, "leaves.npz"), "wb") as f:
+            np.savez(f, **{str(i): leaf for i, leaf in enumerate(leaves)})
+            f.flush()
+            os.fsync(f.fileno())
         manifest = {
             "paths": paths,
             "shapes": [list(x.shape) for x in leaves],
@@ -70,14 +84,26 @@ def save_pytree(directory: str, tree: PyTree, extra: dict | None = None) -> None
             "checksum": _checksum(leaves),
             "extra": extra or {},
         }
+        # manifest last: its presence is what marks a step dir as valid
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
         if os.path.isdir(directory):
-            shutil.rmtree(directory)
-        os.replace(tmp, directory)
+            old = os.path.join(parent, f"tmp.old.{uuid.uuid4().hex}")
+            os.replace(directory, old)
+        try:
+            os.replace(tmp, directory)
+        except BaseException:
+            if old is not None and not os.path.exists(directory):
+                os.replace(old, directory)  # roll the old checkpoint back
+                old = None
+            raise
     finally:
         if os.path.isdir(tmp):
             shutil.rmtree(tmp, ignore_errors=True)
+        if old is not None and os.path.isdir(old):
+            shutil.rmtree(old, ignore_errors=True)
 
 
 def restore_pytree(directory: str, like: PyTree | None = None, verify: bool = True) -> tuple[PyTree, dict]:

@@ -984,6 +984,51 @@ class EchoPFLServer:
         self.events.append({"kind": "dissolve", "cluster": victim})
         return True
 
+    # --------------------------------------------------- elastic eviction
+    def evict_clients(self, client_ids: list) -> dict:
+        """Administratively remove clients that have gone permanently dark
+        (device death under fault injection, or a drop-the-straggler
+        policy giving up on them). Frees each client's upload row, drops
+        its assignment/version bookkeeping, and — when a cluster's
+        membership empties — reclaims the cluster itself: center and
+        broadcast-anchor rows go back to the plane free-list, the
+        predictor and CI branch are deleted. Without this, every
+        all-members-dark cluster would leak two plane rows (plus one per
+        member upload) for the rest of the run.
+
+        Returns ``{"evicted": [...], "reclaimed": [cluster ids]}``."""
+        cl = self.clustering
+        evicted: list = []
+        reclaimed: list[int] = []
+        for client_id in client_ids:
+            touched = False
+            row = self._upload_rows.pop(client_id, None)
+            if row is not None:
+                cl.plane.free(row)
+                touched = True
+            if self.last_uploads.pop(client_id, None) is not None:
+                touched = True
+            self.client_versions.pop(client_id, None)
+            home = cl.assignment.pop(client_id, None)
+            if home is not None and home in cl.clusters:
+                touched = True
+                cluster = cl.clusters[home]
+                cluster.members.discard(client_id)
+                cluster.partial_finetune.discard(client_id)
+                # reclaiming cluster 0 would break the clustering-off
+                # ablation, which hardwires every upload into it
+                if not cluster.members and self.enable_clustering:
+                    cl.drop_cluster(home)
+                    self.predictors.pop(home, None)
+                    self.repo.delete(f"cluster/{home}")
+                    reclaimed.append(home)
+            if touched:
+                evicted.append(client_id)
+                self.events.append({"kind": "evict", "client": str(client_id)})
+        for home in reclaimed:
+            self.events.append({"kind": "reclaim", "cluster": home})
+        return {"evicted": evicted, "reclaimed": reclaimed}
+
     # ------------------------------------------------ checkpoint/restart
     def state_dict(self) -> tuple[PyTree, dict]:
         """(array_tree, json_meta) capturing every piece of server state the
@@ -1042,6 +1087,14 @@ class EchoPFLServer:
             "rnn_broadcasts": self._rnn_broadcasts,
             "refine_round": self._refine_round,
             "upload_clients": sorted(last_uploads),
+            # exact-restart extras: the expand cooldown gates refinement
+            # decisions, and events/feedback means feed stats() — a mid-run
+            # kill+restore must reproduce the uninterrupted ledger exactly
+            "last_expand_round": {str(k): v for k, v in cl._last_expand_round.items()},
+            "events": list(self.events),
+            "cluster_feedback_mean": {
+                str(k): v for k, v in self.last_cluster_feedback_mean.items()
+            },
         }
         if self.uplink_codec is not None:
             # compressed-uplink codec state (anchors + EF residuals): without
@@ -1120,6 +1173,15 @@ class EchoPFLServer:
         self._decisions = meta["decisions"]
         self._rnn_broadcasts = meta["rnn_broadcasts"]
         self._refine_round = meta["refine_round"]
+        # exact-restart extras (absent in older checkpoints: cooldowns and
+        # stats counters then restart empty, which older callers tolerated)
+        cl._last_expand_round = {
+            int(k): v for k, v in meta.get("last_expand_round", {}).items()
+        }
+        self.events = list(meta.get("events", []))
+        self.last_cluster_feedback_mean = {
+            int(k): v for k, v in meta.get("cluster_feedback_mean", {}).items()
+        }
         if meta.get("uplink"):
             if self.uplink_codec is not None:
                 self.uplink_codec.load_state(tree["uplink"], meta["uplink"], client_id_type)

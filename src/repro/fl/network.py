@@ -20,13 +20,19 @@ class NetworkModel:
     def __post_init__(self):
         self.up_bytes = 0
         self.up_raw_bytes = 0  # dense-equivalent uplink bytes (compression ratio)
+        self.up_retry_bytes = 0  # retry-attributable uplink bytes (fault layer)
         self.down_bytes = 0
         self.up_events = 0
         self.down_events = 0
         self._up_series: dict[int, float] = defaultdict(float)
         self._down_series: dict[int, float] = defaultdict(float)
 
-    def upload(self, nbytes: int, t: float, raw_nbytes: int | None = None) -> float:
+    @staticmethod
+    def _check_bytes(nbytes: int) -> None:
+        if nbytes < 0:
+            raise ValueError(f"byte count must be >= 0, got {nbytes}")
+
+    def upload(self, nbytes: int, t: float, raw_nbytes: int | None = None, retry: bool = False) -> float:
         """Register an upload starting at t; returns transfer duration.
 
         ``nbytes`` is what actually crosses the thin link (the compressed
@@ -34,14 +40,23 @@ class NetworkModel:
         totals, the per-bin series, the transfer duration. ``raw_nbytes``
         is the dense size of the same model payload, tracked separately so
         reports can state the achieved compression ratio; it defaults to
-        ``nbytes`` (uncompressed uploads)."""
+        ``nbytes`` (uncompressed uploads). ``retry`` marks the transfer as
+        retry-attributable (a re-send after a loss/timeout, or a duplicate
+        retransmission): it bills identically but is also accumulated in
+        ``up_retry_bytes`` so reports can state the fault overhead."""
+        self._check_bytes(nbytes)
+        if raw_nbytes is not None:
+            self._check_bytes(raw_nbytes)
         self.up_bytes += nbytes
         self.up_raw_bytes += nbytes if raw_nbytes is None else raw_nbytes
+        if retry:
+            self.up_retry_bytes += nbytes
         self.up_events += 1
         self._up_series[int(t // self.bin_seconds)] += nbytes
         return nbytes / self.upstream_bps
 
     def download(self, nbytes: int, t: float) -> float:
+        self._check_bytes(nbytes)
         self.down_bytes += nbytes
         self.down_events += 1
         self._down_series[int(t // self.bin_seconds)] += nbytes
@@ -53,6 +68,9 @@ class NetworkModel:
         per-bin series land exactly as ``count`` ``download`` calls would
         (the per-bin sum adds integer byte counts, exact in float64), and
         the shared transfer duration is returned once."""
+        self._check_bytes(nbytes)
+        if count <= 0:
+            raise ValueError(f"download_bulk count must be >= 1, got {count}")
         self.down_bytes += nbytes * count
         self.down_events += count
         self._down_series[int(t // self.bin_seconds)] += nbytes * count

@@ -16,6 +16,7 @@ from __future__ import annotations
 import dataclasses
 import heapq
 import itertools
+import math
 import os
 from typing import Any
 
@@ -23,6 +24,7 @@ import jax
 import numpy as np
 
 from repro.core.client import SimClient
+from repro.fl.faults import FaultInjector, resolve_faults
 from repro.fl.network import NetworkModel
 
 PyTree = Any
@@ -66,6 +68,9 @@ class SimReport:
     # dense-equivalent uplink bytes: equals up_bytes unless an uplink codec
     # (REPRO_UPLINK) compressed the wire — the ratio is the comm-cost claim
     up_raw_bytes: int = 0
+    # retry-attributable uplink bytes: re-sends after losses/timeouts and
+    # duplicate retransmissions under fault injection (REPRO_FAULTS)
+    up_retry_bytes: int = 0
 
     def bytes_until(self, t: float) -> tuple[float, float]:
         """(up, down) bytes accumulated in bins up to time t (the paper's
@@ -90,6 +95,8 @@ class SimReport:
         if self.up_raw_bytes and self.up_raw_bytes != self.up_bytes:
             out["up_raw_MB"] = round(self.up_raw_bytes / 1e6, 2)
             out["uplink_ratio"] = round(self.up_bytes / self.up_raw_bytes, 4)
+        if self.up_retry_bytes:
+            out["up_retry_MB"] = round(self.up_retry_bytes / 1e6, 2)
         return out
 
 
@@ -139,6 +146,7 @@ class Simulator:
         client_backend: str | None = None,
         coalesce_window: float | None = None,
         uplink: Any | None = None,
+        faults: Any | None = None,
     ):
         from repro.fl.uplink import resolve_uplink
 
@@ -170,12 +178,34 @@ class Simulator:
         # both, which is what the fault-tolerance tests assert)
         self.churn = churn or {}
         self.churn_delays = 0
+        # fault injection (REPRO_FAULTS / the faults= argument): None when
+        # disabled — every fault branch below is then dead, keeping clean
+        # trajectories bitwise-identical to the pre-fault code
+        plan = resolve_faults(faults)
+        self._faults = FaultInjector(plan) if plan is not None else None
+        self._dead: set = set()  # permanently-dark clients (death / drop policy)
+        self._useq: dict[Any, int] = {}  # per-client upload send sequence
+        self._ingest_high: dict[Any, int] = {}  # highest useq ingested (dup fence)
+        self._dl_seq: dict[Any, int] = {}  # per-recipient downlink send sequence
+        self._dl_high: dict[Any, int] = {}  # highest fseq installed (reorder fence)
+        self._template = None  # model template, kept for post-restart rewiring
 
     def _next_online(self, cid, t: float) -> float:
+        """Single churn consultation point for a local-round start: static
+        churn windows first, then injected crashes (the crash loses the
+        round's work and the device resumes through this same path —
+        ``inf`` marks a permanent death)."""
         for t_off, t_on in self.churn.get(cid, ()):
             if t_off <= t < t_on:
                 self.churn_delays += 1
                 return t_on
+        if self._faults is not None:
+            down = self._faults.crash(cid)
+            if down is not None:
+                if down == math.inf:
+                    return math.inf
+                self.churn_delays += 1
+                return t + down
         return t
 
     # -------------------------------------------------------- fleet engine
@@ -187,16 +217,18 @@ class Simulator:
         always replaced — or cleared on the loop backend — so probes never
         route through a dead fleet's clients/data."""
         strat = self.strategy
-        if self._codec is None and self.uplink.mode != "none":
-            from repro.fl.uplink import UplinkCodec
+        if self.uplink.mode != "none":
+            if self._codec is None:
+                from repro.fl.uplink import UplinkCodec
 
-            # both backends compress: the codec is its own batched launch, so
-            # even the per-client loop ships compressed (B = 1) uploads
-            self._codec = UplinkCodec(template, list(self.clients), self.uplink)
+                # both backends compress: the codec is its own batched launch,
+                # so even the per-client loop ships compressed (B = 1) uploads
+                self._codec = UplinkCodec(template, list(self.clients), self.uplink)
             attach = getattr(strat, "attach_uplink_codec", None)
-            if attach is not None:
+            if attach is not None and getattr(strat, "uplink_codec", None) is not self._codec:
                 # the strategy adopts the codec so anchors/residuals ride its
-                # checkpoints (a pre-attach load_state restores here too)
+                # checkpoints (a pre-attach load_state restores here too —
+                # including the fresh strategy a mid-run kill+restore builds)
                 attach(self._codec)
         current = getattr(strat, "feedback_batch_fn", "missing")
         fleet_hook = current is not None and current != "missing" and getattr(
@@ -250,17 +282,122 @@ class Simulator:
         rec, nbytes = self._codec.encode(cid, new_params)
         return rec, nbytes, raw
 
+    # -------------------------------------------------------- fault layer
+    def _upload_with_faults(self, cid, nbytes: int, raw: int | None, t: float) -> tuple[float, bool]:
+        """Bill one (possibly retried) upload: every failed attempt sends
+        its full payload over the thin link (flagged retry-attributable
+        past the first send) and waits a capped exponential backoff before
+        re-sending. Returns ``(delay to arrival, delivered)``; the extra
+        delay flows into version-based staleness accounting for free —
+        the server simply sees an older base_version. ``delivered=False``
+        only under the drop policy (the straggler baseline gives up)."""
+        inj = self._faults
+        fails, delivered = inj.upload_plan(cid)
+        delay = 0.0
+        for i in range(fails):
+            delay += self.net.upload(nbytes, t + delay, raw_nbytes=raw, retry=i > 0)
+            delay += inj.backoff(i)
+        if not delivered:
+            return delay, False
+        dur = self.net.upload(nbytes, t + delay, raw_nbytes=raw, retry=fails > 0)
+        if fails:
+            inj.ledger["retry_delay_s"] += delay
+        return delay + dur, True
+
+    def _send_upload(self, push, t: float, cid, up_params, nbytes, raw, base_version) -> None:
+        """Schedule one trained upload's arrival (+ fault retries, drops,
+        duplicate deliveries). Payload carries the per-client send sequence
+        number; the ingest side fences on it to absorb duplicates."""
+        if self._faults is None:
+            dur = self.net.upload(nbytes, t, raw_nbytes=raw)
+            push(t + dur, "upload_done", (cid, up_params, base_version, 0))
+            return
+        delay, delivered = self._upload_with_faults(cid, nbytes, raw, t)
+        if not delivered:  # drop policy hit the retry cap: straggler leaves
+            self._retire_client(cid, "dropped")
+            return
+        useq = self._useq[cid] = self._useq.get(cid, 0) + 1
+        push(t + delay, "upload_done", (cid, up_params, base_version, useq))
+        dup = self._faults.duplicate(cid)
+        if dup is not None:  # retransmission: real bytes cross the link again
+            self.net.upload(nbytes, t, raw_nbytes=raw, retry=True)
+            push(t + delay + dup, "upload_done", (cid, up_params, base_version, useq))
+
+    def _push_downlink(self, push, t_send: float, dl, dur: float) -> None:
+        """Schedule one downlink delivery. Under fault injection the send
+        gets a per-recipient sequence number (the install path fences on
+        it) and possibly an injected reorder delay."""
+        if self._faults is None:
+            push(t_send + dur, "downlink", dl)
+            return
+        dl._fseq = self._dl_seq[dl.client_id] = self._dl_seq.get(dl.client_id, -1) + 1
+        push(t_send + dur + self._faults.reorder(dl.client_id), "downlink", dl)
+
+    def _retire_client(self, cid, kind: str) -> None:
+        """Remove a permanently-dark client from the protocol: the server
+        evicts it (freeing plane rows, reclaiming all-dark clusters) and
+        the simulator stops scheduling it. Its accuracy freezes at the
+        last installed model."""
+        if cid in self._dead:
+            return
+        self._dead.add(cid)
+        led = self._faults.ledger
+        if kind == "dropped":
+            led["dropped_clients"] += 1
+        evict = getattr(self.strategy, "evict_clients", None)
+        if evict is not None:
+            res = evict([cid])
+            led["evicted_clients"] += len(res["evicted"])
+            led["reclaimed_clusters"] += len(res["reclaimed"])
+
+    def _server_kill_restore(self) -> None:
+        """Kill the live strategy mid-run and restore a fresh instance from
+        a checkpoint written through the crash-safe checkpointer. The old
+        object is discarded, so everything the continuation needs must come
+        back through ``state_dict``/``load_state`` — the acceptance bar is
+        that the run then finishes with the uninterrupted run's exact
+        upload/byte/staleness ledger."""
+        from repro.checkpoint.checkpointer import Checkpointer, latest_step, restore_pytree
+
+        inj = self._faults
+        plan = inj.plan.restart
+        tree, meta = self.strategy.state_dict()
+        ck = Checkpointer(plan.directory, keep=2)
+        try:
+            ck.save(inj.ledger["server_restarts"], tree, extra=meta)
+        finally:
+            ck.close()
+        fresh = plan.strategy_factory()
+        step = latest_step(plan.directory)
+        path = os.path.join(plan.directory, f"step_{step:010d}")
+        raw_meta = restore_pytree(path, like=None)[1]
+        tree_r, meta_r = restore_pytree(path, like=fresh.state_template(raw_meta))
+        fresh.load_state(tree_r, meta_r, client_id_type=plan.client_id_type)
+        self.strategy = fresh
+        if self._template is not None:
+            # rebind the fleet's feedback hook and replay the codec state
+            # into the restored strategy, exactly as a run start would
+            self._ensure_fleet(self._template)
+        inj.mark_restarted()
+
     # ----------------------------------------------------------- evaluation
     def _evaluate(self, t: float) -> float:
         accs = {}
+        # a permanently-dark client was evicted server-side (model_for would
+        # hand back init_params): it scores with its last installed model —
+        # frozen, which is exactly the degradation the fault bench measures
+        dead = self._dead
         if self._fleet is not None:
             # one masked launch for the whole fleet instead of N dispatches
-            params = [self.strategy.model_for(cid) for cid in self._fleet.ids]
+            params = [
+                self.clients[cid].model if cid in dead else self.strategy.model_for(cid)
+                for cid in self._fleet.ids
+            ]
             fleet_accs = self._fleet.evaluate_fleet(params)
             accs = {cid: float(a) for cid, a in zip(self._fleet.ids, fleet_accs)}
         else:
             for cid, c in self.clients.items():
-                params = self.strategy.model_for(cid)
+                params = c.model if cid in dead else self.strategy.model_for(cid)
                 accs[cid] = c.evaluate(params if params is not None else c.model)
         mean = float(np.mean(list(accs.values())))
         self.curve.append((t, mean))
@@ -298,6 +435,7 @@ class Simulator:
             up_series=self.net.series("up"),
             down_series=self.net.series("down"),
             up_raw_bytes=self.net.up_raw_bytes,
+            up_retry_bytes=self.net.up_retry_bytes,
         )
 
     # ------------------------------------------------------------ async run
@@ -308,7 +446,8 @@ class Simulator:
         strat = self.strategy
         init = strat.initial_models(sorted(self.clients))
         nbytes = model_bytes(next(iter(init.values())))
-        self._ensure_fleet(next(iter(init.values())))
+        self._template = next(iter(init.values()))
+        self._ensure_fleet(self._template)
         if self._codec is not None:
             # both sides saw this broadcast: it is the delta anchor
             self._codec.seed(init)
@@ -345,6 +484,9 @@ class Simulator:
         uploads = 0
         t = 0.0
         while events:
+            if self._faults is not None and self._faults.restart_due(uploads):
+                self._server_kill_restore()
+                strat = self.strategy
             t, _, kind, payload = heapq.heappop(events)
             if t > max_time:
                 t = max_time
@@ -356,6 +498,9 @@ class Simulator:
             if kind == "upload_start":  # local training finished; uplink begins
                 cid = payload
                 t_on = self._next_online(cid, t)
+                if t_on == math.inf:  # crash was fatal: device never returns
+                    self._retire_client(cid, "death")
+                    continue
                 if t_on > t:  # device offline: resume when it rejoins
                     push(t_on + self.clients[cid].compute_time(), "upload_start", cid)
                     continue
@@ -368,23 +513,36 @@ class Simulator:
                     new_params, _ = c.local_train()
                 c.model = new_params
                 up_params, nbytes, raw = self._encode_upload(cid, new_params)
-                dur = self.net.upload(nbytes, t, raw_nbytes=raw)
-                push(t + dur, "upload_done", (cid, up_params, c.base_version))
+                self._send_upload(push, t, cid, up_params, nbytes, raw, c.base_version)
             elif kind == "upload_done":
-                cid, params, base_version = payload
+                cid, params, base_version, useq = payload
+                if self._faults is not None:
+                    # version-fenced idempotent ingest: a duplicate delivery
+                    # (or anything older than what already landed) is absorbed
+                    if useq <= self._ingest_high.get(cid, -1):
+                        self._faults.ledger["dups_absorbed"] += 1
+                        continue
+                    self._ingest_high[cid] = useq
                 uploads += 1
                 c = self.clients[cid]
                 downlinks = strat.handle_upload(cid, params, base_version, c.data.n, t)
                 # sync-point strategies may buffer; flush anything returned
                 for dl in downlinks:
                     dur = self.net.download(model_bytes(dl.params), t)
-                    push(t + dur, "downlink", dl)
+                    self._push_downlink(push, t, dl, dur)
                 # client starts next local round immediately from current base
                 push(t + self.clients[cid].compute_time(), "upload_start", cid)
                 if max_uploads and uploads >= max_uploads:
                     break
             elif kind == "downlink":
                 dl = payload
+                if self._faults is not None:
+                    # reorder fence: a delivery overtaken by a newer send to
+                    # the same client must not roll its model back
+                    if dl._fseq < self._dl_high.get(dl.client_id, -1):
+                        self._faults.ledger["stale_downlinks_absorbed"] += 1
+                        continue
+                    self._dl_high[dl.client_id] = dl._fseq
                 c = self.clients[dl.client_id]
                 self._set_model(c, dl.params)
                 c.base_version = dl.version
@@ -396,7 +554,7 @@ class Simulator:
             elif kind == "tick":  # strategy-driven periodic hook (FedSEA sync points)
                 for dl in strat.on_tick(t):
                     dur = self.net.download(model_bytes(dl.params), t)
-                    push(t + dur, "downlink", dl)
+                    self._push_downlink(push, t, dl, dur)
                 if strat.tick_interval:
                     push(t + strat.tick_interval, "tick", None)
 
@@ -404,6 +562,8 @@ class Simulator:
         extra["uploads"] = uploads
         if self.churn:
             extra["churn_delays"] = self.churn_delays
+        if self._faults is not None:
+            extra["faults"] = self._faults.ledger_snapshot()
         return self._report(t, extra)
 
     # ------------------------------------------------- coalesced async run
@@ -458,10 +618,20 @@ class Simulator:
             pre-drawn values ride the bucket entries."""
             if kn == "upload_start":
                 t_on = self._next_online(pn, tn)
+                if t_on == math.inf:  # fatal crash: no resume, no RNG draw
+                    return math.inf
                 if t_on > tn:  # device offline: resume when it rejoins
                     return t_on + self.clients[pn].compute_time()
                 return None
             if kn == "upload_done":
+                if self._faults is not None:
+                    # duplicate fence at collection time: the per-event loop
+                    # fences at pop time, which is this same global order —
+                    # and an absorbed duplicate must not draw compute time
+                    if pn[3] <= self._ingest_high.get(pn[0], -1):
+                        self._faults.ledger["dups_absorbed"] += 1
+                        return "dup"
+                    self._ingest_high[pn[0]] = pn[3]
                 return self.clients[pn[0]].compute_time()
             return None
 
@@ -469,6 +639,9 @@ class Simulator:
         uploads = 0
         t = 0.0
         while events:
+            if self._faults is not None and self._faults.restart_due(uploads):
+                self._server_kill_restore()
+                strat = self.strategy
             t0, _, kind, payload = heapq.heappop(events)
             if t0 > max_time:
                 t = max_time
@@ -481,25 +654,27 @@ class Simulator:
             if kind == "tick":  # strategy-driven periodic hook (FedSEA sync points)
                 for dl in strat.on_tick(t):
                     dur = self.net.download(model_bytes(dl.params), t)
-                    push(t + dur, "downlink", dl)
+                    self._push_downlink(push, t, dl, dur)
                 if strat.tick_interval:
                     push(t + strat.tick_interval, "tick", None)
                 continue
 
             # collect the window and bucket by kind (time order within each)
             buckets: dict[str, list] = {"downlink": [], "upload_start": [], "upload_done": []}
-            buckets[kind].append((t0, payload, stash(t0, kind, payload)))
+            s0 = stash(t0, kind, payload)
+            buckets[kind].append((t0, payload, s0))
             limit = t0 + window
             cap = max_uploads - uploads if max_uploads else None
-            ud_seen = 1 if kind == "upload_done" else 0
+            ud_seen = 1 if kind == "upload_done" and s0 != "dup" else 0
             while events and (cap is None or ud_seen < cap):
                 tn, _, kn, pn = events[0]
                 if kn == "tick" or tn >= limit or tn >= next_eval or tn > max_time:
                     break
                 heapq.heappop(events)
-                buckets[kn].append((tn, pn, stash(tn, kn, pn)))
+                sn = stash(tn, kn, pn)
+                buckets[kn].append((tn, pn, sn))
                 t = tn
-                ud_seen += kn == "upload_done"
+                ud_seen += kn == "upload_done" and sn != "dup"
             for kn, group in buckets.items():
                 if group:
                     self.coalesced_groups.setdefault(kn, []).append(len(group))
@@ -518,6 +693,8 @@ class Simulator:
         extra["coalesce_window"] = window
         if self.churn:
             extra["churn_delays"] = self.churn_delays
+        if self._faults is not None:
+            extra["faults"] = self._faults.ledger_snapshot()
         return self._report(t, extra)
 
     def _coalesced_upload_starts(self, group, push) -> None:
@@ -541,6 +718,9 @@ class Simulator:
                 outs, _ = self._fleet.train_rows(ready)
             trained = dict(zip(ready, outs))
         for ti, cid, resume in group:
+            if resume == math.inf:  # fatal crash: the device never returns
+                self._retire_client(cid, "death")
+                continue
             if resume is not None:  # device was offline: resumes when back
                 push(resume, "upload_start", cid)
                 continue
@@ -556,22 +736,37 @@ class Simulator:
                 up_params, nbytes, raw = encoded[cid], self._codec.nbytes, model_bytes(new_params)
             else:
                 up_params, nbytes, raw = self._encode_upload(cid, new_params)
-            dur = self.net.upload(nbytes, ti, raw_nbytes=raw)
-            push(ti + dur, "upload_done", (cid, up_params, c.base_version))
+            self._send_upload(push, ti, cid, up_params, nbytes, raw, c.base_version)
 
     def _coalesced_upload_dones(self, group, push) -> int:
         """One batched server ingest for a window of arrivals; downlinks
         and the next local rounds are billed/scheduled per event, in order."""
         strat = self.strategy
+        # duplicate deliveries were fenced out at collection time (stash
+        # marked them "dup"): they never reach the server, never schedule
+        # a next round, and never drew a compute time
+        live = [e for e in group if e[2] != "dup"]
         batch = [
             (cid, params, bv, self.clients[cid].data.n, ti)
-            for ti, (cid, params, bv), _ in group
+            for ti, (cid, params, bv, _useq), _ in live
         ]
+        if not batch:
+            return 0
         if len(batch) > 1 and hasattr(strat, "handle_uploads"):
             downlinks_per = strat.handle_uploads(batch)
         else:
             downlinks_per = [strat.handle_upload(*b) for b in batch]
-        for (ti, (cid, _params, _bv), next_compute), dls in zip(group, downlinks_per):
+        for (ti, (cid, _params, _bv, _useq), next_compute), dls in zip(live, downlinks_per):
+            if self._faults is not None:
+                # fault mode bills and ships each downlink individually so
+                # sequence numbers and injected reorder delays land exactly
+                # as the per-event loop's (byte totals and event counts are
+                # identical to the bulk billing either way)
+                for dl in dls:
+                    dur = self.net.download(model_bytes(dl.params), ti)
+                    self._push_downlink(push, ti, dl, dur)
+                push(ti + next_compute, "upload_start", cid)
+                continue
             # every downlink of one ingest carries a whole model (unicast
             # and echo broadcast alike), so the fan-out shares one wire
             # size and one transfer duration: bill it in one call and ship
@@ -607,6 +802,19 @@ class Simulator:
         flat: list = []
         for _ti, payload, _ in group:
             flat.extend(payload) if isinstance(payload, list) else flat.append(payload)
+        if self._faults is not None:
+            # reorder fence in delivery order, BEFORE the staged batch write:
+            # a stale delivery must not reach the model rows at all
+            keep: list = []
+            for dl in flat:
+                if dl._fseq < self._dl_high.get(dl.client_id, -1):
+                    self._faults.ledger["stale_downlinks_absorbed"] += 1
+                    continue
+                self._dl_high[dl.client_id] = dl._fseq
+                keep.append(dl)
+            flat = keep
+            if not flat:
+                return
         batched_rows = self._fleet is not None and len(flat) > 1
         if batched_rows:
             self._fleet.set_models(
@@ -635,7 +843,8 @@ class Simulator:
         strat = self.strategy
         init = strat.initial_models(sorted(self.clients))
         nbytes = model_bytes(next(iter(init.values())))
-        self._ensure_fleet(next(iter(init.values())))
+        self._template = next(iter(init.values()))
+        self._ensure_fleet(self._template)
         t = 0.0
         if self._codec is not None:
             self._codec.seed(init)

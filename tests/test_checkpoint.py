@@ -122,3 +122,65 @@ def test_server_state_checkpoint_roundtrip(tmp_path):
     # the restored server keeps serving uploads
     out = srv2.handle_upload(0, {"w": jnp.full(6, 0.1)}, 1, 16, t=9.0)
     assert out
+
+
+def test_kill_during_swap_rolls_back_old_checkpoint(tmp_path, monkeypatch):
+    """A crash at the worst possible instant — after the old checkpoint was
+    renamed aside but while the staged dir fails to move into place — must
+    leave the previous checkpoint restorable under its original name."""
+    d = str(tmp_path / "ckpt")
+    save_pytree(d, tree(0))
+
+    real_replace = os.replace
+
+    def exploding_replace(src, dst):
+        if os.path.basename(src).startswith("tmp.") and not os.path.basename(
+            src
+        ).startswith("tmp.old."):
+            raise OSError("simulated kill at rename")
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(os, "replace", exploding_replace)
+    with pytest.raises(OSError, match="simulated kill"):
+        save_pytree(d, tree(1))
+    monkeypatch.undo()
+
+    got, _ = restore_pytree(d, like=tree())
+    assert_tree_equal(tree(0), got)  # old checkpoint rolled back intact
+    assert not [n for n in os.listdir(tmp_path) if n.startswith("tmp.")]
+
+
+def test_kill_during_staging_leaves_no_visible_step(tmp_path, monkeypatch):
+    """A crash while the payload is still being staged never creates the
+    target directory at all — a fresh save sees no checkpoint, not a
+    half-written one."""
+    d = str(tmp_path / "ckpt")
+
+    def exploding_savez(f, **kw):
+        f.write(b"partial")
+        raise OSError("simulated kill mid-write")
+
+    monkeypatch.setattr(np, "savez", exploding_savez)
+    with pytest.raises(OSError, match="mid-write"):
+        save_pytree(d, tree(0))
+    monkeypatch.undo()
+    assert not os.path.exists(d)
+    assert not [n for n in os.listdir(tmp_path) if n.startswith("tmp.")]
+    save_pytree(d, tree(1))  # recovery: a clean save just works
+    got, _ = restore_pytree(d, like=tree())
+    assert_tree_equal(tree(1), got)
+
+
+def test_latest_step_ignores_manifestless_dirs(tmp_path):
+    """``latest_step`` only accepts step dirs whose manifest made it to
+    disk — a dir with leaves but no manifest (the pre-atomic failure
+    shape) is invisible to restart."""
+    ck = Checkpointer(str(tmp_path), keep=5)
+    ck.save(1, tree(0))
+    ck.close()
+    fake = tmp_path / "step_0000000002"
+    fake.mkdir()
+    (fake / "leaves.npz").write_bytes(b"truncated garbage")
+    assert latest_step(str(tmp_path)) == 1
+    got, _ = restore_pytree(str(tmp_path / "step_0000000001"), like=tree())
+    assert_tree_equal(tree(0), got)

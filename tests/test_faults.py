@@ -1,0 +1,405 @@
+"""Deterministic fault injection (REPRO_FAULTS): schedule determinism
+across backends and async paths, exact retry billing, duplicate and
+reorder fences, death-driven plane-row reclamation, the drop-straggler
+policy, and mid-run server kill+restore.
+
+The determinism contract under test: every fault decision is keyed by
+(seed, kind, client, per-(kind, client) counter), never by a shared
+stream — so the loop/fleet backends and the per-event/coalesced loops,
+which consult the injector at different wall points, draw the identical
+schedule. With faults disabled the simulator never constructs an
+injector and clean trajectories stay bitwise-identical (the rest of the
+test suite, which runs faults-off, is itself that regression)."""
+import math
+import os
+
+import numpy as np
+import pytest
+
+from repro.fl.experiment import build_clients, build_strategy
+from repro.fl.faults import (
+    FaultConfig,
+    FaultInjector,
+    FaultPlan,
+    ServerRestartPlan,
+    default_fault_config,
+    faults_enabled,
+    resolve_faults,
+)
+from repro.fl.network import NetworkModel
+from repro.fl.simulator import Simulator, model_bytes
+
+
+def _run(*, backend="fleet", window=0.0, seed=3, fault_cfg=None, restart=None,
+         max_time=600.0, num_clients=6, churn=None, uplink=None, strategy="echopfl"):
+    task, clients, init = build_clients("har", num_clients, seed=seed, samples_per_client=48)
+    strat = build_strategy(strategy, init, clients, seed=seed)
+    faults = None
+    if fault_cfg is not None or restart is not None:
+        faults = FaultPlan(config=fault_cfg or FaultConfig(), restart=restart)
+    sim = Simulator(
+        clients, strat, network=NetworkModel(), seed=seed, client_backend=backend,
+        coalesce_window=window, churn=churn, uplink=uplink, faults=faults,
+    )
+    return sim.run_async(max_time=max_time), sim, init
+
+
+def _assert_bitwise(a, b):
+    assert a.curve == b.curve
+    assert a.per_client_acc == b.per_client_acc
+    assert (a.up_bytes, a.down_bytes, a.up_events, a.down_events) == (
+        b.up_bytes, b.down_bytes, b.up_events, b.down_events
+    )
+    assert a.up_retry_bytes == b.up_retry_bytes
+    assert a.duration == b.duration
+    assert a.extra.get("faults") == b.extra.get("faults")
+    assert a.extra.get("staleness") == b.extra.get("staleness")
+    assert a.extra.get("uploads") == b.extra.get("uploads")
+
+
+_CHAOS = dict(seed=7, crash_rate=0.1, loss_rate=0.25, dup_rate=0.15, reorder_rate=0.15)
+
+
+# ------------------------------------------------------------- determinism
+class TestScheduleDeterminism:
+    def test_injector_draws_are_order_independent(self):
+        """The same (kind, client) query sequence yields the same schedule
+        regardless of how queries to different clients interleave."""
+        a = FaultInjector(FaultPlan(config=FaultConfig(**_CHAOS)))
+        b = FaultInjector(FaultPlan(config=FaultConfig(**_CHAOS)))
+        seq_a = [a.crash(0), a.crash(0), a.crash(1), a.upload_plan(0), a.upload_plan(1)]
+        # interleaved differently — per-(kind, client) counters don't care
+        b_c1 = b.crash(1)
+        b_u1 = b.upload_plan(1)
+        b_c0a, b_c0b = b.crash(0), b.crash(0)
+        b_u0 = b.upload_plan(0)
+        assert seq_a == [b_c0a, b_c0b, b_c1, b_u0, b_u1]
+
+    def test_chaos_degenerate_window_is_bitwise_identical(self):
+        """One event per window: the coalesced loop replays the per-event
+        loop exactly even under active fault injection — the chaos
+        extension of the existing parity suite."""
+        cfg = FaultConfig(**_CHAOS)
+        r0, _, _ = _run(fault_cfg=cfg)
+        r1, _, _ = _run(fault_cfg=cfg, window=1e-9)
+        _assert_bitwise(r0, r1)
+        assert r0.extra["faults"]["crashes"] > 0
+        assert r0.extra["faults"]["retried_uploads"] > 0
+
+    def test_chaos_schedule_identical_loop_vs_fleet(self):
+        cfg = FaultConfig(**_CHAOS)
+        rf, _, _ = _run(fault_cfg=cfg, backend="fleet")
+        rl, _, _ = _run(fault_cfg=cfg, backend="loop")
+        assert rf.extra["faults"] == rl.extra["faults"]
+        assert (rf.up_bytes, rf.up_events, rf.up_retry_bytes) == (
+            rl.up_bytes, rl.up_events, rl.up_retry_bytes
+        )
+        assert rf.extra["staleness"] == rl.extra["staleness"]
+        for cid in rf.per_client_acc:
+            np.testing.assert_allclose(
+                rf.per_client_acc[cid], rl.per_client_acc[cid], atol=0.05
+            )
+
+    def test_chaos_real_window_schedule_parity(self):
+        """At a real coalescing window the crash/retry schedule (driven by
+        per-client round counters) still matches the per-event loop; only
+        trajectory-dependent consults (dups/reorders per delivery) may
+        differ where the trajectories themselves diverge."""
+        cfg = FaultConfig(seed=11, crash_rate=0.1, loss_rate=0.25, dup_rate=0.0, reorder_rate=0.0)
+        r0, _, _ = _run(fault_cfg=cfg)
+        r1, _, _ = _run(fault_cfg=cfg, window=45.0)
+        f0, f1 = r0.extra["faults"], r1.extra["faults"]
+        assert f0["crashes"] == f1["crashes"]
+        assert f0["crash_downtime_s"] == f1["crash_downtime_s"]
+        assert r0.extra["uploads"] == r1.extra["uploads"]
+        # accuracy time-shifts through the superstep transient (see
+        # docs/knobs.md "Coalescing and accuracy snapshots"); with a
+        # 48-sample/client task one eval sample is ~0.09, so pin the
+        # population mean tightly and individuals to ~1.5 samples
+        a0 = np.array([r0.per_client_acc[c] for c in r0.per_client_acc])
+        a1 = np.array([r1.per_client_acc[c] for c in r0.per_client_acc])
+        assert abs(a0.mean() - a1.mean()) <= 0.05
+        np.testing.assert_allclose(a0, a1, atol=0.15)
+
+
+# ------------------------------------------------------------ retry billing
+class TestRetryBilling:
+    def test_every_retry_bills_real_bytes(self):
+        cfg = FaultConfig(seed=5, crash_rate=0.0, loss_rate=0.35, dup_rate=0.0, reorder_rate=0.0)
+        rep, sim, init = _run(fault_cfg=cfg)
+        f = rep.extra["faults"]
+        nbytes = model_bytes(init)
+        assert f["upload_failures"] > 0
+        # each upload with k >= 1 failures sends k extra full payloads
+        assert rep.up_retry_bytes == f["upload_failures"] * nbytes
+        assert rep.up_bytes == rep.up_events * nbytes
+        assert f["retry_delay_s"] > 0.0
+        assert "up_retry_MB" in rep.summary()
+
+    def test_retry_delay_feeds_staleness(self):
+        """Backoff delay holds an upload's arrival back, so other members'
+        aggregations land first and version-based staleness grows: a lossy
+        run must record at least as much total staleness pressure."""
+        base = FaultConfig(seed=5, crash_rate=0.0, loss_rate=0.0, dup_rate=0.0, reorder_rate=0.0)
+        lossy = FaultConfig(
+            seed=5, crash_rate=0.0, loss_rate=0.45, dup_rate=0.0, reorder_rate=0.0,
+            backoff_base=30.0, backoff_cap=240.0,
+        )
+        r0, _, _ = _run(fault_cfg=base, max_time=900.0)
+        r1, _, _ = _run(fault_cfg=lossy, max_time=900.0)
+        assert r1.extra["faults"]["retry_delay_s"] > 0
+        # fewer rounds fit in the horizon when every third upload re-sends
+        assert r1.extra["uploads"] < r0.extra["uploads"]
+
+
+# -------------------------------------------------------- duplicates/reorder
+class TestDeliveryFences:
+    def test_duplicates_absorbed_idempotently(self):
+        """Duplicate deliveries bill real bytes but are fenced out of
+        ingest: the server-side trajectory (accuracy curve, uploads,
+        staleness, broadcast behavior) is identical to a clean run."""
+        clean = FaultConfig(seed=9, crash_rate=0.0, loss_rate=0.0, dup_rate=0.0, reorder_rate=0.0)
+        dups = FaultConfig(seed=9, crash_rate=0.0, loss_rate=0.0, dup_rate=0.5, reorder_rate=0.0)
+        r0, _, _ = _run(fault_cfg=clean)
+        r1, _, _ = _run(fault_cfg=dups)
+        f = r1.extra["faults"]
+        assert f["dups_injected"] > 0
+        assert f["dups_absorbed"] <= f["dups_injected"]
+        assert r1.curve == r0.curve
+        assert r1.per_client_acc == r0.per_client_acc
+        assert r1.extra["uploads"] == r0.extra["uploads"]
+        assert r1.extra["staleness"] == r0.extra["staleness"]
+        assert r1.extra["broadcasts"] == r0.extra["broadcasts"]
+        # ... but the retransmissions crossed the wire for real
+        assert r1.up_events == r0.up_events + f["dups_injected"]
+        assert r1.up_bytes > r0.up_bytes
+        assert r1.up_retry_bytes == (r1.up_bytes - r0.up_bytes)
+
+    def test_reordered_downlinks_never_roll_back(self):
+        cfg = FaultConfig(seed=4, crash_rate=0.0, loss_rate=0.0, dup_rate=0.0, reorder_rate=0.9)
+        rep, sim, _ = _run(fault_cfg=cfg)
+        f = rep.extra["faults"]
+        assert f["reorders_injected"] > 0
+        assert f["stale_downlinks_absorbed"] > 0
+        # fences are per-recipient monotone: installed seq never decreased
+        assert all(
+            sim._dl_high[cid] <= sim._dl_seq[cid] for cid in sim._dl_high
+        )
+        assert rep.final_acc > 0.3  # protocol still converges under heavy reorder
+
+
+# ----------------------------------------------------- churn, crashes, death
+class TestChurnAndDeath:
+    @pytest.mark.parametrize("window", [0.0, 30.0])
+    def test_dropout_rejoin_regression(self, window):
+        """The `_next_online` claim (async protocol absorbs dropout AND
+        rejoin): no upload from a churned client arrives inside its
+        offline window, and it resumes uploading after returning."""
+        churn = {1: [(60.0, 300.0)]}
+        task, clients, init = build_clients("har", 6, seed=3, samples_per_client=48)
+        strat = build_strategy("echopfl", init, clients, seed=3)
+        seen: list[tuple] = []
+        orig = strat.handle_upload
+
+        def spy(cid, params, bv, n, t):
+            seen.append((cid, t))
+            return orig(cid, params, bv, n, t)
+
+        strat.handle_upload = spy
+        sim = Simulator(clients, strat, seed=3, churn=churn, coalesce_window=window)
+        rep = sim.run_async(max_time=900.0)
+        assert rep.extra["churn_delays"] >= 1
+        in_window = [t for cid, t in seen if cid == 1 and 60.0 <= t < 300.0]
+        after = [t for cid, t in seen if cid == 1 and t >= 300.0]
+        assert not in_window, "churned client uploaded while offline"
+        assert after, "churned client never rejoined"
+
+    def test_crashes_rejoin_through_next_online(self):
+        cfg = FaultConfig(seed=2, crash_rate=0.3, death_rate=0.0,
+                          loss_rate=0.0, dup_rate=0.0, reorder_rate=0.0)
+        rep, sim, _ = _run(fault_cfg=cfg, max_time=900.0)
+        f = rep.extra["faults"]
+        assert f["crashes"] > 0 and f["deaths"] == 0
+        assert f["crash_downtime_s"] > 0
+        assert not sim._dead  # everyone came back
+        assert rep.extra["uploads"] > 0
+
+    def test_death_reclaims_plane_rows(self):
+        """When a cluster's members all go permanently dark the server
+        reclaims the cluster: no leaked rows in the plane free-list."""
+        cfg = FaultConfig(seed=3, crash_rate=0.25, death_rate=0.8,
+                          loss_rate=0.0, dup_rate=0.0, reorder_rate=0.0)
+        rep, sim, _ = _run(fault_cfg=cfg, num_clients=8, max_time=1500.0)
+        f = rep.extra["faults"]
+        assert f["deaths"] > 0
+        assert f["evicted_clients"] == f["deaths"]
+        strat = sim.strategy
+        plane = strat.clustering.plane
+        if plane is not None:  # REPRO_PLANE=pytree leg has no rows to leak
+            expected = 2 * len(strat.clustering.clusters) + len(strat._upload_rows)
+            assert plane.num_allocated == expected
+        assert all(cid not in strat._upload_rows for cid in sim._dead)
+        assert all(cid not in strat.clustering.assignment for cid in sim._dead)
+        # dead clients keep their last model for evaluation
+        assert set(rep.per_client_acc) == set(sim.clients)
+
+    def test_drop_policy_retires_stragglers(self):
+        """REPRO_FAULT_POLICY=drop: hitting the retry cap abandons the
+        upload and the client — the baseline EchoPFL's retry discipline
+        is benchmarked against."""
+        cfg = FaultConfig(seed=6, crash_rate=0.0, loss_rate=0.6, max_retries=2,
+                          dup_rate=0.0, reorder_rate=0.0, policy="drop")
+        rep, sim, _ = _run(fault_cfg=cfg, max_time=900.0)
+        f = rep.extra["faults"]
+        assert f["dropped_uploads"] > 0
+        assert f["dropped_clients"] == len(sim._dead) > 0
+        assert f["policy"] == "drop"
+
+
+# ----------------------------------------------------------- server restart
+class TestServerKillRestore:
+    def test_kill_restore_matches_uninterrupted(self, tmp_path):
+        """Mid-run kill+restore through the checkpointer (coalesced path,
+        active top-k codec, faults on) finishes with the uninterrupted
+        run's exact ledger: bytes, events, staleness, curves, accuracies."""
+        cfg = FaultConfig(seed=5, crash_rate=0.05, loss_rate=0.2, dup_rate=0.1, reorder_rate=0.1)
+
+        def run(restart):
+            task, clients, init = build_clients("har", 8, seed=0, samples_per_client=48)
+            strat = build_strategy("echopfl", init, clients, seed=0)
+            plan = None
+            if restart:
+                factory = lambda: build_strategy("echopfl", init, clients, seed=0)
+                plan = ServerRestartPlan(
+                    at_uploads=30, directory=str(tmp_path / "ck"), strategy_factory=factory
+                )
+            sim = Simulator(
+                clients, strat, seed=0, coalesce_window=30.0, uplink="topk",
+                faults=FaultPlan(config=cfg, restart=plan),
+            )
+            rep = sim.run_async(max_time=900.0)
+            return rep, sim
+
+        base, _ = run(False)
+        killed, sim = run(True)
+        assert killed.extra["faults"]["server_restarts"] == 1
+        assert sim.strategy.uplink_codec is sim._codec  # codec re-attached
+        fb = {k: v for k, v in base.extra["faults"].items() if k != "server_restarts"}
+        fk = {k: v for k, v in killed.extra["faults"].items() if k != "server_restarts"}
+        assert fb == fk
+        assert killed.curve == base.curve
+        assert killed.per_client_acc == base.per_client_acc
+        assert (killed.up_bytes, killed.down_bytes, killed.up_events, killed.down_events) == (
+            base.up_bytes, base.down_bytes, base.up_events, base.down_events
+        )
+        assert killed.extra["staleness"] == base.extra["staleness"]
+        assert killed.extra["uploads"] == base.extra["uploads"]
+        assert killed.extra["broadcasts"] == base.extra["broadcasts"]
+
+
+# -------------------------------------------------------------- evict unit
+class TestEvictClients:
+    def test_evict_frees_rows_and_reclaims_empty_clusters(self):
+        from repro.core.server import EchoPFLServer
+        from repro.fl.experiment import build_clients
+
+        import jax
+
+        task, clients, init = build_clients("har", 4, seed=0, samples_per_client=48)
+        srv = EchoPFLServer(init, num_initial_clusters=2, refine_every=1000)
+        for i, c in enumerate(clients):
+            # two well-separated upload groups (clients carry no trained
+            # model outside a simulation run)
+            up = jax.tree_util.tree_map(lambda x, i=i: x + (i % 2) * 0.5 + i * 0.01, init)
+            srv.handle_upload(c.client_id, up, 0, 48, float(i))
+        plane = srv.clustering.plane
+        if plane is None:
+            pytest.skip("pytree backend has no plane rows")
+        before = plane.num_allocated
+        victims = next(
+            cid for cid in sorted(srv.clustering.clusters)
+            if srv.clustering.clusters[cid].members
+        )
+        members = sorted(srv.clustering.clusters[victims].members)
+        res = srv.evict_clients(members)
+        assert res["evicted"] == members
+        assert victims in res["reclaimed"]
+        assert victims not in srv.clustering.clusters
+        assert victims not in srv.predictors
+        # 2 cluster rows + one upload row per member returned to the free-list
+        assert plane.num_allocated == before - 2 - len(members)
+        # idempotent: evicting again is a no-op
+        res2 = srv.evict_clients(members)
+        assert res2["evicted"] == [] and res2["reclaimed"] == []
+
+    def test_evict_unknown_client_is_noop(self):
+        from repro.core.server import EchoPFLServer
+        from repro.fl.experiment import build_clients
+
+        task, clients, init = build_clients("har", 2, seed=0, samples_per_client=48)
+        srv = EchoPFLServer(init, num_initial_clusters=2)
+        res = srv.evict_clients(["nope"])
+        assert res == {"evicted": [], "reclaimed": []}
+
+
+# ------------------------------------------------------------ knob parsing
+class TestKnobs:
+    def test_resolve_off_and_env(self, monkeypatch):
+        monkeypatch.delenv("REPRO_FAULTS", raising=False)
+        assert resolve_faults(None) is None
+        assert resolve_faults("off") is None
+        monkeypatch.setenv("REPRO_FAULTS", "1")
+        assert faults_enabled()
+        plan = resolve_faults(None)
+        assert isinstance(plan, FaultPlan)
+        assert resolve_faults("off") is None  # explicit off beats the env
+        monkeypatch.setenv("REPRO_FAULT_SEED", "42")
+        monkeypatch.setenv("REPRO_FAULT_LOSS", "0.33")
+        monkeypatch.setenv("REPRO_FAULT_POLICY", "drop")
+        cfg = default_fault_config()
+        assert (cfg.seed, cfg.loss_rate, cfg.policy) == (42, 0.33, "drop")
+
+    def test_invalid_specs_raise(self):
+        with pytest.raises(ValueError):
+            resolve_faults("sometimes")
+        with pytest.raises(ValueError):
+            FaultConfig(policy="maybe")
+        with pytest.raises(ValueError):
+            FaultConfig(max_retries=-1)
+
+    def test_faults_off_runs_have_no_fault_machinery(self, monkeypatch):
+        monkeypatch.delenv("REPRO_FAULTS", raising=False)
+        task, clients, init = build_clients("har", 2, seed=0, samples_per_client=48)
+        strat = build_strategy("echopfl", init, clients, seed=0)
+        sim = Simulator(clients, strat, seed=0)
+        assert sim._faults is None
+
+
+# ----------------------------------------------------- network validation
+class TestNetworkValidation:
+    def test_negative_bytes_rejected(self):
+        net = NetworkModel()
+        with pytest.raises(ValueError):
+            net.upload(-1, 0.0)
+        with pytest.raises(ValueError):
+            net.upload(10, 0.0, raw_nbytes=-5)
+        with pytest.raises(ValueError):
+            net.download(-1, 0.0)
+        with pytest.raises(ValueError):
+            net.download_bulk(-1, 3, 0.0)
+
+    def test_bulk_count_must_be_positive(self):
+        net = NetworkModel()
+        for count in (0, -2):
+            with pytest.raises(ValueError):
+                net.download_bulk(100, count, 0.0)
+        assert net.down_bytes == 0 and net.down_events == 0  # nothing billed
+
+    def test_retry_flag_accumulates(self):
+        net = NetworkModel()
+        net.upload(100, 0.0)
+        net.upload(100, 1.0, retry=True)
+        net.upload(50, 2.0, retry=True)
+        assert net.up_retry_bytes == 150
+        assert net.up_bytes == 250
+        assert net.up_events == 3
