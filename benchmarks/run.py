@@ -18,6 +18,7 @@ from benchmarks import (
     bench_clustering_quality,
     bench_comm_cost,
     bench_comm_peaks,
+    bench_defense,
     bench_distance_metrics,
     bench_drift_adaptation,
     bench_faults,
@@ -45,6 +46,7 @@ BENCHES = {
     "async_coalesce": bench_async_coalesce.run,     # event-coalesced async pipeline
     "lm_fleet": bench_lm_fleet.run,                 # REPRO_TASK=lm throughput + model axis
     "faults": bench_faults.run,                     # chaos sweep: retry vs drop-straggler
+    "defense": bench_defense.run,                   # poison sweep: guard off vs on
 }
 
 

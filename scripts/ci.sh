@@ -106,6 +106,30 @@ echo "=== faults-off bitwise identity (clean protocol untouched) ==="
 python -m pytest -q -p no:cacheprovider \
     tests/test_async_coalesce.py tests/test_checkpoint.py
 
+echo "=== poison chaos + ingest guard: REPRO_GUARD=on under both kernel backends ==="
+# Value-level poison (NaN/scale/sign on the post-codec payload) with the
+# guard engaged, as the ambient default so the knob-parsing path is the
+# one under test: accept/reject against the MAD bounds, quarantine and
+# eviction escalation, snapshot-ring center rollback, and the
+# per-event/coalesced + loop/fleet schedule agreement. Explicit configs
+# inside the suite pin the seeds and the negative control.
+REPRO_FAULTS=1 REPRO_FAULT_SEED=7 \
+REPRO_FAULT_POISON_NAN=0.08 REPRO_FAULT_POISON_SCALE=0.06 REPRO_FAULT_POISON_SIGN=0.06 \
+REPRO_GUARD=on \
+REPRO_KERNELS=ref python -m pytest -q -p no:cacheprovider tests/test_guard.py
+REPRO_FAULTS=1 REPRO_FAULT_SEED=7 \
+REPRO_FAULT_POISON_NAN=0.08 REPRO_FAULT_POISON_SCALE=0.06 REPRO_FAULT_POISON_SIGN=0.06 \
+REPRO_GUARD=on \
+REPRO_KERNELS=pallas python -m pytest -q -p no:cacheprovider tests/test_guard.py
+
+echo "=== guard-off bitwise identity (unguarded ingest untouched) ==="
+# With REPRO_GUARD unset no guard is constructed, ingest_chain compiles
+# without stats, and no snapshot rings are allocated; the guard suite's
+# clean-identity tests pin that a guard-on clean run matches this leg's
+# trajectories bitwise, and the rest of the matrix (all guard-off) is
+# itself the regression that the hooks are inert.
+python -m pytest -q -p no:cacheprovider tests/test_guard.py
+
 echo "=== REPRO_TASK=lm smoke (LoRA/head deltas over the frozen tiny_lm base) ==="
 # The LM personalization workload end-to-end on both simulator loops:
 # run_sync (fedavg) + coalesced run_async (echopfl), loop/fleet backend

@@ -1,13 +1,38 @@
 """FedAvg [McMahan et al. 2017]: synchronous, single global model, waits
-for every client each round — the paper's accuracy/communication baseline."""
+for every client each round — the paper's accuracy/communication baseline.
+
+The seed implementation averaged each round's cohort with a per-leaf,
+per-client Python loop (``tree_weighted_mean``) — O(leaves × clients)
+host-side dispatches at every barrier, so comm-cost head-to-heads against
+the fleet-batched EchoPFL path were partly measuring Python overhead.
+This port keeps the global model as ONE flat f32 vector (the same layout
+the parameter plane and the client fleet use) and reduces the whole
+cohort as a single fused launch over the stacked ``(B, dim)`` upload
+matrix. Sample-count weights normalize in exact host float64 and cast
+once to f32, so the reduction consumes identical operands regardless of
+client backend — the loop-vs-fleet parity test pins the trajectories
+bitwise-equal.
+"""
 from __future__ import annotations
 
 from typing import Any
 
-from repro.common.pytrees import tree_weighted_mean
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytrees import flatten_spec
 from repro.core.server import Downlink
 
 PyTree = Any
+
+
+@jax.jit
+def _weighted_mean(ws, us):
+    # one fused reduction over the stacked cohort: (B,) @ (B, dim) -> (dim,).
+    # ws is pre-normalized (sums to 1 in float64, cast once to f32), so no
+    # divide lives on device and the launch is a single contraction
+    return jnp.tensordot(ws, us, axes=1)
 
 
 class FedAvg:
@@ -15,9 +40,21 @@ class FedAvg:
     is_synchronous = True
 
     def __init__(self, init_params: PyTree, client_sizes: dict[Any, int]):
-        self.global_model = init_params
+        self.spec = flatten_spec(init_params)
+        self._vec = self.spec.flatten(init_params)
         self.client_sizes = client_sizes
         self.version = 0
+        self._view: tuple[int, PyTree] = (0, init_params)  # (version, pytree) cache
+
+    @property
+    def global_model(self) -> PyTree:
+        """Current global model as a pytree — version-cached, so repeat
+        reads between rounds (every client's ``model_for`` at an eval tick)
+        share one unflatten AND one object identity (what the fleet's
+        eval-row cache and the simulator's broadcast coalescing key on)."""
+        if self._view[0] != self.version:
+            self._view = (self.version, self.spec.unflatten(self._vec))
+        return self._view[1]
 
     def initial_models(self, client_ids):
         return {cid: self.global_model for cid in client_ids}
@@ -32,9 +69,10 @@ class FedAvg:
         return list(members)  # waits for all devices
 
     def finish_round(self, group_id, uploads: dict, t: float):
-        trees = list(uploads.values())
-        weights = [self.client_sizes[cid] for cid in uploads]
-        self.global_model = tree_weighted_mean(trees, weights)
+        us = jnp.stack([self.spec.flatten(p) for p in uploads.values()])
+        w = np.asarray([self.client_sizes[cid] for cid in uploads], dtype=np.float64)
+        ws = jnp.asarray((w / w.sum()).astype(np.float32))
+        self._vec = _weighted_mean(ws, us)
         self.version += 1
         return [Downlink(cid, self.global_model, self.version, 0, "broadcast") for cid in uploads]
 

@@ -75,6 +75,12 @@ class Cluster:
         self._bcast_cache: PyTree | None = None
         self._center_tree: PyTree | None = center if plane is None else None
         self._bcast_tree: PyTree | None = None
+        # last-known-good snapshot ring (ingest-guard rollback): plane rows
+        # or pytrees, written at broadcast time, consumed by rollback()
+        self._snap_rows: list[int] | None = None
+        self._snap_trees: list[PyTree | None] | None = None
+        self._snap_cursor = 0
+        self._snap_count = 0
 
     @property
     def size(self) -> int:
@@ -129,18 +135,78 @@ class Cluster:
 
     def snapshot_broadcast(self) -> None:
         """Record the current center as the broadcast anchor (row copy in
-        plane mode — the center pytree is never materialized for this)."""
+        plane mode — the center pytree is never materialized for this).
+        With a snapshot ring attached the broadcast moment also files the
+        center as a last-known-good rollback point: a center only reaches
+        here after passing the guard's post-blend check, so the ring holds
+        exactly the states the defense layer is willing to return to."""
         if self._plane is None:
             self._bcast_tree = self._center_tree
         else:
             self._plane.copy_row(self._row, self._bcast_row)
             self._bcast_cache = None
+        self._push_snapshot()
+
+    # ------------------------------------------------- guard snapshot ring
+    def ensure_snapshot_ring(self, depth: int) -> None:
+        """Allocate the last-known-good ring (idempotent; guard attach may
+        retrofit rings onto clusters restored from a checkpoint)."""
+        if depth <= 0 or self._snap_rows is not None or self._snap_trees is not None:
+            return
+        if self._plane is not None:
+            self._snap_rows = [self._plane.alloc() for _ in range(depth)]
+        else:
+            self._snap_trees = [None] * depth
+        self._snap_cursor = 0
+        self._snap_count = 0
+
+    def _push_snapshot(self) -> None:
+        ring = self._snap_rows if self._plane is not None else self._snap_trees
+        if ring is None:
+            return
+        if self._plane is not None:
+            self._plane.copy_row(self._row, self._snap_rows[self._snap_cursor])
+        else:
+            self._snap_trees[self._snap_cursor] = self._center_tree
+        self._snap_cursor = (self._snap_cursor + 1) % len(ring)
+        self._snap_count = min(self._snap_count + 1, len(ring))
+
+    def rollback(self) -> bool:
+        """Restore the center from the newest *finite* ring entry (newest
+        to oldest, then the broadcast anchor as the final fallback — every
+        cluster has one from birth, so late detection can always recover
+        unless every recorded state is itself corrupt). Returns whether a
+        restore happened; the caller bumps the version, records the event
+        on the CI branch, and re-broadcasts on demand."""
+        candidates: list[Any] = []
+        ring = self._snap_rows if self._plane is not None else self._snap_trees
+        if ring is not None and self._snap_count:
+            n = len(ring)
+            for back in range(1, self._snap_count + 1):
+                candidates.append(ring[(self._snap_cursor - back) % n])
+        candidates.append(self._bcast_row if self._plane is not None else self._bcast_tree)
+        for cand in candidates:
+            if self._plane is not None:
+                if not bool(np.isfinite(np.asarray(self._plane.row(cand))).all()):
+                    continue  # this snapshot is itself corrupt: go older
+                self._plane.copy_row(cand, self._row)
+                self._center_cache = None
+            else:
+                if cand is None or not bool(
+                    np.isfinite(np.asarray(tree_flat_vector(cand))).all()
+                ):
+                    continue
+                self._center_tree = cand
+            return True
+        return False
 
     def release(self) -> None:
         """Return this cluster's plane rows to the free list."""
         if self._plane is not None:
             self._plane.free(self._row)
             self._plane.free(self._bcast_row)
+            for r in self._snap_rows or ():
+                self._plane.free(r)
 
 
 class DynamicClustering:
@@ -176,6 +242,10 @@ class DynamicClustering:
         # placement adapts. 0 forces sharded compute (parity tests).
         self.mesh_min_rows = int(os.environ.get("REPRO_PLANE_MESH_MIN_ROWS", "128"))
         self.plane: ParameterPlane | None = None  # built from the first center's structure
+        # >0 when an ingest guard is attached: every cluster carries that
+        # many last-known-good snapshot rows for center rollback. 0 (the
+        # default) allocates nothing — guard-off pays nothing.
+        self.snapshot_ring = 0
         self.clusters: dict[int, Cluster] = {}
         self._next_id = 0
         self.assignment: dict[Any, int] = {}
@@ -225,6 +295,7 @@ class DynamicClustering:
         else:
             c = Cluster(cluster_id=self._next_id, center=center)
             c.last_broadcast_center = center
+        c.ensure_snapshot_ring(self.snapshot_ring)
         self.clusters[self._next_id] = c
         self._next_id += 1
         return c
@@ -239,6 +310,7 @@ class DynamicClustering:
         else:
             c = Cluster(cluster_id=cid, center=center)
             c.last_broadcast_center = bcast_center
+        c.ensure_snapshot_ring(self.snapshot_ring)
         self.clusters[cid] = c
         return c
 

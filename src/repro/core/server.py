@@ -103,6 +103,10 @@ class EchoPFLServer:
         # the per-client anchor/residual rows ride this server's checkpoints
         self.uplink_codec = None
         self._pending_uplink_state: tuple | None = None
+        # optional ingest guard (REPRO_GUARD): attached by the simulator.
+        # None (the default) keeps every guard hook inert — the ingest
+        # launches compile without stats and no snapshot rings allocate.
+        self.guard = None
         self.local_train_fn = local_train_fn
         self.enable_clustering = enable_clustering
         self.enable_broadcast = enable_broadcast
@@ -139,6 +143,21 @@ class EchoPFLServer:
         if codec is not None and self._pending_uplink_state is not None:
             codec.load_state(*self._pending_uplink_state)
             self._pending_uplink_state = None
+
+    def attach_guard(self, guard) -> None:
+        """Adopt the simulator's ingest guard
+        (:class:`~repro.fl.guard.IngestGuard`): enables the post-blend
+        center-norm check (late poison detection) and equips every
+        cluster — present and future — with a last-known-good snapshot
+        ring so a detection can roll the center back and re-broadcast.
+        The retrofit loop covers clusters restored from a checkpoint
+        before the guard attached (kill + restore under chaos)."""
+        self.guard = guard
+        if guard is None:
+            return
+        self.clustering.snapshot_ring = guard.cfg.snapshot_ring
+        for c in self.clustering.clusters.values():
+            c.ensure_snapshot_ring(guard.cfg.snapshot_ring)
 
     def _predictor(self, cluster_id: int) -> BroadcastPredictor:
         if cluster_id not in self.predictors:
@@ -207,6 +226,19 @@ class EchoPFLServer:
             c = self.clustering.clusters[cid]
             return c.center if plane is None else c.center_vec
         branch.push(client_id, merge_fn, f"upload from {client_id} (staleness {staleness})")
+
+        # 3b. late poison detection (guard only): a non-finite or
+        # MAD-blown post-blend center norm vetoes the blend — roll back
+        # to the last-known-good snapshot and re-broadcast. The corrupt
+        # blend never feeds the predictor, and the uploader learns the
+        # restored center through the recovery broadcast.
+        if self.guard is not None and not self.guard.center_ok(
+            cid, self._center_norm(cluster)
+        ):
+            out.extend(self._rollback_center(cluster, branch, client_id))
+            if self._uploads % self.refine_every == 0:
+                out.extend(self._refine())
+            return out
 
         # 4. Top-K change record + online fine-tune on the ground-truth
         #    label for the previous decision (Eq. 4)
@@ -350,15 +382,25 @@ class EchoPFLServer:
             zpad = jnp.zeros((Cp - Cn, C0.shape[1]), C0.dtype)
             C0 = jnp.concatenate([C0, zpad])
             B0 = jnp.concatenate([B0, zpad])
-        cids_d, blended_d, change_d, gb_d, ga_d = K.ingest_chain(
+        guard = self.guard
+        res = K.ingest_chain(
             U, C0, B0, prev_idx, forced_idx, valid,
-            beta=cl.mix_rate, num_centers=Cn,
+            beta=cl.mix_rate, num_centers=Cn, with_stats=guard is not None,
         )
         # ONE host sync for the whole segment (stats + blended rows: the
-        # per-upload center writes re-enter the plane as staged host rows)
-        cids_np, change_np, gb_np, ga_np, blended = jax.device_get(
-            (cids_d[:S], change_d[:S], gb_d[:S], ga_d[:S], blended_d[:S])
-        )
+        # per-upload center writes re-enter the plane as staged host rows).
+        # The guard's post-blend center norms ride the same launch and sync.
+        if guard is not None:
+            cids_d, blended_d, change_d, gb_d, ga_d, cn_d = res
+            cids_np, change_np, gb_np, ga_np, cnorm_np, blended = jax.device_get(
+                (cids_d[:S], change_d[:S], gb_d[:S], ga_d[:S], cn_d[:S], blended_d[:S])
+            )
+        else:
+            cids_d, blended_d, change_d, gb_d, ga_d = res
+            cids_np, change_np, gb_np, ga_np, blended = jax.device_get(
+                (cids_d[:S], change_d[:S], gb_d[:S], ga_d[:S], blended_d[:S])
+            )
+            cnorm_np = None
         blended = np.asarray(blended)
         blended.flags.writeable = False  # unicast payloads are views of this
 
@@ -375,12 +417,24 @@ class EchoPFLServer:
             # fused chain launch never crosses it
             until_refine = self.refine_every - (self._uploads % self.refine_every)
             j1 = min(S, j0 + until_refine)
+            # guard pre-walk: consume the fused launch's post-blend center
+            # norms in step order BEFORE planning predictor work — on a
+            # clean window this records exactly what per-step checks would
+            # (all-accept, plan untouched); a detection at step f voids the
+            # speculative launch from f on, so the window falls back to the
+            # serial predictor path and the replay aborts right after f
+            guard_fail = None
+            if cnorm_np is not None:
+                for jj in range(j0, j1):
+                    if not guard.center_ok(step_cids[jj], float(cnorm_np[jj])):
+                        guard_fail = jj
+                        break
             plan = (
                 self._plan_predictor_window(
                     seg, j0, j1, step_cids, forced_idx,
                     change_np, gb_np, ga_np, blended, bcast_np, last_vec,
                 )
-                if batch_pred
+                if batch_pred and guard_fail is None
                 else None
             )
             for j in range(j0, j1):
@@ -415,6 +469,18 @@ class EchoPFLServer:
                     return cluster.center_vec
 
                 branch.push(client_id, merge_fn, f"upload from {client_id} (staleness {staleness})")
+
+                if j == guard_fail:
+                    # the carried center matrix is corrupt from this step
+                    # on: roll back, hand the remainder back for a relaunch
+                    # from the restored live state (same abort discipline as
+                    # a refine that invalidates the speculative launch)
+                    msgs.extend(self._rollback_center(cluster, branch, client_id))
+                    if self._uploads % self.refine_every == 0:
+                        msgs.extend(self._refine())
+                    out.append(msgs)
+                    cl._pending = None
+                    return out, j + 1
 
                 if pred is not None:
                     change = float(change_np[j])
@@ -742,6 +808,40 @@ class EchoPFLServer:
         }
         return _PredictorPlan(wants=wants, new_params=new_params)
 
+    def _center_norm(self, cluster) -> float:
+        """Post-blend center L1 norm for the guard's late check (per-event
+        path: one host read per upload — the coalesced path gets the same
+        scalar from the fused ``ingest_chain`` stats instead)."""
+        if self.clustering.plane is None:
+            return float(np.abs(np.asarray(tree_flat_vector(cluster.center))).sum())
+        return float(np.abs(np.asarray(cluster.center_vec)).sum())
+
+    def _rollback_center(self, cluster, branch, client_id) -> list[Downlink]:
+        """Late detection fired: restore the newest finite last-known-good
+        center (snapshot ring, then the broadcast anchor), record the
+        recovery on the CI branch, and re-broadcast on demand — the
+        paper-native recovery path (a broadcast with staleness accounting,
+        not a new protocol). Every member, including the uploader whose
+        blend was vetoed, re-syncs to the restored center."""
+        cid = cluster.cluster_id
+        if not cluster.rollback():
+            # every recorded state is itself corrupt — nothing to restore;
+            # the ledger still counts the detection
+            self.guard.note_rollback()
+            self.events.append({"kind": "rollback", "cluster": cid, "restored": False})
+            return []
+        self.guard.note_rollback()
+
+        def merge_fn(head):
+            cluster.version += 1
+            return (
+                cluster.center if self.clustering.plane is None else cluster.center_vec
+            )
+
+        branch.push(client_id, merge_fn, f"center rollback after poisoned blend from {client_id}")
+        self.events.append({"kind": "rollback", "cluster": cid, "restored": True})
+        return self._broadcast(cluster)
+
     def _broadcast(self, cluster, exclude: set = frozenset()) -> list[Downlink]:
         cluster.snapshot_broadcast()  # row copy in plane mode
         cluster.last_broadcast_version = cluster.version
@@ -1002,6 +1102,10 @@ class EchoPFLServer:
         reclaimed: list[int] = []
         for client_id in client_ids:
             touched = False
+            if self.uplink_codec is not None:
+                # dead clients never upload again: their codec anchor (+ EF
+                # residual) rows go back to the codec plane's free list
+                self.uplink_codec.release_client(client_id)
             row = self._upload_rows.pop(client_id, None)
             if row is not None:
                 cl.plane.free(row)

@@ -61,6 +61,19 @@ Knobs (all read by :func:`default_fault_config`):
 ``REPRO_FAULT_DUP``           P(duplicate delivery) per upload (0.05)
 ``REPRO_FAULT_REORDER``       P(extra delay) per downlink (0.05)
 ``REPRO_FAULT_POLICY``        ``retry`` (default) or ``drop``
+``REPRO_FAULT_POISON_NAN``    P(delivered upload turns partly NaN) (0.0)
+``REPRO_FAULT_POISON_SCALE``  P(delivered upload magnitude-blown) (0.0)
+``REPRO_FAULT_POISON_SIGN``   P(delivered upload sign-flipped) (0.0)
+``REPRO_FAULT_POISON_FACTOR`` scale blowup factor (default 1e3)
+
+Value-level poison (the ``POISON`` knobs) corrupts the *post-codec*
+upload delta after transport succeeds — the model for bitflips, broken
+quantizers, and adversarial clients rather than lost packets. One draw
+per delivered upload partitions a single uniform across the three
+corruption kinds, so the schedule stays a pure per-``(kind, cid,
+counter)`` function and the per-event/coalesced loops and loop/fleet
+backends poison the identical uploads. The defense layer that catches
+these lives in :mod:`repro.fl.guard` (``REPRO_GUARD=on``).
 """
 from __future__ import annotations
 
@@ -76,6 +89,7 @@ _K_CRASH = 1
 _K_UPLOAD = 2
 _K_DUP = 3
 _K_REORDER = 4
+_K_POISON = 5
 
 
 def _env_float(name: str, default: float) -> float:
@@ -110,12 +124,35 @@ class FaultConfig:
     reorder_max_delay: float = 60.0
     dup_max_delay: float = 30.0
     policy: str = "retry"  # retry | drop (drop-the-straggler baseline)
+    poison_nan_rate: float = 0.0  # per delivered upload
+    poison_scale_rate: float = 0.0
+    poison_sign_rate: float = 0.0
+    poison_scale_factor: float = 1e3
+    poison_nan_frac: float = 0.01  # fraction of coordinates NaN'd
 
     def __post_init__(self):
         if self.policy not in ("retry", "drop"):
             raise ValueError(f"REPRO_FAULT_POLICY must be retry|drop, got {self.policy!r}")
         if self.max_retries < 0:
             raise ValueError(f"max_retries must be >= 0, got {self.max_retries}")
+        for name in ("crash_rate", "death_rate", "loss_rate", "dup_rate",
+                     "reorder_rate", "poison_nan_rate", "poison_scale_rate",
+                     "poison_sign_rate", "poison_nan_frac"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be a probability in [0, 1], got {v!r}")
+        total = self.poison_nan_rate + self.poison_scale_rate + self.poison_sign_rate
+        if total > 1.0:
+            raise ValueError(
+                f"poison rates must sum to <= 1 (one corruption per upload), got {total!r}")
+        for name in ("crash_downtime", "backoff_base", "backoff_cap",
+                     "reorder_max_delay", "dup_max_delay"):
+            v = getattr(self, name)
+            if v < 0.0:
+                raise ValueError(f"{name} must be >= 0 seconds, got {v!r}")
+        if self.poison_scale_factor <= 0.0:
+            raise ValueError(
+                f"poison_scale_factor must be > 0, got {self.poison_scale_factor!r}")
 
 
 def default_fault_config() -> FaultConfig:
@@ -132,7 +169,42 @@ def default_fault_config() -> FaultConfig:
         dup_rate=_env_float("REPRO_FAULT_DUP", 0.05),
         reorder_rate=_env_float("REPRO_FAULT_REORDER", 0.05),
         policy=os.environ.get("REPRO_FAULT_POLICY", "retry").strip().lower() or "retry",
+        poison_nan_rate=_env_float("REPRO_FAULT_POISON_NAN", 0.0),
+        poison_scale_rate=_env_float("REPRO_FAULT_POISON_SCALE", 0.0),
+        poison_sign_rate=_env_float("REPRO_FAULT_POISON_SIGN", 0.0),
+        poison_scale_factor=_env_float("REPRO_FAULT_POISON_FACTOR", 1e3),
     )
+
+
+def apply_poison(params: Any, kind: str, u: float, cfg: FaultConfig) -> Any:
+    """Corrupt one delivered upload per the drawn poison ``(kind, u)``.
+
+    Always builds fresh host arrays — payload leaves may be frozen views
+    shared with the client's own model or a codec bank, and the fault
+    must corrupt only what crossed the wire. ``nan`` overwrites a
+    deterministic ``poison_nan_frac`` slice of each leaf starting at an
+    offset derived from ``u`` (the draw's second uniform), so the exact
+    corrupted coordinates are part of the seeded schedule; ``scale``
+    multiplies by ``poison_scale_factor``; ``sign`` negates."""
+    import jax
+
+    leaves, treedef = jax.tree_util.tree_flatten(params)
+    out = []
+    for x in leaves:
+        a = np.array(x)
+        if kind == "sign":
+            a = -a
+        elif kind == "scale":
+            a = a * a.dtype.type(cfg.poison_scale_factor)
+        else:  # nan
+            flat = a.reshape(-1)
+            n = flat.size
+            if n:
+                cnt = max(1, int(round(cfg.poison_nan_frac * n)))
+                idx = (int(u * n) + np.arange(cnt)) % n
+                flat[idx] = np.nan
+        out.append(a)
+    return jax.tree_util.tree_unflatten(treedef, out)
 
 
 @dataclasses.dataclass
@@ -214,6 +286,9 @@ class FaultInjector:
             "server_restarts": 0,
             "evicted_clients": 0,
             "reclaimed_clusters": 0,
+            "poison_nan": 0,
+            "poison_scale": 0,
+            "poison_sign": 0,
         }
 
     # ------------------------------------------------------------- draws
@@ -292,6 +367,30 @@ class FaultInjector:
             return 0.0
         self.ledger["reorders_injected"] += 1
         return float(1.0 + u[1] * (cfg.reorder_max_delay - 1.0))
+
+    def poison(self, cid: Any) -> tuple[str, float] | None:
+        """Consulted once per *delivered* upload (after transport wins,
+        before ingest). ``None``: the delta is clean. Otherwise
+        ``(kind, u)`` with ``kind`` in ``nan|scale|sign`` and ``u`` a
+        second uniform the corruptor may use (NaN coordinate offset).
+        One uniform is partitioned across the three rates so at most one
+        corruption applies per upload and adding a kind never perturbs
+        another kind's schedule."""
+        cfg = self.cfg
+        total = cfg.poison_nan_rate + cfg.poison_scale_rate + cfg.poison_sign_rate
+        if total <= 0.0:
+            return None
+        u = self._draw(_K_POISON, cid, 2)
+        if u[0] < cfg.poison_nan_rate:
+            kind = "nan"
+        elif u[0] < cfg.poison_nan_rate + cfg.poison_scale_rate:
+            kind = "scale"
+        elif u[0] < total:
+            kind = "sign"
+        else:
+            return None
+        self.ledger[f"poison_{kind}"] += 1
+        return kind, float(u[1])
 
     # ----------------------------------------------------------- restart
     def restart_due(self, uploads: int) -> bool:

@@ -147,7 +147,9 @@ class Simulator:
         coalesce_window: float | None = None,
         uplink: Any | None = None,
         faults: Any | None = None,
+        guard: Any | None = None,
     ):
+        from repro.fl.guard import IngestGuard, resolve_guard
         from repro.fl.uplink import resolve_uplink
 
         self.clients = {c.client_id: c for c in clients}
@@ -183,6 +185,11 @@ class Simulator:
         # trajectories bitwise-identical to the pre-fault code
         plan = resolve_faults(faults)
         self._faults = FaultInjector(plan) if plan is not None else None
+        # ingest guard (REPRO_GUARD / the guard= argument): None when off —
+        # every guard hook below is then dead, keeping guard-off trajectories
+        # bitwise-identical to the pre-guard code
+        gcfg = resolve_guard(guard)
+        self._guard = IngestGuard(gcfg) if gcfg is not None else None
         self._dead: set = set()  # permanently-dark clients (death / drop policy)
         self._useq: dict[Any, int] = {}  # per-client upload send sequence
         self._ingest_high: dict[Any, int] = {}  # highest useq ingested (dup fence)
@@ -230,6 +237,13 @@ class Simulator:
                 # checkpoints (a pre-attach load_state restores here too —
                 # including the fresh strategy a mid-run kill+restore builds)
                 attach(self._codec)
+        if self._guard is not None:
+            attach_g = getattr(strat, "attach_guard", None)
+            if attach_g is not None and getattr(strat, "guard", None) is not self._guard:
+                # the strategy adopts the guard: post-blend center checks
+                # ride the fused ingest stats and every cluster grows a
+                # last-known-good snapshot ring for rollback
+                attach_g(self._guard)
         current = getattr(strat, "feedback_batch_fn", "missing")
         fleet_hook = current is not None and current != "missing" and getattr(
             current, "_fleet_hook", False
@@ -316,6 +330,15 @@ class Simulator:
         if not delivered:  # drop policy hit the retry cap: straggler leaves
             self._retire_client(cid, "dropped")
             return
+        pz = self._faults.poison(cid)
+        if pz is not None:
+            # value-level fault: the bytes crossed the wire fine, the
+            # *values* arrive corrupt (bitflip / broken quantizer /
+            # adversarial client). Both the original delivery and any
+            # duplicate carry the same corrupted payload.
+            from repro.fl.faults import apply_poison
+
+            up_params = apply_poison(up_params, pz[0], pz[1], self._faults.cfg)
         useq = self._useq[cid] = self._useq.get(cid, 0) + 1
         push(t + delay, "upload_done", (cid, up_params, base_version, useq))
         dup = self._faults.duplicate(cid)
@@ -333,6 +356,25 @@ class Simulator:
         dl._fseq = self._dl_seq[dl.client_id] = self._dl_seq.get(dl.client_id, -1) + 1
         push(t_send + dur + self._faults.reorder(dl.client_id), "downlink", dl)
 
+    def _guard_check(self, cid, params) -> str:
+        """Score ONE delivered upload against the ingest guard, BEFORE the
+        strategy sees it. The cluster key is the client's current home (-1
+        pre-assignment); the L1 distance stat is measured against that
+        cluster's center — the discriminator that catches sign-flip poison,
+        whose L2 norm is unchanged by construction. Rejected uploads never
+        reach ``handle_upload``: aggregation, feedback and predictor
+        learning are all skipped for free (bytes were billed at send
+        time — the wire doesn't know the values are garbage)."""
+        guard = self._guard
+        cl = getattr(self.strategy, "clustering", None)
+        home = cl.assignment.get(cid) if cl is not None else None
+        if home is not None and home in cl.clusters:
+            key, center = home, cl.clusters[home].center
+        else:
+            key, center = -1, None
+        finite, l2, dist = guard.upload_stats(params, center)
+        return guard.check_upload(cid, key, finite, l2, dist)
+
     def _retire_client(self, cid, kind: str) -> None:
         """Remove a permanently-dark client from the protocol: the server
         evicts it (freeing plane rows, reclaiming all-dark clusters) and
@@ -341,14 +383,16 @@ class Simulator:
         if cid in self._dead:
             return
         self._dead.add(cid)
-        led = self._faults.ledger
-        if kind == "dropped":
+        # the guard can retire clients without a fault injector in play
+        led = self._faults.ledger if self._faults is not None else None
+        if led is not None and kind == "dropped":
             led["dropped_clients"] += 1
         evict = getattr(self.strategy, "evict_clients", None)
         if evict is not None:
             res = evict([cid])
-            led["evicted_clients"] += len(res["evicted"])
-            led["reclaimed_clusters"] += len(res["reclaimed"])
+            if led is not None:
+                led["evicted_clients"] += len(res["evicted"])
+                led["reclaimed_clusters"] += len(res["reclaimed"])
 
     def _server_kill_restore(self) -> None:
         """Kill the live strategy mid-run and restore a fresh instance from
@@ -523,6 +567,15 @@ class Simulator:
                         self._faults.ledger["dups_absorbed"] += 1
                         continue
                     self._ingest_high[cid] = useq
+                if self._guard is not None and self._guard_check(cid, params) != "accept":
+                    # quarantined at ingest: the strategy never sees the
+                    # payload; the client (unless escalated to eviction)
+                    # keeps training from its own current model
+                    if self._guard.should_evict(cid):
+                        self._retire_client(cid, "guard")
+                    else:
+                        push(t + self.clients[cid].compute_time(), "upload_start", cid)
+                    continue
                 uploads += 1
                 c = self.clients[cid]
                 downlinks = strat.handle_upload(cid, params, base_version, c.data.n, t)
@@ -564,6 +617,8 @@ class Simulator:
             extra["churn_delays"] = self.churn_delays
         if self._faults is not None:
             extra["faults"] = self._faults.ledger_snapshot()
+        if self._guard is not None:
+            extra["guard"] = self._guard.ledger_snapshot()
         return self._report(t, extra)
 
     # ------------------------------------------------- coalesced async run
@@ -632,6 +687,18 @@ class Simulator:
                         self._faults.ledger["dups_absorbed"] += 1
                         return "dup"
                     self._ingest_high[pn[0]] = pn[3]
+                if self._guard is not None:
+                    # guard verdicts, like the dup fence, land at collection
+                    # time in global event order — the per-event loop decides
+                    # at pop time, which is this same order. An evicted
+                    # client never resumes, so (like a fatal crash) it must
+                    # not draw a compute time; a rejected-but-alive client
+                    # draws exactly one, for its rescheduled next round.
+                    if self._guard_check(pn[0], pn[1]) != "accept":
+                        if self._guard.should_evict(pn[0]):
+                            self._retire_client(pn[0], "guard")
+                            return "evicted"
+                        return ("rejected", self.clients[pn[0]].compute_time())
                 return self.clients[pn[0]].compute_time()
             return None
 
@@ -665,7 +732,10 @@ class Simulator:
             buckets[kind].append((t0, payload, s0))
             limit = t0 + window
             cap = max_uploads - uploads if max_uploads else None
-            ud_seen = 1 if kind == "upload_done" and s0 != "dup" else 0
+            # the cap counts ACCEPTED ingests only: dup-fenced, guard-rejected
+            # and guard-evicted arrivals never reach the server (a pre-drawn
+            # float compute time marks an arrival that will actually ingest)
+            ud_seen = 1 if kind == "upload_done" and isinstance(s0, float) else 0
             while events and (cap is None or ud_seen < cap):
                 tn, _, kn, pn = events[0]
                 if kn == "tick" or tn >= limit or tn >= next_eval or tn > max_time:
@@ -674,7 +744,7 @@ class Simulator:
                 sn = stash(tn, kn, pn)
                 buckets[kn].append((tn, pn, sn))
                 t = tn
-                ud_seen += kn == "upload_done" and sn != "dup"
+                ud_seen += kn == "upload_done" and isinstance(sn, float)
             for kn, group in buckets.items():
                 if group:
                     self.coalesced_groups.setdefault(kn, []).append(len(group))
@@ -695,6 +765,8 @@ class Simulator:
             extra["churn_delays"] = self.churn_delays
         if self._faults is not None:
             extra["faults"] = self._faults.ledger_snapshot()
+        if self._guard is not None:
+            extra["guard"] = self._guard.ledger_snapshot()
         return self._report(t, extra)
 
     def _coalesced_upload_starts(self, group, push) -> None:
@@ -742,21 +814,32 @@ class Simulator:
         """One batched server ingest for a window of arrivals; downlinks
         and the next local rounds are billed/scheduled per event, in order."""
         strat = self.strategy
-        # duplicate deliveries were fenced out at collection time (stash
-        # marked them "dup"): they never reach the server, never schedule
-        # a next round, and never drew a compute time
-        live = [e for e in group if e[2] != "dup"]
+        # duplicate, guard-rejected and guard-evicted deliveries were fenced
+        # out at collection time: they never reach the server and never
+        # ingest. A rejected-but-alive client still gets its next round
+        # scheduled (its compute time rode the bucket entry as a tuple);
+        # dups and evictions schedule nothing and drew nothing.
+        live = [e for e in group if isinstance(e[2], float)]
         batch = [
             (cid, params, bv, self.clients[cid].data.n, ti)
             for ti, (cid, params, bv, _useq), _ in live
         ]
-        if not batch:
-            return 0
-        if len(batch) > 1 and hasattr(strat, "handle_uploads"):
-            downlinks_per = strat.handle_uploads(batch)
+        if batch:
+            if len(batch) > 1 and hasattr(strat, "handle_uploads"):
+                downlinks_per = strat.handle_uploads(batch)
+            else:
+                downlinks_per = [strat.handle_upload(*b) for b in batch]
         else:
-            downlinks_per = [strat.handle_upload(*b) for b in batch]
-        for (ti, (cid, _params, _bv, _useq), next_compute), dls in zip(live, downlinks_per):
+            downlinks_per = []
+        dls_iter = iter(downlinks_per)
+        for ti, (cid, _params, _bv, _useq), sn in group:
+            if sn == "dup" or sn == "evicted":
+                continue
+            if isinstance(sn, tuple):  # guard-rejected: reschedule only
+                push(ti + sn[1], "upload_start", cid)
+                continue
+            next_compute = sn
+            dls = next(dls_iter)
             if self._faults is not None:
                 # fault mode bills and ships each downlink individually so
                 # sequence numbers and injected reorder delays land exactly

@@ -171,6 +171,7 @@ class UplinkCodec:
         self._anchor_row = self.plane.alloc_many(K)
         self._resid_row = self.plane.alloc_many(K) if self.mode == "topk" else None
         self._seeded = [False] * K
+        self._released = [False] * K  # evicted clients: rows returned to the plane
         self._install_memo: tuple[Any, Any] = (None, None)  # (params obj, flat vec)
         self._zero_vec = jnp.zeros((self.dim,), self.plane.dtype)
         self.launches = 0  # fused encode launches issued (bench introspection)
@@ -205,7 +206,7 @@ class UplinkCodec:
         rows, vecs = [], []
         for cid, params in models.items():
             i = self.index.get(cid)
-            if i is None or self._seeded[i]:
+            if i is None or self._seeded[i] or self._released[i]:
                 continue
             key = id(params)
             vec = by_obj.get(key)
@@ -233,7 +234,7 @@ class UplinkCodec:
         downlinks. A broadcast fans ONE object at many clients, so
         consecutive installs of the same pytree share a single flatten."""
         i = self.index.get(cid)
-        if i is None:
+        if i is None or self._released[i]:
             return
         obj, vec = self._install_memo
         if obj is not params:
@@ -244,7 +245,37 @@ class UplinkCodec:
             self.plane.write(self._resid_row[i], self._zero_vec)
         self._seeded[i] = True
 
+    def release_client(self, cid) -> None:
+        """Free a dead/evicted client's codec rows (anchor + EF residual)
+        back to the plane. ``evict_clients`` calls this alongside the
+        server-side reclamation — without it every death leaked
+        ``1 + (mode == topk)`` rows of codec state for the rest of the
+        run. Idempotent; released clients drop out of seeding, installs,
+        checkpoints, and the encode bank gather."""
+        i = self.index.get(cid)
+        if i is None or self._released[i]:
+            return
+        self.plane.free(self._anchor_row[i])
+        if self._resid_row is not None:
+            self.plane.free(self._resid_row[i])
+        self._released[i] = True
+        self._seeded[i] = False
+
     # ------------------------------------------------------------- encoding
+    def _bank_rows(self, rows: Sequence[int]) -> tuple[int, ...]:
+        """Bank-gather row tuple with released clients' entries redirected
+        to a live stand-in row: a released client never uploads again, so
+        its entry is never selected — the stand-in only keeps the gather
+        off freed (re-allocatable) plane rows while the bank keeps its
+        stable shape and cache key."""
+        if not any(self._released):
+            return tuple(rows)
+        stand_in = next(
+            (r for r, dead in zip(rows, self._released) if not dead), rows[0]
+        )
+        return tuple(
+            stand_in if dead else r for r, dead in zip(rows, self._released)
+        )
     def encode_vecs(self, cids: Sequence[Any], mat) -> np.ndarray:
         """ONE fused launch: compress ``mat[i]`` (client ``cids[i]``'s
         trained flat model) against its anchor, advance anchor/residual
@@ -255,6 +286,8 @@ class UplinkCodec:
         cache stays O(log fleet)."""
         idx = [self.index[c] for c in cids]
         for c, i in zip(cids, idx):
+            if self._released[i]:
+                raise ValueError(f"client {c}'s uplink codec rows were released")
             if not self._seeded[i]:
                 raise ValueError(f"client {c} has no uplink anchor seeded")
         B = len(idx)
@@ -263,10 +296,10 @@ class UplinkCodec:
         mat = jnp.asarray(mat, self.plane.dtype)
         if P != B:
             mat = jnp.concatenate([mat, jnp.broadcast_to(mat[:1], (P - B, mat.shape[1]))])
-        bank_a = self.plane.rows(tuple(self._anchor_row))
+        bank_a = self.plane.rows(self._bank_rows(self._anchor_row))
         self.launches += 1
         if self.mode == "topk":
-            bank_r = self.plane.rows(tuple(self._resid_row))
+            bank_r = self.plane.rows(self._bank_rows(self._resid_row))
             rec, new_r = _encode_topk(bank_a, bank_r, sel, mat, k=self.k)
             rec = rec[:B]
             rows = [self._resid_row[i] for i in idx] + [self._anchor_row[i] for i in idx]
@@ -330,17 +363,18 @@ class UplinkCodec:
                 f"this run is {self.mode!r}"
             )
         K = len(self.ids)
-        zeros = jnp.zeros((K, self.dim), self.plane.dtype)
-        self.plane.write_rows(list(self._anchor_row), zeros)
+        live = [i for i in range(K) if not self._released[i]]
+        zeros = jnp.zeros((len(live), self.dim), self.plane.dtype)
+        self.plane.write_rows([self._anchor_row[i] for i in live], zeros)
         if self._resid_row is not None:
-            self.plane.write_rows(list(self._resid_row), zeros)
+            self.plane.write_rows([self._resid_row[i] for i in live], zeros)
         self._seeded = [False] * K
 
         def restore(section: dict, row_of: list[int]) -> None:
             rows, vecs = [], []
             for s, p in section.items():
                 i = self.index.get(client_id_type(s))
-                if i is None:  # client not simulated in this run
+                if i is None or self._released[i]:  # not simulated / evicted
                     continue
                 rows.append(row_of[i])
                 vecs.append(self.spec.flatten(p))
@@ -350,7 +384,7 @@ class UplinkCodec:
         restore(tree.get("anchors") or {}, self._anchor_row)
         for s in (tree.get("anchors") or {}):
             i = self.index.get(client_id_type(s))
-            if i is not None:
+            if i is not None and not self._released[i]:
                 self._seeded[i] = True
         if self.mode == "topk":
             restore(tree.get("residuals") or {}, self._resid_row)

@@ -442,8 +442,9 @@ def assign_and_lerp(u, centers, beta, *, mesh=None, axis="plane", dim_axis="mode
     return _assign_lerp_single(u, centers, beta)
 
 
-@functools.partial(jax.jit, static_argnames=("beta", "switch_margin"))
-def _ingest_chain_jit(U, centers, bcast, num_centers, prev_idx, forced_idx, valid, beta, switch_margin):
+@functools.partial(jax.jit, static_argnames=("beta", "switch_margin", "with_stats"))
+def _ingest_chain_jit(U, centers, bcast, num_centers, prev_idx, forced_idx, valid, beta, switch_margin,
+                      with_stats=False):
     C = centers.shape[0]
     # padded center rows (C is pow2-padded so the jit cache does not grow a
     # new entry every time a cluster expands or merges) can never win: the
@@ -485,14 +486,20 @@ def _ingest_chain_jit(U, centers, bcast, num_centers, prev_idx, forced_idx, vali
         gap_before = jnp.sum(jnp.abs(c_old - b_row))
         gap_after = jnp.sum(jnp.abs(c_new - b_row))
         cmat = jnp.where(ok, cmat.at[cid].set(c_new), cmat)
-        return cmat, (cid, c_new, change, gap_before, gap_after)
+        out = (cid, c_new, change, gap_before, gap_after)
+        if with_stats:
+            # guard telemetry riding the same launch/sync: the post-blend
+            # center L1 norm (NaN/Inf propagate through the sum, so one
+            # scalar covers both the finite gate and the blowup bound)
+            out = out + (jnp.sum(jnp.abs(c_new)),)
+        return cmat, out
 
     _, outs = jax.lax.scan(step, centers.astype(jnp.float32), (U, prev_idx, forced_idx, valid))
     return outs
 
 
 def ingest_chain(U, centers, bcast, prev_idx, forced_idx, valid, *, beta,
-                 switch_margin=0.1, num_centers=None):
+                 switch_margin=0.1, num_centers=None, with_stats=False):
     """Sequential-equivalent batched server ingest: one launch scanning the
     fused assign+lerp over a window of concurrently-arrived uploads.
 
@@ -512,7 +519,11 @@ def ingest_chain(U, centers, bcast, prev_idx, forced_idx, valid, *, beta,
         intra-window broadcast, which moves the anchor).
 
     Returns per-step ``(cid (S,), blended (S, dim), change (S,),
-    gap_before (S,), gap_after (S,))``; rows where ``valid`` is False leave
+    gap_before (S,), gap_after (S,))`` — plus the post-blend center L1
+    norm ``cnorm (S,)`` when ``with_stats`` (the ingest guard's late
+    NaN/blowup detector, riding the launch and sync the caller already
+    pays; ``with_stats=False`` compiles the exact pre-guard program).
+    Rows where ``valid`` is False leave
     the carried centers untouched and their outputs are ignored. ``U`` must
     be pre-padded by the caller (pad rows invalid), and ``centers``/
     ``bcast`` may carry zero-padding rows above ``num_centers`` (a traced
@@ -523,7 +534,7 @@ def ingest_chain(U, centers, bcast, prev_idx, forced_idx, valid, *, beta,
         jnp.asarray(U), centers, bcast,
         jnp.int32(C if num_centers is None else num_centers),
         jnp.asarray(prev_idx, jnp.int32), jnp.asarray(forced_idx, jnp.int32),
-        jnp.asarray(valid, jnp.bool_), beta, switch_margin,
+        jnp.asarray(valid, jnp.bool_), beta, switch_margin, with_stats,
     )
 
 
